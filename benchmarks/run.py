@@ -1,0 +1,279 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (brief contract) and writes the
+full curve data to results/benchmarks/*.csv so EXPERIMENTS.md can quote
+any point. Analytic figures time the accountant; system rows time the
+actual jitted server paths on this host (CPU — TPU numbers come from the
+dry-run roofline, EXPERIMENTS.md §Roofline).
+
+Run: PYTHONPATH=src python -m benchmarks.run
+"""
+
+from __future__ import annotations
+
+import csv
+import math
+import os
+import time
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import accounting as acc
+from repro.core import chor, make_scheme, sparse
+from repro.db import make_synthetic_store
+from repro.kernels import ref
+from repro.serve import PIRServingEngine
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "benchmarks")
+
+Row = Tuple[str, float, str]
+
+
+def _time_us(fn: Callable, *args, reps: int = 5, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def _write_csv(name: str, header: List[str], rows: List) -> None:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, f"{name}.csv"), "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+
+
+# --------------------------------------------------------------- Figure 1
+def fig1_direct() -> List[Row]:
+    """Direct Requests: ε vs p for d=100, n=1e6, d_a ∈ {d−1, d/2, d/10}."""
+    n, d = 10**6, 100
+    rows, t0 = [], time.perf_counter()
+    for d_a in (99, 50, 10):
+        for p in np.unique(np.logspace(math.log10(d), 6, 60).astype(int)):
+            p = int(p - (p % d)) or d
+            if p <= 1:
+                continue
+            rows.append((d_a, p, acc.epsilon_direct(n, d, d_a, min(p, n))))
+    us = (time.perf_counter() - t0) * 1e6 / len(rows)
+    _write_csv("fig1_direct", ["d_a", "p", "epsilon"], rows)
+    ref_pt = acc.epsilon_direct(n, d, 99, 1000)
+    return [("fig1_direct_eps_vs_p", us, f"eps(d_a=99;p=1000)={ref_pt:.2f}")]
+
+
+# --------------------------------------------------------------- Figure 2
+def fig2_as_direct() -> List[Row]:
+    """AS-Bundled Direct: ε vs p, u=1e3."""
+    n, d, u = 10**6, 100, 1000
+    rows, t0 = [], time.perf_counter()
+    for d_a in (99, 50, 10):
+        for p in np.unique(np.logspace(math.log10(d), 6, 60).astype(int)):
+            p = int(p - (p % d)) or d
+            if p <= 1:
+                continue
+            rows.append((d_a, p, acc.epsilon_as_direct(n, d, d_a, min(p, n), u)))
+    us = (time.perf_counter() - t0) * 1e6 / len(rows)
+    _write_csv("fig2_as_direct", ["d_a", "p", "epsilon"], rows)
+    ref_pt = acc.epsilon_as_direct(n, d, 99, 1000, u)
+    return [("fig2_as_direct_eps_vs_p", us, f"eps(d_a=99;p=1000;u=1e3)={ref_pt:.2f}")]
+
+
+# --------------------------------------------------------------- Figure 3
+def fig3_sparse() -> List[Row]:
+    """Sparse-PIR: ε vs θ for d=100."""
+    d = 100
+    rows, t0 = [], time.perf_counter()
+    for d_a in (99, 90, 50):
+        for theta in np.linspace(0.005, 0.5, 100):
+            rows.append((d_a, theta, acc.epsilon_sparse(theta, d, d_a)))
+    us = (time.perf_counter() - t0) * 1e6 / len(rows)
+    _write_csv("fig3_sparse", ["d_a", "theta", "epsilon"], rows)
+    ref_pt = acc.epsilon_sparse(0.25, d, 99)
+    return [("fig3_sparse_eps_vs_theta", us, f"eps(d_a=99;th=.25)={ref_pt:.2f}")]
+
+
+# --------------------------------------------------------------- Figure 4
+def fig4_as_sparse() -> List[Row]:
+    """AS-Sparse-PIR: ε vs θ for d=100, u=1e3."""
+    d, u = 100, 1000
+    rows, t0 = [], time.perf_counter()
+    for d_a in (99, 90, 50):
+        for theta in np.linspace(0.005, 0.5, 100):
+            rows.append((d_a, theta, acc.epsilon_as_sparse(theta, d, d_a, u)))
+    us = (time.perf_counter() - t0) * 1e6 / len(rows)
+    _write_csv("fig4_as_sparse", ["d_a", "theta", "epsilon"], rows)
+    ref_pt = acc.epsilon_as_sparse(0.25, d, 99, u)
+    return [("fig4_as_sparse_eps_vs_theta", us,
+             f"eps(d_a=99;th=.25;u=1e3)={ref_pt:.3f}")]
+
+
+# --------------------------------------------------------------- Figure 5
+def fig5_subset() -> List[Row]:
+    """Subset-PIR: δ vs t for d=100."""
+    d = 100
+    rows, t0 = [], time.perf_counter()
+    for d_a in (99, 50, 10):
+        for t in range(1, d + 1):
+            rows.append((d_a, t, acc.delta_subset(d, d_a, t)))
+    us = (time.perf_counter() - t0) * 1e6 / len(rows)
+    _write_csv("fig5_subset", ["d_a", "t", "delta"], rows)
+    return [("fig5_subset_delta_vs_t", us,
+             f"delta(d_a=50;t=10)={acc.delta_subset(d, 50, 10):.2e}")]
+
+
+# --------------------------------------------------------------- Figure 6
+def fig6_frontier() -> List[Row]:
+    """Cost-privacy frontier: ε vs C_p and ε vs C_m for DR/SP/AS-DR/AS-SP
+    (d=100, d_a=50, n=1e6, u=1e3) — the paper's comparative evaluation."""
+    n, d, d_a, u = 10**6, 100, 50, 1000
+    rows, t0 = [], time.perf_counter()
+    for p in np.unique(np.logspace(2, 6, 50).astype(int)):
+        p = int(p - (p % d)) or d
+        if p <= 1:
+            continue
+        p = min(p, n)
+        c = acc.scheme_costs("direct", n=n, d=d, p=p)
+        rows.append(("direct", p, None, c["C_p"], c["C_m"],
+                     acc.epsilon_direct(n, d, d_a, p)))
+        rows.append(("as-direct", p, None, c["C_p"], c["C_m"],
+                     acc.epsilon_as_direct(n, d, d_a, p, u)))
+    for theta in np.linspace(0.005, 0.5, 50):
+        c = acc.scheme_costs("sparse", n=n, d=d, theta=theta)
+        rows.append(("sparse", None, theta, c["C_p"], c["C_m"],
+                     acc.epsilon_sparse(theta, d, d_a)))
+        rows.append(("as-sparse", None, theta, c["C_p"], c["C_m"],
+                     acc.epsilon_as_sparse(theta, d, d_a, u)))
+    us = (time.perf_counter() - t0) * 1e6 / len(rows)
+    _write_csv("fig6_frontier",
+               ["scheme", "p", "theta", "C_p", "C_m", "epsilon"], rows)
+    return [("fig6_cost_privacy_frontier", us, f"{len(rows)}pts")]
+
+
+# ---------------------------------------------------------------- Table 1
+def table1() -> List[Row]:
+    """Security & cost summary — analytic columns PLUS measured record
+    touches from actual query matrices (validates C_p empirically)."""
+    n, d, d_a, u = 4096, 8, 4, 1000
+    store = make_synthetic_store(n=n, record_bytes=64, seed=0)
+    key = jax.random.key(0)
+    q = jnp.arange(16)
+
+    rows = []
+    out: List[Row] = []
+
+    for name, kw, theta in (
+        ("chor", {}, None),
+        ("sparse", dict(theta=0.25), 0.25),
+    ):
+        sch = make_scheme(name, d=d, d_a=d_a, **kw)
+        if name == "chor":
+            masks = chor.query_masks(chor.gen_queries(key, n, d, q), n)
+        else:
+            masks = sparse.gen_query_matrix(key, n, d, theta, q)
+        touched = float(jnp.sum(masks)) / len(q)
+        analytic = sch.costs(n)["C_p"] / 2.0  # records touched (c_acc+c_prc=2)
+        us = _time_us(
+            jax.jit(lambda m: jax.vmap(
+                lambda mm: ref.xor_fold_ref(store.packed, mm))(m)),
+            masks,
+        )
+        rows.append((name, sch.epsilon(n), sch.delta(n), sch.costs(n)["C_m"],
+                     analytic, touched))
+        out.append((f"table1_{name}_server", us,
+                    f"touched={touched:.0f};analytic={analytic:.0f}"))
+
+    for name, kw in (
+        ("direct", dict(p=64)),
+        ("as-direct", dict(p=64, u=u)),
+        ("as-sparse", dict(theta=0.25, u=u)),
+        ("subset", dict(t=4)),
+    ):
+        sch = make_scheme(name, d=d, d_a=d_a, **kw)
+        c = sch.costs(n)
+        rows.append((name, sch.epsilon(n), sch.delta(n), c["C_m"],
+                     c["C_p"] / 2.0, None))
+
+    _write_csv(
+        "table1",
+        ["scheme", "epsilon", "delta", "C_m",
+         "records_touched_analytic", "records_touched_measured"],
+        rows,
+    )
+    return out
+
+
+# --------------------------------------------- server kernel throughput
+def server_paths() -> List[Row]:
+    """The three TPU server paths, timed on host XLA (correctness-scale);
+    derived column reports throughput. TPU projections: §Roofline."""
+    n, rb, qn = 8192, 128, 64
+    store = make_synthetic_store(n=n, record_bytes=rb, seed=1)
+    masks = (jax.random.uniform(jax.random.key(2), (qn, n)) < 0.25).astype(jnp.uint8)
+    planes = store.bitplanes()
+
+    out: List[Row] = []
+    fold = jax.jit(lambda m: ref.xor_fold_ref(store.packed, m))
+    us = _time_us(fold, masks)
+    out.append(("server_xor_fold", us,
+                f"Mrec/s={n * qn / us:.1f}"))
+
+    par = jax.jit(lambda m: ref.parity_matmul_ref(m, planes))
+    us = _time_us(par, masks)
+    gf = 2.0 * qn * n * rb * 8 / (us * 1e-6) / 1e9
+    out.append(("server_parity_matmul", us, f"GFLOPs={gf:.1f}"))
+
+    from repro.kernels.gather_xor import indices_from_mask
+
+    idx = indices_from_mask(masks, 3072)
+    gat = jax.jit(lambda i: ref.gather_xor_ref(store.packed, i))
+    us = _time_us(gat, idx)
+    out.append(("server_gather_xor", us,
+                f"touched/q={float((idx >= 0).sum()) / qn:.0f}"))
+    return out
+
+
+# ------------------------------------------------------ engine end-to-end
+def engine_throughput() -> List[Row]:
+    n, d, d_a = 4096, 6, 3
+    store = make_synthetic_store(n=n, record_bytes=64, seed=3)
+    out: List[Row] = []
+    for name, kw in (
+        ("sparse", dict(theta=0.25)),
+        ("chor", {}),
+        ("subset", dict(t=3)),
+        ("direct", dict(p=24)),
+    ):
+        eng = PIRServingEngine(store, make_scheme(name, d=d, d_a=d_a, **kw))
+        rng = np.random.default_rng(0)
+        for i in range(64):
+            eng.submit(f"c{i}", int(rng.integers(0, n)))
+        eng.flush()  # pays jit
+        for i in range(64):
+            eng.submit(f"c{i}", int(rng.integers(0, n)))
+        t0 = time.perf_counter()
+        eng.flush()
+        dt = time.perf_counter() - t0
+        out.append((f"engine_{name}", dt * 1e6 / 64, f"qps={64 / dt:.0f}"))
+    return out
+
+
+ALL = [
+    fig1_direct, fig2_as_direct, fig3_sparse, fig4_as_sparse, fig5_subset,
+    fig6_frontier, table1, server_paths, engine_throughput,
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for fn in ALL:
+        for name, us, derived in fn():
+            print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

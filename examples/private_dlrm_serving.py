@@ -1,0 +1,64 @@
+"""PIR-backed DLRM serving — the paper's technique wired into a model.
+
+The sparse-feature embedding lookup is an index→record retrieval against an
+operator-held table: exactly the PIR setting (DESIGN.md §4). Here a DLRM
+scores requests with its embedding lookups routed through Sparse-PIR; the
+outputs are BIT-EXACT equal to the plaintext model (XOR transports raw
+float bits), and the accountant prices each request.
+
+    PYTHONPATH=src python examples/private_dlrm_serving.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core import make_scheme
+from repro.core.accounting import PrivacyBudget
+from repro.core.schemes import Scheme
+from repro.data import pipeline as pipe
+from repro.db.store import RecordStore
+from repro.models import recsys as R
+
+cfg = get_arch("dlrm-rm2").reduced()
+params = R.dlrm_init(jax.random.key(0), cfg)
+batch_np = pipe.recsys_batch(cfg, batch=8, seed=1, step=0)
+batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+
+# ---- plaintext baseline ---------------------------------------------------
+plain_scores = R.dlrm_score(params, cfg, batch)
+
+# ---- PIR-backed lookup ------------------------------------------------------
+D, D_A, THETA = 4, 2, 0.25
+scheme = make_scheme("sparse", d=D, d_a=D_A, theta=THETA)
+budget = PrivacyBudget(epsilon_limit=1e6)
+_key = jax.random.key(42)
+
+
+def pir_lookup(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """Embedding gather via Sparse-PIR (bitcast-exact)."""
+    store = RecordStore.from_float_table(table)
+    flat = ids.reshape(-1)
+    budget.spend(flat.shape[0] * scheme.epsilon(table.shape[0]))
+    packed = scheme.retrieve(_key, store, flat)
+    rows = jax.lax.bitcast_convert_type(packed, jnp.float32)
+    return rows.reshape(*ids.shape, table.shape[1])
+
+
+pir_scores = R.dlrm_score(params, cfg, batch, lookup_fn=pir_lookup)
+
+exact = bool((np.asarray(pir_scores) == np.asarray(plain_scores)).all())
+vocab = cfg.n_sparse * cfg.vocab_per_field
+eps_q = scheme.epsilon(vocab) * cfg.n_sparse  # 26 lookups per request
+print(f"DLRM (reduced {cfg.n_sparse} tables × {cfg.vocab_per_field} rows)")
+print(f"plain  scores: {np.asarray(plain_scores)[:4].round(4)}")
+print(f"PIR    scores: {np.asarray(pir_scores)[:4].round(4)}")
+print(f"bit-exact: {exact}")
+assert exact
+print(f"\nscheme: Sparse-PIR theta={THETA}, d={D}, d_a={D_A}")
+print(f"eps per lookup  : {scheme.epsilon(vocab):.4f}")
+print(f"eps per request : {eps_q:.4f} ({cfg.n_sparse} field lookups)")
+print(f"records touched per server per lookup: {THETA * vocab:.0f} "
+      f"(Sparse-PIR) vs {vocab / 2:.0f} expected (Chor) of {vocab}")
+print(f"budget spent    : {budget.spent_epsilon:.2f}")

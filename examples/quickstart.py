@@ -1,0 +1,38 @@
+"""Quickstart: ε-private retrieval with every scheme in the paper.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import make_scheme
+from repro.db import make_synthetic_store
+
+store = make_synthetic_store(n=1024, record_bytes=64, seed=0)
+key = jax.random.key(0)
+wanted = jnp.array([7, 300, 1023])
+
+print(f"database: n={store.n} records × {store.record_bits // 8} B\n")
+print(f"{'scheme':<12} {'eps':>10} {'delta':>10} {'C_m':>8} {'C_p':>12}  exact?")
+for name, kw in [
+    ("chor", {}),
+    ("sparse", dict(theta=0.25)),
+    ("as-sparse", dict(theta=0.25, u=1000)),
+    ("direct", dict(p=64)),
+    ("as-direct", dict(p=64, u=1000)),
+    ("subset", dict(t=3)),
+]:
+    sch = make_scheme(name, d=8, d_a=4, **kw)
+    got = np.asarray(sch.retrieve(key, store, wanted))
+    want = np.asarray(store.packed)[np.asarray(wanted)]
+    ok = bool((got == want).all())
+    c = sch.costs(store.n)
+    print(
+        f"{name:<12} {sch.epsilon(store.n):>10.3g} {sch.delta(store.n):>10.3g} "
+        f"{c['C_m']:>8.0f} {c['C_p']:>12.0f}  {ok}"
+    )
+
+print("\nevery scheme reconstructed the exact records — the privacy/cost")
+print("trade-off (Table 1 of the paper) is the only thing that changed.")

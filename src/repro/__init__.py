@@ -1,0 +1,9 @@
+"""repro — "Lower-Cost ε-Private Information Retrieval" (Toledo, Danezis &
+Goldberg, PETS 2016) as a production-grade multi-pod JAX framework.
+
+Packages: core (the paper), db, kernels (Pallas TPU), models, dist, train,
+serve, data, configs (--arch registry), launch (mesh/dryrun/roofline/
+train/serve). See README.md, DESIGN.md, EXPERIMENTS.md.
+"""
+
+__version__ = "1.0.0"

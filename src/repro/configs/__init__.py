@@ -1,0 +1,37 @@
+"""Architecture registry: ``get_arch(arch_id)`` -> module with
+(CONFIG, SHAPES, reduced()). ``--arch <id>`` anywhere in the launch layer
+resolves through here."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Tuple
+
+ARCHS = {
+    # LM family
+    "smollm-135m": "repro.configs.smollm_135m",
+    "gemma2-2b": "repro.configs.gemma2_2b",
+    "mistral-nemo-12b": "repro.configs.mistral_nemo_12b",
+    "moonshot-v1-16b-a3b": "repro.configs.moonshot_v1_16b_a3b",
+    "kimi-k2-1t-a32b": "repro.configs.kimi_k2_1t_a32b",
+    # GNN
+    "gcn-cora": "repro.configs.gcn_cora",
+    # RecSys
+    "dien": "repro.configs.dien",
+    "fm": "repro.configs.fm",
+    "dlrm-rm2": "repro.configs.dlrm_rm2",
+    "bert4rec": "repro.configs.bert4rec",
+    # the paper's own workload
+    "pir-ct": "repro.configs.pir_ct",
+}
+
+
+def get_arch(arch_id: str):
+    """Returns the arch module (CONFIG, SHAPES, reduced())."""
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(ARCHS)}")
+    return importlib.import_module(ARCHS[arch_id])
+
+
+def list_archs() -> Tuple[str, ...]:
+    return tuple(ARCHS)

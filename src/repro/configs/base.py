@@ -1,0 +1,153 @@
+"""Config dataclasses for every architecture family + shape-cell specs.
+
+A "cell" in the dry-run / roofline matrix is (architecture × shape).
+Every assigned architecture module under repro.configs defines:
+
+    CONFIG  — the exact full-scale config from the brief
+    SHAPES  — its shape set (each a ShapeSpec)
+    reduced() — a smoke-test-sized config of the same family
+
+Model code takes these dataclasses; nothing here touches jax device state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+__all__ = ["LMConfig", "GNNConfig", "RecSysConfig", "PIRConfig", "ShapeSpec"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One input-shape cell. ``kind`` selects which step gets lowered:
+    train_step / prefill / decode (LM); gnn + recsys kinds per family."""
+
+    name: str
+    kind: str
+    params: Tuple[Tuple[str, int], ...]  # hashable dict
+
+    def p(self) -> Dict[str, int]:
+        return dict(self.params)
+
+    @staticmethod
+    def make(name: str, kind: str, **params: int) -> "ShapeSpec":
+        return ShapeSpec(name=name, kind=kind, params=tuple(sorted(params.items())))
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    # MoE
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # gemma-2 style features
+    local_global: bool = False        # odd layers local, even layers global
+    window: int = 4096
+    attn_softcap: float = 0.0
+    final_softcap: float = 0.0
+    # misc
+    rope_theta: float = 10000.0
+    dtype: str = "float32"
+    loss_chunk: int = 0               # 0 = unchunked xent
+    remat: bool = False
+    remat_policy: str = "nothing"     # nothing | dots (save matmul outputs)
+    # whether the arch is pure full attention (=> long_500k cell skipped)
+    full_attention_only: bool = True
+    # PIR integration (DESIGN.md §Arch-applicability)
+    private_vocab_lookup: bool = False
+
+    @property
+    def params_dense(self) -> int:
+        """Parameter count (for MODEL_FLOPS = 6·N·D roofline term)."""
+        attn = self.n_layers * self.d_model * self.head_dim * (
+            self.n_heads * 2 + self.n_kv_heads * 2
+        )
+        if self.moe:
+            mlp = self.n_layers * self.n_experts * 3 * self.d_model * self.d_ff
+            router = self.n_layers * self.d_model * self.n_experts
+            mlp += router
+        else:
+            mlp = self.n_layers * 3 * self.d_model * self.d_ff
+        embed = self.vocab * self.d_model  # tied
+        return attn + mlp + embed
+
+    @property
+    def params_active(self) -> int:
+        """Active params per token (MoE: top_k of n_experts)."""
+        if not self.moe:
+            return self.params_dense
+        attn = self.n_layers * self.d_model * self.head_dim * (
+            self.n_heads * 2 + self.n_kv_heads * 2
+        )
+        mlp = self.n_layers * (
+            self.top_k * 3 * self.d_model * self.d_ff
+            + self.d_model * self.n_experts
+        )
+        return attn + mlp + self.vocab * self.d_model
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    n_layers: int
+    d_hidden: int
+    n_classes: int
+    aggregator: str = "mean"
+    norm: str = "sym"
+    dtype: str = "float32"
+    private_feature_fetch: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class RecSysConfig:
+    name: str
+    model: str                        # dien | fm | dlrm | bert4rec
+    embed_dim: int
+    n_sparse: int = 0
+    n_dense: int = 0
+    vocab_per_field: int = 100_000
+    interaction: str = "dot"
+    # dlrm
+    bot_mlp: Tuple[int, ...] = ()
+    top_mlp: Tuple[int, ...] = ()
+    # dien
+    seq_len: int = 0
+    gru_dim: int = 0
+    mlp_dims: Tuple[int, ...] = ()
+    # bert4rec
+    n_blocks: int = 0
+    n_heads: int = 0
+    n_items: int = 0
+    dtype: str = "float32"
+    # PIR integration: route sparse lookups through a scheme
+    private_lookup_scheme: str = "plain"   # plain | chor | sparse | ...
+    private_lookup_theta: float = 0.25
+    private_lookup_d: int = 4
+    private_lookup_da: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class PIRConfig:
+    """The paper's own workload (Certificate Transparency reference)."""
+
+    name: str
+    n_records: int
+    record_bytes: int
+    d: int
+    d_a: int
+    scheme: str = "sparse"
+    theta: float = 0.25
+    p: int = 0
+    t: int = 0
+    u: int = 1000
+    query_batch: int = 1024

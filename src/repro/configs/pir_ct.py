@@ -1,0 +1,33 @@
+"""The paper's own workload: Certificate Transparency-scale PIR.
+
+n = 10^6 records (certificates ≈ 1.5 kB), d = 100 databases, adversary
+controls half; Sparse-PIR θ = 0.25 by default (the paper's reference
+operating point: ε ≈ 3.6e-15 at d_a = d/2, ≈ 2.2 at d_a = d−1)."""
+
+import dataclasses
+
+from repro.configs.base import PIRConfig, ShapeSpec
+
+CONFIG = PIRConfig(
+    name="pir-ct",
+    n_records=1_000_000,
+    record_bytes=1536,
+    d=100,
+    d_a=50,
+    scheme="sparse",
+    theta=0.25,
+    u=1000,
+    query_batch=1024,
+)
+
+# PIR serve-step shape cells (our system's own dry-run entries)
+SHAPES = (
+    ShapeSpec.make("serve_batch", "pir_serve", query_batch=1024),
+    ShapeSpec.make("serve_online", "pir_serve", query_batch=8),
+)
+
+
+def reduced() -> PIRConfig:
+    return dataclasses.replace(
+        CONFIG, n_records=2048, record_bytes=64, d=4, d_a=2, query_batch=8, u=16
+    )

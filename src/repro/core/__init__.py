@@ -1,0 +1,37 @@
+"""repro.core — the paper's contribution: ε-private PIR schemes, the
+privacy-accounting calculus, the adversary distinguishability game, and
+the PrivateEmbedding integration point for the model zoo."""
+
+from repro.core import accounting, adversary, anonymity, chor, direct, sparse, subset
+from repro.core.accounting import (
+    PrivacyBudget,
+    compose_with_anonymity,
+    delta_subset,
+    epsilon_as_direct,
+    epsilon_as_sparse,
+    epsilon_direct,
+    epsilon_sparse,
+)
+from repro.core.private_embedding import PrivateEmbedding
+from repro.core.schemes import SCHEMES, Scheme, make_scheme
+
+__all__ = [
+    "PrivacyBudget",
+    "PrivateEmbedding",
+    "SCHEMES",
+    "Scheme",
+    "accounting",
+    "adversary",
+    "anonymity",
+    "chor",
+    "compose_with_anonymity",
+    "delta_subset",
+    "direct",
+    "epsilon_as_direct",
+    "epsilon_as_sparse",
+    "epsilon_direct",
+    "epsilon_sparse",
+    "make_scheme",
+    "sparse",
+    "subset",
+]

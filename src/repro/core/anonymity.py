@@ -1,0 +1,57 @@
+"""Ideal anonymity system (paper §1.1, §2.1).
+
+The paper abstracts the AS as "a perfectly secret bi-directional permutation
+between input and output messages". We implement exactly that: a uniformly
+random permutation applied to the batch axis, with the inverse kept so
+replies can be routed back. From the adversary's viewpoint messages exit in
+permuted order, i.e. only the *multiset* of messages is observable — which
+is what the adversary-game harness (repro.core.adversary) conditions on, and
+what the Composition Lemma's 1/u! matching-uniformity argument requires.
+
+Real mixes are imperfect (§1.1); the deployment story is a cascade mix, and
+``u`` in the accounting is the size of the anonymity set actually achieved.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["mix", "unmix", "AnonymityChannel"]
+
+
+def mix(key: jax.Array, items: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Permute axis 0. Returns (permuted_items, perm) with
+    permuted[i] = items[perm[i]]."""
+    perm = jax.random.permutation(key, items.shape[0])
+    return jnp.take(items, perm, axis=0), perm
+
+
+def unmix(items: jnp.ndarray, perm: jnp.ndarray) -> jnp.ndarray:
+    """Route replies back: inverse of :func:`mix` on axis 0."""
+    inv = jnp.argsort(perm)
+    return jnp.take(items, inv, axis=0)
+
+
+@dataclasses.dataclass
+class AnonymityChannel:
+    """Bi-directional ideal mix for one round of u user messages.
+
+    ``bundled=True`` sends each user's whole request bundle as one message
+    (Algorithm 4.2); ``bundled=False`` permutes every request independently
+    (Algorithm 4.3, separated — the AS carries u·p messages).
+    """
+
+    key: jax.Array
+    bundled: bool = True
+
+    def forward(self, messages: jnp.ndarray):
+        """messages: [u, ...] (bundled) or [u*p, ...] (separated)."""
+        out, perm = mix(self.key, messages)
+        self._perm = perm
+        return out
+
+    def backward(self, replies: jnp.ndarray) -> jnp.ndarray:
+        return unmix(replies, self._perm)

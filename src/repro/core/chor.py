@@ -1,0 +1,101 @@
+"""Chor et al. (1995) IT-PIR — the paper's perfectly-private baseline.
+
+Client: build d binary request vectors of length n whose XOR is e_Q (all
+zeros except a 1 at the sought index). Server: XOR every record whose bit is
+set. Client: XOR the d responses to recover record Q.
+
+All functions are batch-first: ``q_idx`` has shape [B] and queries are
+generated for all B users at once (PIR servers batch queries — see DESIGN.md
+§Hardware adaptation). Request vectors are produced both bit-packed
+([d, B, ceil(n/32)] uint32, the wire format) and as {0,1} masks on demand.
+
+``server_answer``/``server_answer_planes`` are the *reference* server paths
+(pure jnp). The production server paths live in ``repro.kernels.ops`` and are
+validated against these in tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.db import packing
+from repro.db.store import RecordStore
+
+__all__ = [
+    "gen_queries",
+    "query_masks",
+    "server_answer",
+    "server_answer_planes",
+    "reconstruct",
+    "retrieve",
+]
+
+
+def gen_queries(key: jax.Array, n: int, d: int, q_idx: jnp.ndarray) -> jnp.ndarray:
+    """Request vectors for a batch of queries.
+
+    Returns packed bits, shape [d, B, Wn] uint32 with Wn = ceil(n/32);
+    the element-wise XOR over axis 0 unpacks to one-hot(q_idx, n).
+    """
+    if d < 2:
+        raise ValueError(f"Chor PIR needs d >= 2 servers, got {d}")
+    (b,) = q_idx.shape
+    wn = packing.words_per_record(n)
+    rand = jax.random.bits(key, (d - 1, b, wn), dtype=jnp.uint32)
+    # packed one-hot e_Q
+    word = q_idx // packing.WORD_BITS
+    bit = (q_idx % packing.WORD_BITS).astype(jnp.uint32)
+    e_q = jnp.zeros((b, wn), jnp.uint32).at[jnp.arange(b), word].set(
+        jnp.uint32(1) << bit
+    )
+    last = jax.lax.reduce(
+        rand, jnp.uint32(0), jax.lax.bitwise_xor, (0,)
+    ) ^ e_q
+    return jnp.concatenate([rand, last[None]], axis=0)
+
+
+def query_masks(q_packed: jnp.ndarray, n: int) -> jnp.ndarray:
+    """[..., Wn] packed request vectors -> [..., n] {0,1} uint8 masks."""
+    return packing.unpack_bits(q_packed, n)
+
+
+def server_answer(db_packed: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Reference server: XOR-fold the selected packed records.
+
+    db_packed: [n, W] uint32; mask: [B, n] {0,1}; returns [B, W] uint32.
+    """
+    sel = jnp.where(mask[..., None] != 0, db_packed[None], jnp.uint32(0))
+    return jax.lax.reduce(sel, jnp.uint32(0), jax.lax.bitwise_xor, (1,))
+
+
+def server_answer_planes(db_planes: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Reference parity-matmul server: (mask @ bitplanes) mod 2.
+
+    db_planes: [n, Bbits] {0,1} float32; mask: [B, n]; returns packed
+    [B, W] uint32. fp32 accumulation of {0,1} products is exact for n < 2^24.
+    """
+    acc = jnp.dot(
+        mask.astype(jnp.float32),
+        db_planes.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    bits = jnp.mod(acc, 2.0).astype(jnp.uint8)
+    return packing.pack_bits(bits)
+
+
+def reconstruct(responses: jnp.ndarray) -> jnp.ndarray:
+    """XOR the per-server responses: [d, B, W] -> [B, W] uint32."""
+    return jax.lax.reduce(
+        responses, jnp.uint32(0), jax.lax.bitwise_xor, (0,)
+    )
+
+
+def retrieve(
+    key: jax.Array, store: RecordStore, d: int, q_idx: jnp.ndarray
+) -> jnp.ndarray:
+    """End-to-end Chor retrieval (reference path): [B] indices -> [B, W]."""
+    q = gen_queries(key, store.n, d, q_idx)
+    masks = query_masks(q, store.n)  # [d, B, n]
+    responses = jax.vmap(lambda m: server_answer(store.packed, m))(masks)
+    return reconstruct(responses)

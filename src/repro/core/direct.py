@@ -1,0 +1,82 @@
+"""Direct Requests (paper §4.1) and the Naive Dummy scheme (§3.1).
+
+Direct Requests: the client sends its real query plus p−1 *distinct* dummy
+indices, partitioned evenly over the d databases; each database simply
+returns the records asked of it (C_p = p·c_acc — no XOR processing).
+
+Naive Dummies (§3.1) is the single-database special case (d = 1); it is NOT
+ε-private (Vulnerability Thm 1) and exists here so the adversary-game tests
+can demonstrate the unbounded likelihood ratio.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.db.store import RecordStore
+
+__all__ = [
+    "gen_queries",
+    "server_answer",
+    "select_response",
+    "retrieve",
+]
+
+
+def gen_queries(
+    key: jax.Array, n: int, d: int, p: int, q_idx: jnp.ndarray
+) -> jnp.ndarray:
+    """Sample p distinct indices containing q_idx, shuffled, split over d.
+
+    Returns [d, B, p//d] int32 — the requests each database receives.
+    Matches Algorithm 4.1: p−1 dummies uniform over [0, n) \\ {Q}, the real
+    query hidden at a uniformly random position (``pop`` order-independence).
+    """
+    if p % d != 0:
+        raise ValueError(f"p must be a multiple of d (p={p}, d={d})")
+    if not (1 < p <= n):
+        raise ValueError(f"need 1 < p <= n, got p={p}, n={n}")
+    (b,) = q_idx.shape
+
+    def one(k, q):
+        k1, k2 = jax.random.split(k)
+        # p-1 distinct dummies from [0, n-1) then remap around q
+        dummies = jax.random.choice(
+            k1, n - 1, shape=(p - 1,), replace=False
+        )
+        dummies = jnp.where(dummies >= q, dummies + 1, dummies)
+        req = jnp.concatenate([jnp.asarray([q]), dummies.astype(q.dtype)])
+        return jax.random.permutation(k2, req)
+
+    keys = jax.random.split(key, b)
+    reqs = jax.vmap(one)(keys, q_idx)  # [B, p]
+    return jnp.transpose(
+        reqs.reshape(b, d, p // d), (1, 0, 2)
+    ).astype(jnp.int32)
+
+
+def server_answer(db_packed: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Plain gather: [n, W] records, [B, k] indices -> [B, k, W]."""
+    return jnp.take(db_packed, idx, axis=0)
+
+
+def select_response(
+    requests: jnp.ndarray, responses: jnp.ndarray, q_idx: jnp.ndarray
+) -> jnp.ndarray:
+    """Pick the record matching the real query.
+
+    requests: [d, B, k] indices; responses: [d, B, k, W]; q_idx: [B].
+    Returns [B, W]. Exactly one (server, slot) matches per batch element
+    because the p indices are distinct.
+    """
+    hit = (requests == q_idx[None, :, None]).astype(responses.dtype)
+    return jnp.einsum("dbk,dbkw->bw", hit, responses)
+
+
+def retrieve(
+    key: jax.Array, store: RecordStore, d: int, p: int, q_idx: jnp.ndarray
+) -> jnp.ndarray:
+    reqs = gen_queries(key, store.n, d, p, q_idx)
+    resp = jax.vmap(lambda i: server_answer(store.packed, i))(reqs)
+    return select_response(reqs, resp, q_idx)

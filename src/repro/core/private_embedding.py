@@ -1,0 +1,117 @@
+"""PrivateEmbedding — the paper's technique as a first-class model feature.
+
+Any embedding/table lookup ``table[idx]`` is an index→record retrieval
+against an operator-held database: exactly the PIR setting. This module
+wraps a float32 table as a bit-packed :class:`RecordStore` and executes
+lookups through a configured ε-private scheme. Reconstruction is bit-exact
+(XOR transports raw bits; rows are bitcast f32↔u32), so a PIR-backed model
+is *numerically identical* to the plain-gather model — tests assert exact
+equality — while the privacy accountant reports the (ε, δ) spent per lookup.
+
+Used by: recsys configs (sparse-feature tables — the natural fit), LM
+configs (`private_vocab_lookup`), and the GNN minibatch feature fetch
+(DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.accounting import PrivacyBudget
+from repro.core.schemes import Scheme, make_scheme
+from repro.db.store import RecordStore
+
+__all__ = ["PrivateEmbedding"]
+
+
+@dataclasses.dataclass
+class PrivateEmbedding:
+    """A [vocab, dim] float32 table with ε-private lookups.
+
+    mode "plain" bypasses PIR (baseline); any scheme name from
+    repro.core.schemes routes lookups through that scheme.
+    """
+
+    table: jnp.ndarray
+    scheme: Optional[Scheme] = None
+    budget: Optional[PrivacyBudget] = None
+
+    def __post_init__(self):
+        if self.table.ndim != 2 or self.table.dtype != jnp.float32:
+            raise ValueError("PrivateEmbedding expects a [vocab, dim] f32 table")
+        self._store = RecordStore.from_float_table(self.table)
+
+    # ------------------------------------------------------------ factory
+    @classmethod
+    def create(
+        cls,
+        table: jnp.ndarray,
+        scheme: str = "plain",
+        d: int = 2,
+        d_a: int = 1,
+        budget: Optional[PrivacyBudget] = None,
+        **scheme_kw,
+    ) -> "PrivateEmbedding":
+        sch = None if scheme == "plain" else make_scheme(scheme, d, d_a, **scheme_kw)
+        return cls(table=table, scheme=sch, budget=budget)
+
+    # ------------------------------------------------------------- lookup
+    @property
+    def vocab(self) -> int:
+        return self.table.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.table.shape[1]
+
+    def epsilon_per_lookup(self) -> float:
+        return 0.0 if self.scheme is None else self.scheme.epsilon(self.vocab)
+
+    def delta_per_lookup(self) -> float:
+        return 0.0 if self.scheme is None else self.scheme.delta(self.vocab)
+
+    def lookup(self, key: jax.Array, idx: jnp.ndarray) -> jnp.ndarray:
+        """[B] int indices -> [B, dim] float32 rows (bit-exact)."""
+        if self.scheme is None:
+            return jnp.take(self.table, idx, axis=0)
+        if self.budget is not None:
+            b = int(idx.shape[0])
+            self.budget.spend(
+                b * self.epsilon_per_lookup(), b * self.delta_per_lookup()
+            )
+        packed = self.scheme.retrieve(key, self._store, idx.reshape(-1))
+        rows = jax.lax.bitcast_convert_type(packed, jnp.float32)
+        return rows.reshape(*idx.shape, self.dim)
+
+    def bag_lookup(
+        self,
+        key: jax.Array,
+        flat_idx: jnp.ndarray,
+        segment_ids: jnp.ndarray,
+        num_bags: int,
+        combiner: str = "sum",
+    ) -> jnp.ndarray:
+        """EmbeddingBag over PIR: gather each index privately, then
+        segment-reduce into bags. flat_idx/segment_ids: [nnz]."""
+        rows = self.lookup(key, flat_idx)  # [nnz, dim]
+        summed = jax.ops.segment_sum(rows, segment_ids, num_segments=num_bags)
+        if combiner == "sum":
+            return summed
+        if combiner == "mean":
+            cnt = jax.ops.segment_sum(
+                jnp.ones_like(segment_ids, jnp.float32),
+                segment_ids,
+                num_segments=num_bags,
+            )
+            return summed / jnp.maximum(cnt, 1.0)[:, None]
+        raise ValueError(f"unknown combiner {combiner!r}")
+
+    # --------------------------------------------------------------- cost
+    def server_cost(self) -> dict:
+        if self.scheme is None:
+            return {"C_m": 1.0, "C_p": 1.0}
+        return self.scheme.costs(self.vocab)

@@ -1,0 +1,107 @@
+"""Sparse-PIR (paper §4.3): sparse Chor request vectors.
+
+Each column of the d×n query matrix is sampled by d Bernoulli(θ) trials
+conditioned on even parity (non-queried records) or odd parity (the sought
+record). The paper's equivalent sampling procedure — pick a parity-correct
+Hamming weight from the conditioned binomial pmf, then a uniform vector of
+that weight — is what we implement, because it is rejection-free and
+vectorises over the whole [B, n] column grid in one shot (JAX cannot
+re-sample data-dependently inside jit).
+
+Server logic is *identical* to Chor (the server may be agnostic, §4.3);
+only the expected row weight drops from n/2 to θ·n, which the gather_xor
+kernel exploits (C_p = θ·d·n·(c_acc+c_prc), Table 1).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import chor
+
+__all__ = [
+    "parity_weight_logits",
+    "gen_query_matrix",
+    "gen_queries",
+    "server_answer",
+    "reconstruct",
+    "retrieve",
+    "expected_row_weight",
+]
+
+server_answer = chor.server_answer
+reconstruct = chor.reconstruct
+
+
+def parity_weight_logits(d: int, theta: float) -> np.ndarray:
+    """log pmf of the Hamming weight of d Bernoulli(θ) trials, conditioned
+    on parity. Returns [2, d+1]: row 0 = even weights, row 1 = odd weights
+    (invalid parities at -inf). Host-side constant (d is small)."""
+    w = np.arange(d + 1, dtype=np.float64)
+    log_comb = np.array(
+        [math.lgamma(d + 1) - math.lgamma(k + 1) - math.lgamma(d - k + 1)
+         for k in range(d + 1)]
+    )
+    if theta >= 0.5:
+        # log(theta) == log(1-theta); avoid log(0) when theta == 0.5 exactly
+        log_pmf = log_comb + d * math.log(0.5)
+    else:
+        log_pmf = log_comb + w * math.log(theta) + (d - w) * math.log1p(-theta)
+    out = np.full((2, d + 1), -np.inf)
+    out[0, 0::2] = log_pmf[0::2]
+    out[1, 1::2] = log_pmf[1::2]
+    return out
+
+
+def gen_query_matrix(
+    key: jax.Array, n: int, d: int, theta: float, q_idx: jnp.ndarray
+) -> jnp.ndarray:
+    """Sample the query matrices for a batch: returns [d, B, n] uint8 bits.
+
+    Column parity is even everywhere except at q_idx (odd), so rows XOR to
+    one-hot(q_idx). Each column's weight follows the parity-conditioned
+    Binomial(d, θ); positions of the ones are uniform given the weight.
+    """
+    if d < 2:
+        raise ValueError(f"Sparse-PIR needs d >= 2 servers, got {d}")
+    (b,) = q_idx.shape
+    logits = jnp.asarray(parity_weight_logits(d, theta), jnp.float32)
+    k_even, k_odd, k_pos = jax.random.split(key, 3)
+
+    w = jax.random.categorical(k_even, logits[0], shape=(b, n))
+    w_q = jax.random.categorical(k_odd, logits[1], shape=(b,))
+    w = w.at[jnp.arange(b), q_idx].set(w_q)  # [B, n] weights
+
+    # uniform choice of `w` positions out of d: rank the d slots by iid
+    # uniforms and keep ranks < w. argsort-of-argsort yields the rank.
+    u = jax.random.uniform(k_pos, (b, n, d))
+    ranks = jnp.argsort(jnp.argsort(u, axis=-1), axis=-1)
+    m = (ranks < w[..., None]).astype(jnp.uint8)  # [B, n, d]
+    return jnp.transpose(m, (2, 0, 1))  # [d, B, n]
+
+
+def gen_queries(
+    key: jax.Array, n: int, d: int, theta: float, q_idx: jnp.ndarray
+) -> jnp.ndarray:
+    """Packed wire format: [d, B, ceil(n/32)] uint32."""
+    from repro.db import packing
+
+    return packing.pack_bits(gen_query_matrix(key, n, d, theta, q_idx))
+
+
+def expected_row_weight(n: int, theta: float) -> float:
+    """E[ones per request vector] = θ·n (paper §4.3)."""
+    return theta * n
+
+
+def retrieve(
+    key: jax.Array, store, d: int, theta: float, q_idx: jnp.ndarray
+) -> jnp.ndarray:
+    """End-to-end Sparse-PIR retrieval (reference path): [B] -> [B, W]."""
+    masks = gen_query_matrix(key, store.n, d, theta, q_idx)  # [d, B, n]
+    responses = jax.vmap(lambda m: server_answer(store.packed, m))(masks)
+    return reconstruct(responses)

@@ -1,0 +1,46 @@
+"""Subset-PIR (paper §5.1): IT-PIR on a random subset of t ≤ d servers.
+
+All server-side costs scale by t/d; privacy degrades from ε = 0 to
+(0, δ)-privacy with δ = Π_{i<t} (d_a−i)/(d−i) — the probability that every
+contacted server is corrupt (Security Thm 5).
+
+Operationally this is also the framework's *straggler mitigation*: the
+serving engine ranks servers by observed latency and contacts the fastest t,
+paying exactly the δ the accountant reports (see repro.serve.engine).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import chor
+from repro.db.store import RecordStore
+
+__all__ = ["choose_servers", "gen_queries", "retrieve"]
+
+
+def choose_servers(key: jax.Array, d: int, t: int) -> jnp.ndarray:
+    """Uniformly random size-t subset of the d servers (Algorithm 5.1)."""
+    if not (2 <= t <= d):
+        raise ValueError(f"need 2 <= t <= d, got t={t}, d={d}")
+    return jax.random.choice(key, d, shape=(t,), replace=False)
+
+
+def gen_queries(
+    key: jax.Array, n: int, d: int, t: int, q_idx: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (servers [t], packed queries [t, B, Wn]) — Chor among t."""
+    k_srv, k_q = jax.random.split(key)
+    servers = choose_servers(k_srv, d, t)
+    queries = chor.gen_queries(k_q, n, t, q_idx)
+    return servers, queries
+
+
+def retrieve(
+    key: jax.Array, store: RecordStore, d: int, t: int, q_idx: jnp.ndarray
+) -> jnp.ndarray:
+    _, q = gen_queries(key, store.n, d, t, q_idx)
+    masks = chor.query_masks(q, store.n)
+    responses = jax.vmap(lambda m: chor.server_answer(store.packed, m))(masks)
+    return chor.reconstruct(responses)

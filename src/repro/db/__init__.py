@@ -1,0 +1,20 @@
+from repro.db.packing import (
+    WORD_BITS,
+    bitcast_f32_to_u32,
+    bitcast_u32_to_f32,
+    pack_bits,
+    unpack_bits,
+    words_per_record,
+)
+from repro.db.store import RecordStore, make_synthetic_store
+
+__all__ = [
+    "WORD_BITS",
+    "RecordStore",
+    "bitcast_f32_to_u32",
+    "bitcast_u32_to_f32",
+    "make_synthetic_store",
+    "pack_bits",
+    "unpack_bits",
+    "words_per_record",
+]

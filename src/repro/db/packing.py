@@ -1,0 +1,102 @@
+"""Bit packing for PIR record stores.
+
+PIR over GF(2) operates on raw record bits. TPUs move data in 32-bit lanes,
+so records are padded to a multiple of 32 bits and packed into uint32 words
+("W words per record"). Two layouts are used by the kernels:
+
+  * packed  : [n, W] uint32 — one row per record (XOR-fold / gather-XOR path)
+  * bitplane: [n, B] uint8/{0,1} — one column per bit (parity-matmul path)
+
+All functions are jnp-first and jit-safe; numpy twins (``*_np``) exist for
+host-side store construction so a multi-GB database never has to round-trip
+through a device.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WORD_BITS = 32
+
+__all__ = [
+    "WORD_BITS",
+    "words_per_record",
+    "pack_bits",
+    "unpack_bits",
+    "pack_bytes_np",
+    "unpack_bytes_np",
+    "bitcast_f32_to_u32",
+    "bitcast_u32_to_f32",
+    "bitplanes_from_packed",
+    "packed_from_bitplanes",
+]
+
+
+def words_per_record(record_bits: int) -> int:
+    """Number of uint32 words needed for a record of ``record_bits`` bits."""
+    if record_bits <= 0:
+        raise ValueError(f"record_bits must be positive, got {record_bits}")
+    return -(-record_bits // WORD_BITS)
+
+
+def pack_bits(bits: jnp.ndarray) -> jnp.ndarray:
+    """Pack a [..., B] array of {0,1} into [..., ceil(B/32)] uint32 (LSB first)."""
+    *lead, b = bits.shape
+    w = words_per_record(b)
+    pad = w * WORD_BITS - b
+    if pad:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros((*lead, pad), dtype=bits.dtype)], axis=-1
+        )
+    bits = bits.reshape(*lead, w, WORD_BITS).astype(jnp.uint32)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(words: jnp.ndarray, num_bits: int | None = None) -> jnp.ndarray:
+    """Inverse of :func:`pack_bits`: [..., W] uint32 -> [..., num_bits] uint8."""
+    *lead, w = words.shape
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(*lead, w * WORD_BITS).astype(jnp.uint8)
+    if num_bits is not None:
+        bits = bits[..., :num_bits]
+    return bits
+
+
+def pack_bytes_np(raw: np.ndarray) -> np.ndarray:
+    """Host-side: [n, nbytes] uint8 -> [n, W] uint32 (little-endian words)."""
+    n, nbytes = raw.shape
+    w = words_per_record(nbytes * 8)
+    pad = w * 4 - nbytes
+    if pad:
+        raw = np.concatenate([raw, np.zeros((n, pad), dtype=np.uint8)], axis=1)
+    return raw.reshape(n, w, 4).view(np.uint8).copy().view("<u4").reshape(n, w)
+
+
+def unpack_bytes_np(words: np.ndarray, nbytes: int) -> np.ndarray:
+    """Inverse of :func:`pack_bytes_np`."""
+    n, w = words.shape
+    raw = words.astype("<u4").view(np.uint8).reshape(n, w * 4)
+    return raw[:, :nbytes].copy()
+
+
+def bitcast_f32_to_u32(x: jnp.ndarray) -> jnp.ndarray:
+    """Reinterpret float32 as uint32 (exact bit transport through XOR-PIR)."""
+    return jax.lax.bitcast_convert_type(x, jnp.uint32)
+
+
+def bitcast_u32_to_f32(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.bitcast_convert_type(x, jnp.float32)
+
+
+def bitplanes_from_packed(words: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+    """[n, W] uint32 -> [n, 32*W] {0,1} planes for the parity-matmul path."""
+    return unpack_bits(words).astype(dtype)
+
+
+def packed_from_bitplanes(planes: jnp.ndarray) -> jnp.ndarray:
+    """[n, B] {0,1} (any numeric dtype) -> [n, ceil(B/32)] uint32."""
+    return pack_bits(planes.astype(jnp.uint8))

@@ -1,0 +1,90 @@
+"""Record store: the replicated PIR database substrate.
+
+A :class:`RecordStore` holds ``n`` records of a standard size ``record_bits``
+(paper §2.1: records of standardized size b bits), bit-packed into uint32
+words. The store is what every scheme's *server side* operates on.
+
+Sharding: on a production mesh the record axis (``n``) is sharded over the
+``model`` axis and, optionally, the word axis over nothing (records are small
+relative to n). ``shard_spec()`` produces the PartitionSpec used by the
+launch layer; the store itself is mesh-agnostic so unit tests run on one CPU
+device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.db import packing
+
+__all__ = ["RecordStore", "make_synthetic_store"]
+
+
+@dataclasses.dataclass
+class RecordStore:
+    """``packed``: [n, W] uint32; ``record_bits``: true record width in bits."""
+
+    packed: jnp.ndarray
+    record_bits: int
+
+    # ---------------------------------------------------------------- basics
+    @property
+    def n(self) -> int:
+        return self.packed.shape[0]
+
+    @property
+    def words(self) -> int:
+        return self.packed.shape[1]
+
+    @property
+    def nbytes(self) -> int:
+        return self.packed.size * 4
+
+    # ------------------------------------------------------------ construct
+    @classmethod
+    def from_bytes(cls, raw: np.ndarray) -> "RecordStore":
+        """[n, nbytes] uint8 host array -> store."""
+        packed = packing.pack_bytes_np(np.asarray(raw, dtype=np.uint8))
+        return cls(packed=jnp.asarray(packed), record_bits=raw.shape[1] * 8)
+
+    @classmethod
+    def from_float_table(cls, table: jnp.ndarray) -> "RecordStore":
+        """[n, dim] float32 table -> store (bit-exact transport via bitcast)."""
+        u32 = packing.bitcast_f32_to_u32(table)
+        return cls(packed=u32, record_bits=table.shape[1] * 32)
+
+    # -------------------------------------------------------------- readout
+    def record_bytes(self, i: int) -> np.ndarray:
+        nbytes = -(-self.record_bits // 8)
+        row = np.asarray(self.packed[i : i + 1])
+        return packing.unpack_bytes_np(row, nbytes)[0]
+
+    def as_float_table(self) -> jnp.ndarray:
+        if self.record_bits % 32:
+            raise ValueError("store was not built from a float table")
+        return packing.bitcast_u32_to_f32(self.packed)
+
+    def bitplanes(self, dtype=jnp.float32) -> jnp.ndarray:
+        """[n, 32*W] {0,1} planes for the parity-matmul (MXU) server path."""
+        return packing.bitplanes_from_packed(self.packed, dtype=dtype)
+
+    # ------------------------------------------------------------- sharding
+    def shard_spec(self, record_axis: Optional[str] = "model"):
+        """PartitionSpec sharding the record axis; words replicated."""
+        from jax.sharding import PartitionSpec as P
+
+        return P(record_axis, None)
+
+
+def make_synthetic_store(
+    n: int, record_bytes: int, seed: int = 0
+) -> RecordStore:
+    """Deterministic synthetic database (used by tests/benches/examples)."""
+    rng = np.random.default_rng(seed)
+    raw = rng.integers(0, 256, size=(n, record_bytes), dtype=np.uint8)
+    return RecordStore.from_bytes(raw)

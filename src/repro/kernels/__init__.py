@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the PIR server hot paths (the compute the paper
+optimizes): xor_fold (VPU), parity_matmul (MXU), gather_xor (Sparse-PIR
+θ·n streaming). ops.py holds the jit'd wrappers, ref.py the jnp oracles."""
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.gather_xor import gather_xor, indices_from_mask
+from repro.kernels.parity_matmul import parity_matmul
+from repro.kernels.xor_fold import xor_fold
+
+__all__ = [
+    "flash_attention_fwd",
+    "gather_xor",
+    "indices_from_mask",
+    "ops",
+    "parity_matmul",
+    "ref",
+    "xor_fold",
+]

@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: fused flash-attention forward (online softmax).
+
+The §Perf analysis (EXPERIMENTS.md) shows LM cells are memory-bound on
+fusion-boundary traffic of the [Sq, Skv] score chain — the same class of
+waste the PIR bf16 iteration removed. This kernel is the standard fix:
+scores/probabilities never leave VMEM; per (batch·head, q-block) the
+online-softmax carry is (acc[bq, D] f32, m[bq], l[bq]) and HBM traffic
+collapses to Q/K/V/O (+carry) — O(S·D) instead of O(S²).
+
+Layout: inputs flattened to [B·H, S, D] (GQA broadcast happens in ops.py).
+Grid: (B·H, q_blocks, kv_blocks), kv innermost; supports causal and
+sliding-window (gemma-2 local) masks via absolute positions.
+
+VMEM per step (bq=bk=256, D=128): q/k/v blocks 3·256·128·4 + acc 256·128·4
++ scores 256·256·4 ≈ 0.8 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+__all__ = ["flash_attention_fwd"]
+
+DEFAULT_BLOCK_Q = 256
+DEFAULT_BLOCK_K = 256
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc, m, l, *, scale, causal,
+            window, bq, bk, sq, sk):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m[...] = jnp.full_like(m, NEG_INF)
+        l[...] = jnp.zeros_like(l)
+
+    q = q_ref[0].astype(jnp.float32) * scale            # [bq, D]
+    k = k_ref[0].astype(jnp.float32)                    # [bk, D]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [bq, bk]
+
+    qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < sk
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev, l_prev = m[...], l[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)                              # [bq, bk]
+    alpha = jnp.exp(m_prev - m_new)                     # [bq, 1]
+    l[...] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc[...] = acc[...] * alpha + jnp.dot(
+        p, v_ref[0].astype(jnp.float32), preferred_element_type=jnp.float32
+    )
+    m[...] = m_new
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _epilogue():
+        o_ref[0] = (acc[...] / jnp.maximum(l[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention_fwd(
+    q: jnp.ndarray,   # [BH, Sq, D]
+    k: jnp.ndarray,   # [BH, Sk, D]
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    bq, bk = min(block_q, sq), min(block_k, sk)
+    qp, kp = -sq % bq, -sk % bk
+    q_p = jnp.pad(q, ((0, 0), (0, qp), (0, 0)))
+    k_p = jnp.pad(k, ((0, 0), (0, kp), (0, 0)))
+    v_p = jnp.pad(v, ((0, 0), (0, kp), (0, 0)))
+
+    grid = (bh, (sq + qp) // bq, (sk + kp) // bk)
+    scratch = (
+        [
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ]
+        if pltpu is not None
+        else []
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, scale=1.0 / math.sqrt(d), causal=causal,
+            window=window, bq=bq, bk=bk, sq=sq, sk=sk,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq + qp, d), q.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(q_p, k_p, v_p)
+    return out[:, :sq]

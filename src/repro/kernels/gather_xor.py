@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: gather-XOR — the Sparse-PIR server hot path.
+
+Sparse-PIR's entire point (paper §4.3, Table 1) is that each server touches
+only θ·n records: C_p = θ·d·n·(c_acc + c_prc). A dense fold cannot exploit
+that, so this kernel streams *only the selected records* out of HBM using
+scalar-prefetched indices to drive the BlockSpec index_map — the TPU
+analogue of the CPU implementation's pointer-chasing gather.
+
+Layout: idx [q, m] int32 (selected record ids per query, padded with -1;
+m = ceil(θ·n·slack) is static). Grid: (q, w_blocks, m); the output block
+[1, BW] stays in VMEM across the m innermost steps while selected record
+blocks are DMA'd in; padded slots skip the XOR via @pl.when.
+
+Per-step VMEM: db row block 1·BW·4 + out 1·BW·4 ≈ 1 KiB at BW=128 — the
+kernel is pure DMA-bound streaming, as the cost model says it should be.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["gather_xor", "indices_from_mask"]
+
+DEFAULT_BLOCK_W = 128
+
+
+def _kernel(idx_ref, db_ref, out_ref):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(idx_ref[b, i] >= 0)
+    def _fold():
+        out_ref[...] = out_ref[...] ^ db_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
+def gather_xor(
+    db: jnp.ndarray,
+    idx: jnp.ndarray,
+    *,
+    block_w: int = DEFAULT_BLOCK_W,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """db: [n, W] uint32; idx: [q, m] int32 (−1 = padding) -> [q, W]."""
+    n, w = db.shape
+    q, m = idx.shape
+
+    bw = min(block_w, w)
+    wp = -w % bw
+    db_p = jnp.pad(db, ((0, 0), (0, wp)))
+
+    grid = (q, (w + wp) // bw, m)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            # one record row per innermost step, selected by the prefetched
+            # index; padded (-1) slots clamp to row 0 and are skipped in-kernel
+            pl.BlockSpec(
+                (1, bw), lambda b, j, i, idx_ref: (jnp.maximum(idx_ref[b, i], 0), j)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, bw), lambda b, j, i, idx_ref: (b, j)),
+    )
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((q, w + wp), jnp.uint32),
+        interpret=interpret,
+    )(idx, db_p)
+    return out[:, :w]
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def indices_from_mask(mask: jnp.ndarray, m: int) -> jnp.ndarray:
+    """[q, n] {0,1} request vectors -> [q, m] selected indices, -1 padded.
+
+    ``m`` must bound the per-row weight; Sparse-PIR uses
+    m = ceil(θ·n·slack) and the weight concentrates tightly (Binomial).
+    Rows whose weight exceeds m would be truncated — callers size m via
+    repro.kernels.ops.sparse_index_budget which makes that probability
+    negligible, and the serving engine falls back to xor_fold on overflow.
+    """
+    q, n = mask.shape
+    # stable sort moves the 1s' column indices to the front of each row
+    order = jnp.argsort(-(mask != 0).astype(jnp.int32), axis=1, stable=True)
+    keep = order[:, :m]
+    valid = jnp.take_along_axis((mask != 0), keep, axis=1)
+    return jnp.where(valid, keep, -1).astype(jnp.int32)

@@ -1,0 +1,95 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``server_answer_*`` are the production PIR server paths. On CPU (this
+container, and unit tests) the kernels run in interpret mode; on TPU they
+compile to Mosaic. ``auto`` picks the path the roofline says is faster for
+the given batch size (see EXPERIMENTS.md §Perf for the crossover model).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.db import packing
+from repro.kernels.gather_xor import gather_xor, indices_from_mask
+from repro.kernels.parity_matmul import parity_matmul
+from repro.kernels.xor_fold import xor_fold
+
+__all__ = [
+    "on_cpu",
+    "server_answer_fold",
+    "server_answer_parity",
+    "server_answer_sparse",
+    "server_answer_auto",
+    "sparse_index_budget",
+    "parity_crossover_batch",
+]
+
+
+def on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def server_answer_fold(
+    db_packed: jnp.ndarray, mask: jnp.ndarray, **kw
+) -> jnp.ndarray:
+    """VPU path: [n, W] db, [q, n] mask -> [q, W] uint32."""
+    return xor_fold(db_packed, mask, interpret=on_cpu(), **kw)
+
+
+def server_answer_parity(
+    db_planes: jnp.ndarray, mask: jnp.ndarray, **kw
+) -> jnp.ndarray:
+    """MXU path: [n, Bbits] planes, [q, n] mask -> packed [q, W] uint32."""
+    bits = parity_matmul(mask, db_planes, interpret=on_cpu(), **kw)
+    return packing.pack_bits(bits)
+
+
+def server_answer_sparse(
+    db_packed: jnp.ndarray, mask: jnp.ndarray, theta: float, **kw
+) -> jnp.ndarray:
+    """Sparse gather path: only θ·n records touched (Table 1 C_p)."""
+    n = db_packed.shape[0]
+    m = sparse_index_budget(n, theta)
+    idx = indices_from_mask(mask, m)
+    return gather_xor(db_packed, idx, interpret=on_cpu(), **kw)
+
+
+def sparse_index_budget(n: int, theta: float, slack_sigmas: float = 6.0) -> int:
+    """Static per-query index budget: θ·n + 6σ of Binomial(n, θ), rounded
+    up to a multiple of 8. P[weight > budget] < 1e-9 (Chernoff)."""
+    mean = theta * n
+    sigma = math.sqrt(n * theta * (1.0 - theta))
+    m = int(math.ceil(mean + slack_sigmas * sigma))
+    return min(n, -(-m // 8) * 8)
+
+
+def parity_crossover_batch(n: int, record_bits: int) -> int:
+    """Batch size above which the MXU parity path beats the VPU fold.
+
+    Napkin roofline (v5e): fold moves n·W·4 bytes per *query block* of 8 →
+    time ≈ n·record_bits/8 · ceil(q/8) / 819e9. Parity does 2·q·n·bits
+    FLOPs → time ≈ 2·q·n·bits / 197e12. Crossover where equal:
+    q* ≈ 8 · (197e12 / 819e9) / 16 ≈ 120 → use 128 (one MXU tile).
+    """
+    del n, record_bits  # ratio is shape-independent to first order
+    return 128
+
+
+def server_answer_auto(
+    db_packed: jnp.ndarray,
+    db_planes: jnp.ndarray | None,
+    mask: jnp.ndarray,
+    theta: float | None = None,
+) -> jnp.ndarray:
+    q, n = mask.shape
+    if theta is not None and theta < 0.5:
+        return server_answer_sparse(db_packed, mask, theta)
+    if db_planes is not None and q >= parity_crossover_batch(
+        n, db_packed.shape[1] * 32
+    ):
+        return server_answer_parity(db_planes, mask)
+    return server_answer_fold(db_packed, mask)

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These are small, obviously-correct implementations; tests/test_kernels.py
+sweeps shapes/dtypes and asserts the Pallas kernels (interpret mode on CPU,
+compiled on TPU) match them exactly — PIR is bit-exact, so tolerances are
+zero everywhere except the float parity accumulator, which is exact anyway
+for n < 2^24 (integer-valued fp32 sums).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["xor_fold_ref", "parity_matmul_ref", "gather_xor_ref"]
+
+
+def xor_fold_ref(db: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Masked XOR fold. db: [n, W] uint32; mask: [q, n] {0,1}; -> [q, W]."""
+    sel = jnp.where(mask[..., None] != 0, db[None], jnp.uint32(0))
+    return jax.lax.reduce(sel, jnp.uint32(0), jax.lax.bitwise_xor, (1,))
+
+
+def parity_matmul_ref(mask: jnp.ndarray, planes: jnp.ndarray) -> jnp.ndarray:
+    """(mask @ planes) mod 2 with exact fp32 accumulation.
+
+    mask: [q, n] {0,1}; planes: [n, B] {0,1}; -> [q, B] uint8 bits.
+    """
+    acc = jnp.dot(
+        mask.astype(jnp.float32),
+        planes.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return jnp.mod(acc, 2.0).astype(jnp.uint8)
+
+
+def gather_xor_ref(db: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """XOR of the selected records only (Sparse-PIR server hot path).
+
+    db: [n, W] uint32; idx: [q, m] int32, entries < 0 are padding;
+    -> [q, W] uint32.
+    """
+    rows = jnp.take(db, jnp.maximum(idx, 0), axis=0)  # [q, m, W]
+    rows = jnp.where(idx[..., None] >= 0, rows, jnp.uint32(0))
+    return jax.lax.reduce(rows, jnp.uint32(0), jax.lax.bitwise_xor, (1,))
+
+
+def flash_attention_ref(q, k, v, causal=True, window=None):
+    """Oracle for the flash-attention kernel. [BH, S, D] layout."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(d))
+    qpos = jnp.arange(q.shape[1])[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones_like(s[0], bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: masked XOR fold over bit-packed records (VPU path).
+
+The Chor/Sparse-PIR server answer for a batch of queries:
+
+    out[q, :] = XOR_{i : mask[q, i] = 1} db[i, :]
+
+db is [n, W] uint32 (W = record words). The kernel streams record blocks
+HBM→VMEM once per query block and XOR-accumulates on the VPU; arithmetic
+intensity is ~1 int-op/byte, so this path is HBM-bandwidth-bound — used for
+small query batches (latency serving). Large batches use parity_matmul
+(MXU path) instead; see DESIGN.md §Hardware adaptation.
+
+Grid: (q_blocks, w_blocks, n_blocks), n innermost so the output block
+stays resident in VMEM while records stream through.
+
+VMEM working set per step (defaults BQ=8, BN=256, BW=128):
+  mask 8·256·4 + db 256·128·4 + out 8·128·4 + select temp 8·256·128·4
+  ≈ 1.2 MiB  « 16 MiB VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["xor_fold"]
+
+DEFAULT_BLOCK_Q = 8
+DEFAULT_BLOCK_N = 256
+DEFAULT_BLOCK_W = 128
+
+
+def _kernel(mask_ref, db_ref, out_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    m = mask_ref[...]  # [BQ, BN] int32
+    db = db_ref[...]  # [BN, BW] uint32
+    sel = jnp.where(m[:, :, None] != 0, db[None, :, :], jnp.uint32(0))
+    folded = jax.lax.reduce(sel, jnp.uint32(0), jax.lax.bitwise_xor, (1,))
+    out_ref[...] = out_ref[...] ^ folded
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_q", "block_n", "block_w", "interpret")
+)
+def xor_fold(
+    db: jnp.ndarray,
+    mask: jnp.ndarray,
+    *,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_w: int = DEFAULT_BLOCK_W,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """db: [n, W] uint32; mask: [q, n] integer {0,1} -> [q, W] uint32."""
+    q, n = mask.shape
+    n2, w = db.shape
+    assert n == n2, (mask.shape, db.shape)
+
+    bq, bn, bw = min(block_q, q), min(block_n, n), min(block_w, w)
+    # pad every axis to a block multiple (ragged edges handled by padding
+    # with zeros: XOR identity, mask 0 selects nothing)
+    qp, np_, wp = (-q % bq), (-n % bn), (-w % bw)
+    mask_p = jnp.pad(mask.astype(jnp.int32), ((0, qp), (0, np_)))
+    db_p = jnp.pad(db, ((0, np_), (0, wp)))
+
+    grid = (
+        (q + qp) // bq,
+        (w + wp) // bw,
+        (n + np_) // bn,
+    )
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, bn), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bw), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bq, bw), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((q + qp, w + wp), jnp.uint32),
+        interpret=interpret,
+    )(mask_p, db_p)
+    return out[:q, :w]

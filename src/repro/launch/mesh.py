@@ -1,0 +1,39 @@
+"""Production meshes.
+
+Single pod: 16×16 = 256 chips, axes ("data", "model").
+Multi-pod:  2×16×16 = 512 chips, axes ("pod", "data", "model") — the "pod"
+axis is data-parallel across pods (gradient sync crosses DCI; that's where
+the int8-compressed all-reduce earns its keep, DESIGN.md §5).
+
+Defined as a FUNCTION so importing this module never touches jax device
+state (the dry-run driver sets XLA_FLAGS before any jax import).
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+__all__ = ["make_production_mesh", "mesh_device_count"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    from jax.sharding import Mesh
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, found {len(devices)} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 for a "
+            "dry run (repro.launch.dryrun does this automatically)"
+        )
+    return Mesh(np.array(devices[:n]).reshape(shape), axes)
+
+
+def mesh_device_count(multi_pod: bool = False) -> int:
+    return 512 if multi_pod else 256

@@ -1,0 +1,162 @@
+"""Roofline analysis over the dry-run artifacts (brief deliverable g).
+
+For every (arch × shape × mesh) JSON produced by repro.launch.dryrun,
+derive the three per-step roofline terms on TPU v5e:
+
+    compute    = flops_per_device   / 197e12   (bf16 MXU peak per chip)
+    memory     = bytes_per_device   / 819e9    (HBM bandwidth per chip)
+    collective = coll_bytes_per_dev / 50e9     (per-ICI-link bandwidth)
+
+(our dry-run numbers are already per-device — the SPMD-partitioned module
+is what XLA compiled — so dividing global HLO totals by chips, as the brief
+formulates it, is the same quantity).
+
+The dominant term is the bottleneck; step-time lower bound = max(term); and
+
+    roofline_fraction = (model_flops / chips / 197e12) / max(term)
+
+i.e. what fraction of the no-overlap roofline step is useful model math —
+the score reported in EXPERIMENTS.md §Perf. MODEL_FLOPS/HLO_FLOPS is also
+reported (remat/redundancy waste).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.roofline [--dir results/dryrun]
+        [--write results/roofline.md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # B/s / chip
+ICI_BW = 50e9           # B/s / link
+HBM_GB = 16.0           # v5e HBM per chip
+
+DEFAULT_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "results", "dryrun"
+)
+
+__all__ = ["load_cells", "roofline_row", "render_markdown"]
+
+
+def load_cells(d: str, include_iterations: bool = False) -> List[Dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        if not include_iterations and "__it" in os.path.basename(f):
+            continue  # perf-iteration artifacts live in §Perf, not the table
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def roofline_row(rec: Dict) -> Dict:
+    chips = rec["chips"]
+    t_comp = rec["flops"] / PEAK_FLOPS
+    t_mem = rec["bytes_accessed"] / HBM_BW
+    t_coll = rec["collectives"]["total_bytes"] / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    useful = rec["model_flops"] / chips / PEAK_FLOPS
+    frac = useful / bound if bound > 0 else 0.0
+    hlo_total = rec["flops"] * chips
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "chips": chips,
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "step_lower_bound_s": bound,
+        "roofline_fraction": frac,
+        "model_over_hlo_flops": (
+            rec["model_flops"] / hlo_total if hlo_total else 0.0
+        ),
+        "mem_gib": rec["bytes_per_device"] / 2**30,
+        "fits_16g": rec["bytes_per_device"] / 2**30 <= HBM_GB,
+    }
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def render_markdown(rows: List[Dict], skips: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | compute | memory | collective | dominant "
+        "| roofline frac | model/HLO | mem/dev | fits 16G |",
+        "|---|---|---|---|---|---|---|---|---|---|---|"[:-4],
+    ]
+    lines = [
+        "| arch | shape | mesh | compute | memory | collective | dominant | "
+        "roofline frac | model/HLO | mem/dev | fits16G |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {_fmt_s(r['t_compute_s'])} | {_fmt_s(r['t_memory_s'])} "
+            f"| {_fmt_s(r['t_collective_s'])} | **{r['dominant']}** "
+            f"| {r['roofline_fraction']:.3f} | {r['model_over_hlo_flops']:.2f} "
+            f"| {r['mem_gib']:.2f} GiB | {'yes' if r['fits_16g'] else 'NO'} |"
+        )
+    if skips:
+        lines.append("")
+        lines.append("Skipped cells (per brief):")
+        for s in skips:
+            lines.append(
+                f"- {s['arch']} × {s['shape']} × {s['mesh']}: {s['skip_reason']}"
+            )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.normpath(DEFAULT_DIR))
+    ap.add_argument("--write", default=None)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+
+    cells = load_cells(args.dir)
+    rows = [roofline_row(c) for c in cells if c.get("ok") is True]
+    skips = [c for c in cells if c.get("ok") == "skipped"]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    md = render_markdown(rows, skips)
+    print(md)
+
+    worst = sorted(rows, key=lambda r: r["roofline_fraction"])[:5]
+    print("\nworst roofline fractions:")
+    for r in worst:
+        print(f"  {r['arch']} × {r['shape']} × {r['mesh']}: "
+              f"{r['roofline_fraction']:.4f} ({r['dominant']}-bound)")
+    coll = sorted(
+        rows, key=lambda r: r["t_collective_s"] / max(r["step_lower_bound_s"], 1e-12),
+        reverse=True,
+    )[:5]
+    print("\nmost collective-bound:")
+    for r in coll:
+        print(f"  {r['arch']} × {r['shape']} × {r['mesh']}: "
+              f"coll {_fmt_s(r['t_collective_s'])} of {_fmt_s(r['step_lower_bound_s'])}")
+
+    if args.write:
+        os.makedirs(os.path.dirname(args.write) or ".", exist_ok=True)
+        with open(args.write, "w") as f:
+            f.write(md + "\n")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

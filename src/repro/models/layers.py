@@ -1,0 +1,247 @@
+"""Shared neural-net layers (functional, pure-JAX, shard-aware).
+
+Params are plain pytrees (nested dicts of jnp arrays); every layer is an
+``init(key, ...) -> params`` plus an ``apply(params, x, ...)`` pair. Models
+annotate activations with logical axis names via repro.dist.sharding so the
+identical code runs 1-device smoke tests and 512-chip dry-runs.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+
+__all__ = [
+    "dense_init",
+    "dense",
+    "rmsnorm_init",
+    "rmsnorm",
+    "layernorm_init",
+    "layernorm",
+    "embedding_init",
+    "rope",
+    "softcap",
+    "gqa_attention",
+    "decode_attention",
+    "swiglu_init",
+    "swiglu",
+    "gelu_mlp_init",
+    "gelu_mlp",
+]
+
+
+# ----------------------------------------------------------------- dense
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(d_in)
+    return {"w": (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)}
+
+
+def dense(params, x):
+    return x @ params["w"].astype(x.dtype)
+
+
+# ------------------------------------------------------------------ norm
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.zeros((d,), dtype)}  # gemma-style (1 + scale)
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ------------------------------------------------------------- embedding
+def embedding_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+
+
+# ------------------------------------------------------------------ rope
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0):
+    """x: [B, S, H, D]; positions: [B, S] (or [S]) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # [B, S, half]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap <= 0.0:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# ------------------------------------------------------------- attention
+def _repeat_kv(kv: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """[B, S, Hkv, D] -> [B, S, Hkv*groups, D] (GQA broadcast)."""
+    b, s, h, d = kv.shape
+    kv = jnp.broadcast_to(kv[:, :, :, None, :], (b, s, h, groups, d))
+    return kv.reshape(b, s, h * groups, d)
+
+
+def _attn_core(q, k, v, qpos, kpos, causal, window, attn_softcap, dh):
+    """Masked softmax attention over pre-broadcast K/V. q: [B,Sq,Hq,D].
+
+    The [Sq, Sk] score chain stays in the input dtype at every fusion
+    boundary (reductions run in f32): at bf16 this halves the dominant
+    HBM traffic of unfused attention (EXPERIMENTS.md §Perf, mistral it3).
+    """
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.asarray(
+        math.sqrt(dh), q.dtype
+    )
+    scores = softcap(scores, attn_softcap)
+    mask = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    neg = jnp.asarray(-1e30 if q.dtype == jnp.float32 else -3e38, q.dtype)
+    scores = jnp.where(mask[None, None], scores, neg)
+    probs = jax.nn.softmax(scores, axis=-1)  # stays in q.dtype end-to-end
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+ATTN_CHUNK_Q = 2048  # flash-style query blocking threshold/size
+
+
+def gqa_attention(
+    q: jnp.ndarray,              # [B, Sq, Hq, D]
+    k: jnp.ndarray,              # [B, Skv, Hkv, D]
+    v: jnp.ndarray,              # [B, Skv, Hkv, D]
+    *,
+    causal: bool = True,
+    window=None,                 # python int OR traced scalar (per-layer)
+    attn_softcap: float = 0.0,
+    q_offset: int | jnp.ndarray = 0,
+) -> jnp.ndarray:
+    """GQA attention with optional local window, flash-style q-chunking.
+
+    ``window`` may be a traced per-layer scalar (gemma-2 local/global
+    alternation under lax.scan); None disables the window mask statically.
+    For Sq > ATTN_CHUNK_Q the query axis is blocked through a remat'd
+    lax.map so the [Sq, Skv] score matrix never materialises (at 32k
+    prefill a full score tensor is tens of GB per device — the blocked
+    form keeps [chunk, Skv] live). q_offset shifts query positions
+    (prefill=0; decode = cache index). Returns [B, Sq, Hq, D].
+    """
+    b, sq, hq, dh = q.shape
+    hkv = k.shape[2]
+    k = _repeat_kv(k, hq // hkv)
+    v = _repeat_kv(v, hq // hkv)
+    kpos = jnp.arange(k.shape[1])
+
+    if sq > ATTN_CHUNK_Q and sq % ATTN_CHUNK_Q == 0:
+        nc, c = sq // ATTN_CHUNK_Q, ATTN_CHUNK_Q
+        qcs = q.reshape(b, nc, c, hq, dh).swapaxes(0, 1)   # [nc, B, c, H, D]
+        qpos = (jnp.arange(sq) + q_offset).reshape(nc, c)
+
+        @jax.checkpoint  # scores recomputed in bwd, never stored
+        def one(args):
+            qc, qpos_c = args
+            return _attn_core(
+                qc, k, v, qpos_c, kpos, causal, window, attn_softcap, dh
+            )
+
+        out = jax.lax.map(one, (qcs, qpos))                # [nc, B, c, H, D]
+        out = out.swapaxes(0, 1).reshape(b, sq, hq, dh)
+    else:
+        qpos = jnp.arange(sq) + q_offset
+        out = _attn_core(q, k, v, qpos, kpos, causal, window, attn_softcap, dh)
+    return constrain(out, "batch", "seq", "heads", "head_dim")
+
+
+def decode_attention(
+    q: jnp.ndarray,              # [B, 1, Hq, D]
+    k_cache: jnp.ndarray,        # [B, Smax, Hkv, D]
+    v_cache: jnp.ndarray,
+    length: jnp.ndarray,         # scalar: #valid cache entries
+    *,
+    window=None,                 # python int OR traced scalar (per-layer)
+    attn_softcap: float = 0.0,
+    kv_seq_axes: tuple[str, ...] = (),
+) -> jnp.ndarray:
+    """One-token decode against a (possibly sequence-sharded) KV cache.
+
+    When ``kv_seq_axes`` names mesh axes, runs the flash-decode two-pass
+    combine under shard_map (sequence parallelism: each shard computes a
+    partial (max, sumexp, weighted-V) triple; psum-combines). Otherwise a
+    plain masked softmax over the full cache.
+    """
+    from repro.dist.flash_decode import flash_decode  # local import: no cycle
+
+    if kv_seq_axes:
+        return flash_decode(
+            q, k_cache, v_cache, length,
+            axis_names=kv_seq_axes, window=window, attn_softcap=attn_softcap,
+        )
+
+    b, _, hq, dh = q.shape
+    hkv = k_cache.shape[2]
+    k = _repeat_kv(k_cache, hq // hkv)
+    v = _repeat_kv(v_cache, hq // hkv)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(dh)
+    scores = softcap(scores, attn_softcap)
+    kpos = jnp.arange(k.shape[1])[None, None, None, :]
+    mask = kpos < length
+    if window is not None:
+        mask &= kpos > length - 1 - window  # only the last `window` tokens
+    scores = jnp.where(mask, scores.astype(jnp.float32), -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+# ------------------------------------------------------------------- mlp
+def swiglu_init(key, d: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(k1, d, d_ff, dtype),
+        "wg": dense_init(k2, d, d_ff, dtype),
+        "wo": dense_init(k3, d_ff, d, dtype),
+    }
+
+
+def swiglu(params, x):
+    h = jax.nn.silu(dense(params["wg"], x)) * dense(params["wi"], x)
+    h = constrain(h, *(("batch",) + (None,) * (h.ndim - 2) + ("ff",)))
+    return dense(params["wo"], h)
+
+
+def gelu_mlp_init(key, dims: tuple[int, ...], dtype=jnp.float32):
+    keys = jax.random.split(key, len(dims) - 1)
+    return {
+        f"l{i}": dense_init(keys[i], dims[i], dims[i + 1], dtype)
+        for i in range(len(dims) - 1)
+    }
+
+
+def gelu_mlp(params, x, final_act: bool = False):
+    n = len(params)
+    for i in range(n):
+        x = dense(params[f"l{i}"], x)
+        if i < n - 1 or final_act:
+            x = jax.nn.gelu(x)
+    return x

@@ -1,0 +1,333 @@
+"""RecSys model zoo: FM, DLRM, DIEN (GRU+AUGRU), BERT4Rec.
+
+The sparse embedding lookup is the hot path and JAX has no EmbeddingBag —
+lookups are built from ``jnp.take`` + ``jax.ops.segment_sum`` (the brief's
+requirement), vocab-sharded via repro.dist.collectives.sharded_table_lookup
+on a mesh. Every model accepts an optional ``lookup_fn`` so the paper's
+PIR schemes can replace the plaintext gather (PrivateEmbedding integration;
+bit-exact, asserted in tests/test_private_models.py).
+
+Uniform API per model M ∈ {fm, dlrm, dien, bert4rec}:
+    M_init(key, cfg)                 -> params
+    M_score(params, cfg, batch)      -> logits (or per-position logits)
+    user_vector(params, cfg, batch)  -> [B, embed_dim]   (retrieval tower)
+    retrieval_scores(user_vec, cand) -> [B, n_candidates]
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RecSysConfig
+from repro.dist.collectives import sharded_table_lookup
+from repro.dist.sharding import constrain
+from repro.models import layers as L
+
+__all__ = [
+    "embedding_bag",
+    "fm_init", "fm_score",
+    "dlrm_init", "dlrm_score",
+    "dien_init", "dien_score",
+    "bert4rec_init", "bert4rec_logits", "bert4rec_masked_xent",
+    "user_vector", "retrieval_scores", "bce_loss",
+]
+
+LookupFn = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+def _default_lookup(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    return sharded_table_lookup(table, ids)
+
+
+# --------------------------------------------------------------------------
+# EmbeddingBag (gather + segment-reduce): JAX has no native one
+# --------------------------------------------------------------------------
+def embedding_bag(
+    table: jnp.ndarray,
+    flat_ids: jnp.ndarray,      # [nnz]
+    segment_ids: jnp.ndarray,   # [nnz] -> bag id
+    num_bags: int,
+    combiner: str = "sum",
+    lookup_fn: LookupFn = _default_lookup,
+) -> jnp.ndarray:
+    rows = lookup_fn(table, flat_ids)
+    out = jax.ops.segment_sum(rows, segment_ids, num_segments=num_bags)
+    if combiner == "mean":
+        cnt = jax.ops.segment_sum(
+            jnp.ones_like(segment_ids, jnp.float32), segment_ids, num_bags
+        )
+        out = out / jnp.maximum(cnt, 1.0)[:, None]
+    return out
+
+
+def bce_loss(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    z = logits.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(z, 0) - z * labels + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+# --------------------------------------------------------------------------
+# FM — Rendle ICDM'10: pairwise ⟨v_i, v_j⟩x_i x_j via the O(nk) trick
+# --------------------------------------------------------------------------
+def fm_init(key, cfg: RecSysConfig) -> Dict:
+    v = cfg.n_sparse * cfg.vocab_per_field
+    k1, k2 = jax.random.split(key)
+    return {
+        "embed": (jax.random.normal(k1, (v, cfg.embed_dim)) * 0.01).astype(jnp.float32),
+        "linear": (jax.random.normal(k2, (v, 1)) * 0.01).astype(jnp.float32),
+        "bias": jnp.zeros((), jnp.float32),
+    }
+
+
+def _field_offsets(cfg: RecSysConfig) -> jnp.ndarray:
+    return (jnp.arange(cfg.n_sparse) * cfg.vocab_per_field).astype(jnp.int32)
+
+
+def fm_score(
+    params, cfg: RecSysConfig, batch: Dict, lookup_fn: LookupFn = _default_lookup
+) -> jnp.ndarray:
+    """batch["ids"]: [B, n_sparse] per-field ids -> logits [B]."""
+    ids = batch["ids"] + _field_offsets(cfg)[None, :]
+    emb = lookup_fn(params["embed"], ids)              # [B, F, K]
+    emb = constrain(emb, "batch", None, None)
+    lin = lookup_fn(params["linear"], ids)[..., 0]     # [B, F]
+    s = jnp.sum(emb, axis=1)                           # Σ v_i x_i
+    s2 = jnp.sum(emb * emb, axis=1)                    # Σ (v_i x_i)²
+    pair = 0.5 * jnp.sum(s * s - s2, axis=-1)          # sum-square trick
+    return params["bias"] + jnp.sum(lin, axis=1) + pair
+
+
+# --------------------------------------------------------------------------
+# DLRM (arXiv:1906.00091), RM2 flavour: bot MLP + dot interaction + top MLP
+# --------------------------------------------------------------------------
+def dlrm_init(key, cfg: RecSysConfig) -> Dict:
+    v = cfg.n_sparse * cfg.vocab_per_field
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.embed_dim
+    n_feat = cfg.n_sparse + 1
+    n_pairs = n_feat * (n_feat - 1) // 2
+    return {
+        "embed": (jax.random.normal(k1, (v, d)) * 0.01).astype(jnp.float32),
+        "bot": L.gelu_mlp_init(k2, (cfg.n_dense,) + cfg.bot_mlp),
+        "top": L.gelu_mlp_init(k3, (cfg.bot_mlp[-1] + n_pairs,) + cfg.top_mlp),
+    }
+
+
+def dlrm_score(
+    params, cfg: RecSysConfig, batch: Dict, lookup_fn: LookupFn = _default_lookup
+) -> jnp.ndarray:
+    """batch: dense [B, n_dense] f32, ids [B, n_sparse] -> logits [B]."""
+    x_bot = L.gelu_mlp(params["bot"], batch["dense"], final_act=True)  # [B, D]
+    ids = batch["ids"] + _field_offsets(cfg)[None, :]
+    emb = lookup_fn(params["embed"], ids)                              # [B, F, D]
+    z = jnp.concatenate([x_bot[:, None, :], emb], axis=1)              # [B, F+1, D]
+    z = constrain(z, "batch", None, None)
+    inter = jnp.einsum("bfd,bgd->bfg", z, z)                           # dot interaction
+    f = z.shape[1]
+    iu, ju = jnp.triu_indices(f, k=1)
+    pairs = inter[:, iu, ju]                                           # [B, F(F+1)/2]
+    top_in = jnp.concatenate([x_bot, pairs], axis=1)
+    return L.gelu_mlp(params["top"], top_in)[:, 0]
+
+
+# --------------------------------------------------------------------------
+# DIEN (arXiv:1809.03672): GRU interest extractor + AUGRU interest evolution
+# --------------------------------------------------------------------------
+def _gru_init(key, d_in, d_h):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = 1.0 / jnp.sqrt(d_in + d_h)
+    return {
+        "wz": (jax.random.normal(k1, (d_in + d_h, d_h)) * s).astype(jnp.float32),
+        "wr": (jax.random.normal(k2, (d_in + d_h, d_h)) * s).astype(jnp.float32),
+        "wh": (jax.random.normal(k3, (d_in + d_h, d_h)) * s).astype(jnp.float32),
+    }
+
+
+def _gru_cell(p, h, x, att=None):
+    """Standard GRU; AUGRU scales the update gate by the attention score."""
+    hx = jnp.concatenate([x, h], axis=-1)
+    z = jax.nn.sigmoid(hx @ p["wz"])
+    r = jax.nn.sigmoid(hx @ p["wr"])
+    hh = jnp.tanh(jnp.concatenate([x, r * h], axis=-1) @ p["wh"])
+    if att is not None:
+        z = z * att[:, None]       # attentional update gate (AUGRU)
+    return (1.0 - z) * h + z * hh
+
+
+def dien_init(key, cfg: RecSysConfig) -> Dict:
+    ks = jax.random.split(key, 5)
+    d, g = cfg.embed_dim, cfg.gru_dim
+    return {
+        "embed": (
+            jax.random.normal(ks[0], (cfg.vocab_per_field, d)) * 0.01
+        ).astype(jnp.float32),
+        "gru1": _gru_init(ks[1], d, g),
+        "augru": _gru_init(ks[2], g, g),
+        "att_w": L.dense_init(ks[3], g, d),
+        "mlp": L.gelu_mlp_init(ks[4], (g + 2 * d,) + cfg.mlp_dims + (1,)),
+    }
+
+
+def dien_score(
+    params, cfg: RecSysConfig, batch: Dict, lookup_fn: LookupFn = _default_lookup
+) -> jnp.ndarray:
+    """batch: hist [B, S] item ids, target [B] item id -> logits [B]."""
+    hist = lookup_fn(params["embed"], batch["hist"])      # [B, S, D]
+    tgt = lookup_fn(params["embed"], batch["target"])     # [B, D]
+    b, s, d = hist.shape
+    g = cfg.gru_dim
+
+    # interest extraction: GRU over the behaviour sequence
+    def step1(h, x):
+        h = _gru_cell(params["gru1"], h, x)
+        return h, h
+
+    _, states = jax.lax.scan(
+        step1, jnp.zeros((b, g), jnp.float32), hist.swapaxes(0, 1)
+    )                                                     # [S, B, G]
+
+    # attention of each interest state vs the target item
+    att = jnp.einsum("sbg,gd,bd->sb", states, params["att_w"]["w"], tgt)
+    att = jax.nn.softmax(att / jnp.sqrt(d), axis=0)
+
+    # interest evolution: AUGRU weighted by attention
+    def step2(h, xs):
+        x, a = xs
+        h = _gru_cell(params["augru"], h, x, att=a)
+        return h, None
+
+    h_final, _ = jax.lax.scan(
+        step2, jnp.zeros((b, g), jnp.float32), (states, att)
+    )
+
+    pooled = jnp.einsum("sb,sbg->bg", att, states)        # attention pool
+    feats = jnp.concatenate(
+        [h_final, tgt, jnp.einsum("bsd->bd", hist) / s], axis=-1
+    )
+    del pooled
+    return L.gelu_mlp(params["mlp"], feats)[:, 0]
+
+
+# --------------------------------------------------------------------------
+# BERT4Rec (arXiv:1904.06690): bidirectional transformer over item sequence
+# --------------------------------------------------------------------------
+def bert4rec_vocab(cfg: RecSysConfig) -> int:
+    """items + pad + mask, padded to a shardable multiple of 64."""
+    return -(-(cfg.n_items + 2) // 64) * 64
+
+
+def bert4rec_init(key, cfg: RecSysConfig) -> Dict:
+    ks = jax.random.split(key, 2 + cfg.n_blocks)
+    d = cfg.embed_dim
+    vocab = bert4rec_vocab(cfg)
+
+    def block_init(k):
+        kk = jax.random.split(k, 5)
+        return {
+            "ln1": L.layernorm_init(d),
+            "ln2": L.layernorm_init(d),
+            "wq": L.dense_init(kk[0], d, d),
+            "wk": L.dense_init(kk[1], d, d),
+            "wv": L.dense_init(kk[2], d, d),
+            "wo": L.dense_init(kk[3], d, d),
+            "mlp": L.gelu_mlp_init(kk[4], (d, 4 * d, d)),
+        }
+
+    return {
+        "embed": (jax.random.normal(ks[0], (vocab, d)) * 0.02).astype(jnp.float32),
+        "pos": (jax.random.normal(ks[1], (cfg.seq_len, d)) * 0.02).astype(jnp.float32),
+        "blocks": [block_init(ks[2 + i]) for i in range(cfg.n_blocks)],
+        "final_ln": L.layernorm_init(d),
+    }
+
+
+def bert4rec_hidden(
+    params, cfg: RecSysConfig, seq: jnp.ndarray,
+    lookup_fn: LookupFn = _default_lookup,
+) -> jnp.ndarray:
+    """seq: [B, S] item ids -> hidden [B, S, D] (bidirectional encoder)."""
+    b, s = seq.shape
+    d, h = cfg.embed_dim, cfg.n_heads
+    x = lookup_fn(params["embed"], seq) + params["pos"][None, :s]
+    for blk in params["blocks"]:
+        y = L.layernorm(blk["ln1"], x)
+        q = L.dense(blk["wq"], y).reshape(b, s, h, d // h)
+        k = L.dense(blk["wk"], y).reshape(b, s, h, d // h)
+        v = L.dense(blk["wv"], y).reshape(b, s, h, d // h)
+        a = L.gqa_attention(q, k, v, causal=False)
+        x = x + L.dense(blk["wo"], a.reshape(b, s, d))
+        x = x + L.gelu_mlp(blk["mlp"], L.layernorm(blk["ln2"], x))
+    return L.layernorm(params["final_ln"], x)
+
+
+def bert4rec_logits(
+    params, cfg: RecSysConfig, seq: jnp.ndarray,
+    lookup_fn: LookupFn = _default_lookup,
+) -> jnp.ndarray:
+    """[B, S] -> LAST-position next-item logits [B, vocab] (tied head).
+
+    Serving scores the item catalogue at the final [MASK] position only —
+    materialising [B, S, V] at serve_bulk scale would be petabytes."""
+    x = bert4rec_hidden(params, cfg, seq, lookup_fn)
+    logits = jnp.einsum("bd,vd->bv", x[:, -1], params["embed"])
+    return constrain(logits, "batch", "table_vocab")
+
+
+def bert4rec_masked_xent(params, cfg, batch, lookup_fn=_default_lookup):
+    """batch: seq (with [MASK] ids), labels, mask [B, S]. The [B, S, V]
+    logits are streamed in sequence chunks, kept vocab-sharded (same
+    discipline as the LM chunked xent)."""
+    x = bert4rec_hidden(params, cfg, batch["seq"], lookup_fn)  # [B, S, D]
+    b, s, d = x.shape
+    n_chunks = 8 if s % 8 == 0 else 1
+    chunk = s // n_chunks
+
+    @jax.checkpoint  # recompute chunk logits in bwd: never stored
+    def per_chunk(args):
+        xc, lc, mc = args  # [B, C, D], [B, C], [B, C]
+        logits = jnp.einsum("bcd,vd->bcv", xc, params["embed"])
+        logits = constrain(logits, "batch", None, "table_vocab")
+        logits = logits.astype(jnp.float32)
+        m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+        lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        tgt = jnp.sum(jnp.where(iota == lc[..., None], logits, 0.0), axis=-1)
+        w = mc.astype(jnp.float32)
+        return jnp.sum((lse - tgt) * w), jnp.sum(w)
+
+    xcs = x.reshape(b, n_chunks, chunk, d).swapaxes(0, 1)
+    lcs = batch["labels"].reshape(b, n_chunks, chunk).swapaxes(0, 1)
+    mcs = batch["mask"].reshape(b, n_chunks, chunk).swapaxes(0, 1)
+    nll, cnt = jax.lax.map(per_chunk, (xcs, lcs, mcs))
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(cnt), 1.0)
+
+
+# --------------------------------------------------------------------------
+# Retrieval tower (retrieval_cand shape: score 1M candidates, no loop)
+# --------------------------------------------------------------------------
+def user_vector(
+    params, cfg: RecSysConfig, batch: Dict, lookup_fn: LookupFn = _default_lookup
+) -> jnp.ndarray:
+    """[B, embed_dim] query-side vector per model family."""
+    if cfg.model == "fm":
+        ids = batch["ids"] + _field_offsets(cfg)[None, :]
+        return jnp.sum(lookup_fn(params["embed"], ids), axis=1)
+    if cfg.model == "dlrm":
+        return L.gelu_mlp(params["bot"], batch["dense"], final_act=True)
+    if cfg.model == "dien":
+        hist = lookup_fn(params["embed"], batch["hist"])
+        return jnp.mean(hist, axis=1)
+    if cfg.model == "bert4rec":
+        h = bert4rec_hidden(params, cfg, batch["seq"], lookup_fn)
+        return h[:, -1]
+    raise ValueError(cfg.model)
+
+
+def retrieval_scores(user_vec: jnp.ndarray, cand: jnp.ndarray) -> jnp.ndarray:
+    """user_vec: [B, D]; cand: [n_cand, D] (sharded over "candidates") ->
+    [B, n_cand] batched dot — no per-candidate loop."""
+    cand = constrain(cand, "candidates", None)
+    scores = jnp.einsum("bd,nd->bn", user_vec, cand)
+    return constrain(scores, "batch", "candidates")

@@ -1,0 +1,300 @@
+"""Decoder-only transformer LM (dense + MoE), GQA/RoPE/RMSNorm/SwiGLU,
+gemma-2-style local/global alternation and logit softcaps.
+
+One code path covers all five assigned LM architectures; layers run under
+``lax.scan`` over stacked parameters (compile-time O(1) in depth — at
+61 layers / 512 partitions this is what keeps XLA tractable). Embeddings
+are tied: the token gather uses the vocab-sharded shard_map lookup (no
+table all-gather) and the logits head hits the same table with logits kept
+vocab-sharded end-to-end through the (chunked) cross-entropy.
+
+API (all pure):
+    init_lm(key, cfg)                       -> params
+    train_loss(params, cfg, tokens)         -> (loss, metrics)
+    prefill(params, cfg, tokens, max_len)   -> (last_logits, cache)
+    decode_step(params, cfg, cache, tok, pos) -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.dist.collectives import sharded_vocab_lookup
+from repro.dist.sharding import constrain, mesh_axis_names
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+
+__all__ = ["KVCache", "init_lm", "train_loss", "prefill", "decode_step"]
+
+_BIG_WINDOW = 1 << 30
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray  # [L, B, Smax, Hkv, Dh]
+    v: jnp.ndarray
+
+
+def _dtype(cfg: LMConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _layer_windows(cfg: LMConfig) -> jnp.ndarray:
+    """Per-layer attention window (big = global). Gemma-2: odd layers local."""
+    if not cfg.local_global:
+        return jnp.full((cfg.n_layers,), _BIG_WINDOW, jnp.int32)
+    idx = jnp.arange(cfg.n_layers)
+    return jnp.where(idx % 2 == 0, cfg.window, _BIG_WINDOW).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def init_lm(key, cfg: LMConfig) -> Dict:
+    dt = _dtype(cfg)
+    k_embed, k_layers = jax.random.split(key)
+
+    def layer_init(k):
+        ks = jax.random.split(k, 6)
+        p = {
+            "ln1": L.rmsnorm_init(cfg.d_model, dt),
+            "ln2": L.rmsnorm_init(cfg.d_model, dt),
+            "wq": L.dense_init(ks[0], cfg.d_model, cfg.n_heads * cfg.head_dim, dt),
+            "wk": L.dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * cfg.head_dim, dt),
+            "wv": L.dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * cfg.head_dim, dt),
+            "wo": L.dense_init(ks[3], cfg.n_heads * cfg.head_dim, cfg.d_model, dt),
+        }
+        if cfg.moe:
+            p["moe"] = moe_lib.moe_init(ks[4], cfg.d_model, cfg.d_ff, cfg.n_experts, dt)
+        else:
+            p["mlp"] = L.swiglu_init(ks[4], cfg.d_model, cfg.d_ff, dt)
+        return p
+
+    stacked = jax.vmap(layer_init)(jax.random.split(k_layers, cfg.n_layers))
+    return {
+        "embed": L.embedding_init(k_embed, cfg.vocab, cfg.d_model, dt)["table"],
+        "layers": stacked,
+        "final_norm": L.rmsnorm_init(cfg.d_model, dt),
+    }
+
+
+# --------------------------------------------------------------------------
+# shared attention sub-block
+# --------------------------------------------------------------------------
+def _qkv(p, cfg: LMConfig, x):
+    b, s, _ = x.shape
+    q = L.dense(p["wq"], x).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = L.dense(p["wk"], x).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = L.dense(p["wv"], x).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    return q, k, v
+
+
+def _attn_full(p, cfg: LMConfig, x, window, positions):
+    """Training/prefill attention over the full (causal) sequence."""
+    q, k, v = _qkv(p, cfg, x)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    out = L.gqa_attention(
+        q, k, v, causal=True, window=window, attn_softcap=cfg.attn_softcap,
+    )
+    b, s, _, _ = out.shape
+    return L.dense(p["wo"], out.reshape(b, s, -1)), k, v
+
+
+# --------------------------------------------------------------------------
+# training / prefill backbone
+# --------------------------------------------------------------------------
+def _block_train(cfg: LMConfig):
+    def fn(x, per_layer):
+        p, window = per_layer
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        # sequence-parallel residual stream: x stays seq-sharded; the norm
+        # runs seq-local, the block gathers to full seq (GSPMD all-gather),
+        # and the output reduce-scatters back at the residual add.
+        y = L.rmsnorm(p["ln1"], x)
+        y = constrain(y, "batch", None, "embed")
+        h, _, _ = _attn_full(p, cfg, y, window, positions)
+        x = x + constrain(h, "batch", "seq_res", "embed")
+        y2 = L.rmsnorm(p["ln2"], x)
+        y2 = constrain(y2, "batch", None, "embed")
+        if cfg.moe:
+            m, aux = moe_lib.moe_apply(
+                p["moe"], y2, n_experts=cfg.n_experts, top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor,
+            )
+        else:
+            m, aux = L.swiglu(p["mlp"], y2), jnp.float32(0.0)
+        x = constrain(x + m, "batch", "seq_res", "embed")
+        return x, aux
+
+    return fn
+
+
+def _backbone(params, cfg: LMConfig, tokens) -> tuple[jnp.ndarray, jnp.ndarray]:
+    x = sharded_vocab_lookup(params["embed"], tokens)
+    x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)  # gemma-style scale
+    x = constrain(x, "batch", "seq_res", "embed")
+    windows = _layer_windows(cfg)
+
+    blk = _block_train(cfg)
+    if cfg.remat:
+        policy = (
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            if cfg.remat_policy == "dots"
+            else jax.checkpoint_policies.nothing_saveable
+        )
+        blk = jax.checkpoint(blk, policy=policy)
+
+    def scan_fn(x, per_layer):
+        return blk(x, per_layer)
+
+    x, aux = jax.lax.scan(scan_fn, x, (params["layers"], windows))
+    x = L.rmsnorm(params["final_norm"], x)
+    return x, jnp.sum(aux)
+
+
+# --------------------------------------------------------------------------
+# loss
+# --------------------------------------------------------------------------
+def _xent_chunk(x, embed, targets, mask, final_softcap):
+    """x: [B, C, D]; logits stay vocab-sharded; returns summed nll + count."""
+    logits = jnp.einsum("bcd,vd->bcv", x, embed.astype(x.dtype))
+    logits = L.softcap(logits, final_softcap).astype(jnp.float32)
+    logits = constrain(logits, "batch", "seq", "vocab")
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    tgt = jnp.sum(
+        jnp.where(vocab_iota == targets[..., None], logits, 0.0), axis=-1
+    )
+    nll = (lse - tgt) * mask
+    return jnp.sum(nll), jnp.sum(mask)
+
+
+def train_loss(params, cfg: LMConfig, tokens: jnp.ndarray):
+    """Next-token LM loss. tokens: [B, S] int32."""
+    x, aux = _backbone(params, cfg, tokens)
+    targets = jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1
+    )
+    mask = jnp.concatenate(
+        [jnp.ones_like(tokens[:, 1:], jnp.float32),
+         jnp.zeros_like(tokens[:, :1], jnp.float32)],
+        axis=1,
+    )
+
+    b, s, d = x.shape
+    chunk = cfg.loss_chunk if cfg.loss_chunk > 0 else s
+    n_chunks = max(1, s // chunk)
+
+    @jax.checkpoint  # recompute chunk logits in bwd: never stored
+    def per_chunk(args):
+        xc, tc, mc = args
+        return _xent_chunk(xc, params["embed"], tc, mc, cfg.final_softcap)
+
+    xcs = x.reshape(b, n_chunks, chunk, d).swapaxes(0, 1)
+    tcs = targets.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+    mcs = mask.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+    nll, cnt = jax.lax.map(per_chunk, (xcs, tcs, mcs))
+    loss = jnp.sum(nll) / jnp.maximum(jnp.sum(cnt), 1.0)
+    if cfg.moe:
+        loss = loss + 0.01 * aux / cfg.n_layers
+    return loss, {"nll": loss, "aux": aux}
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+def prefill(params, cfg: LMConfig, tokens: jnp.ndarray, max_len: int):
+    """tokens: [B, S]; returns (last-position logits [B, V], KVCache)."""
+    b, s = tokens.shape
+    x = sharded_vocab_lookup(params["embed"], tokens)
+    x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    x = constrain(x, "batch", "seq_res", "embed")
+    windows = _layer_windows(cfg)
+    dt = _dtype(cfg)
+
+    def fn(x, per_layer):
+        p, window = per_layer
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        y = L.rmsnorm(p["ln1"], x)
+        y = constrain(y, "batch", None, "embed")
+        h, k, v = _attn_full(p, cfg, y, window, positions)
+        x = x + constrain(h, "batch", "seq_res", "embed")
+        y = L.rmsnorm(p["ln2"], x)
+        y = constrain(y, "batch", None, "embed")
+        if cfg.moe:
+            m, _ = moe_lib.moe_apply(
+                p["moe"], y, n_experts=cfg.n_experts, top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor,
+            )
+        else:
+            m = L.swiglu(p["mlp"], y)
+        x = x + constrain(m, "batch", "seq_res", "embed")
+        kc = jnp.zeros((b, max_len, cfg.n_kv_heads, cfg.head_dim), dt)
+        vc = jnp.zeros_like(kc)
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(dt), (0, 0, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(dt), (0, 0, 0, 0))
+        kc = constrain(kc, "batch", "kv_seq", None, None)
+        vc = constrain(vc, "batch", "kv_seq", None, None)
+        return x, (kc, vc)
+
+    x, (kcs, vcs) = jax.lax.scan(fn, x, (params["layers"], windows))
+    x = L.rmsnorm(params["final_norm"], x)
+    last = x[:, -1]
+    logits = last @ params["embed"].T.astype(last.dtype)
+    logits = L.softcap(logits, cfg.final_softcap)
+    return constrain(logits, "batch", "vocab"), KVCache(k=kcs, v=vcs)
+
+
+def decode_step(params, cfg: LMConfig, cache: KVCache, token: jnp.ndarray, pos):
+    """token: [B, 1]; pos: scalar (tokens already in cache). Returns
+    (logits [B, V], updated cache). KV sequence parallel via flash-decode
+    when rules["kv_seq"] maps to mesh axes."""
+    b = token.shape[0]
+    x = sharded_vocab_lookup(params["embed"], token)
+    x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    windows = _layer_windows(cfg)
+    kv_axes = mesh_axis_names("kv_seq")
+    positions = jnp.broadcast_to(jnp.asarray(pos)[None, None], (b, 1))
+
+    def fn(x, per_layer):
+        p, kc, vc, window = per_layer
+        y = L.rmsnorm(p["ln1"], x)
+        q, k, v = _qkv(p, cfg, y)
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, pos, 0, 0))
+        kc = constrain(kc, "batch", "kv_seq", None, None)
+        vc = constrain(vc, "batch", "kv_seq", None, None)
+        out = L.decode_attention(
+            q, kc, vc, pos + 1,
+            window=window,
+            attn_softcap=cfg.attn_softcap,
+            kv_seq_axes=kv_axes,
+        )
+        x = x + L.dense(p["wo"], out.reshape(b, 1, -1))
+        y2 = L.rmsnorm(p["ln2"], x)
+        if cfg.moe:
+            m, _ = moe_lib.moe_apply(
+                p["moe"], y2, n_experts=cfg.n_experts, top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor,
+            )
+        else:
+            m = L.swiglu(p["mlp"], y2)
+        return x + m, (kc, vc)
+
+    x, (kcs, vcs) = jax.lax.scan(
+        fn, x, (params["layers"], cache.k, cache.v, windows)
+    )
+    x = L.rmsnorm(params["final_norm"], x)
+    logits = x[:, 0] @ params["embed"].T.astype(x.dtype)
+    logits = L.softcap(logits, cfg.final_softcap)
+    return constrain(logits, "batch", "vocab"), KVCache(k=kcs, v=vcs)

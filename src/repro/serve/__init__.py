@@ -1,0 +1,3 @@
+from repro.serve.engine import PIRServingEngine, ServerStats
+
+__all__ = ["PIRServingEngine", "ServerStats"]

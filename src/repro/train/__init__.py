@@ -1,0 +1,10 @@
+from repro.train import checkpoint, optimizer, train_step
+from repro.train.checkpoint import CheckpointManager
+from repro.train.optimizer import AdamW, Adafactor, ErrorFeedbackCompressor
+from repro.train.train_step import TrainState, default_optimizer, make_train_step
+
+__all__ = [
+    "AdamW", "Adafactor", "CheckpointManager", "ErrorFeedbackCompressor",
+    "TrainState", "checkpoint", "default_optimizer", "make_train_step",
+    "optimizer", "train_step",
+]

@@ -1,0 +1,188 @@
+"""Optimizers from scratch (no optax in this environment): AdamW and
+Adafactor, plus global-norm clipping and the int8 error-feedback gradient
+compression transform.
+
+Adafactor (factored second moments for rank-≥2 leaves) is what the
+kimi-k2-1t config trains with: full Adam on 1T params costs 8 bytes/param
+of optimizer state (16 TB); factored moments cost ~2·√ of that per matrix,
+keeping per-device state under the v5e HBM budget (EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.collectives import dequantize_int8, quantize_int8
+
+__all__ = ["AdamW", "Adafactor", "clip_by_global_norm", "ErrorFeedbackCompressor"]
+
+PyTree = Any
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> Tuple[PyTree, jnp.ndarray]:
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves)
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    # multiply in each leaf's own dtype: an f32 scalar would silently
+    # upcast every bf16 grad leaf (GB-scale f32 copies at kimi size)
+    return (
+        jax.tree.map(lambda g: g * scale.astype(g.dtype), grads),
+        gnorm,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    max_grad_norm: float = 1.0
+
+    def init(self, params: PyTree) -> PyTree:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads: PyTree, state: PyTree, params: PyTree):
+        grads, gnorm = clip_by_global_norm(grads, self.max_grad_norm)
+        step = state["step"] + 1
+        bc1 = 1.0 - self.b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * g * g
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - self.lr * u).astype(p.dtype), m, v
+
+        flat = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v, "step": step}, {"grad_norm": gnorm}
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    lr: float = 1e-3
+    decay: float = 0.8          # \hat\beta_2t = 1 - t^{-decay}
+    eps1: float = 1e-30
+    eps2: float = 1e-3
+    clip_threshold: float = 1.0
+    max_grad_norm: float = 1.0
+
+    def init(self, params: PyTree) -> PyTree:
+        def leaf_state(p):
+            if p.ndim >= 2:
+                # factor over the two trailing dims; lead dims (layer stacks,
+                # experts) stay explicit
+                row = jnp.zeros(p.shape[:-1], jnp.float32)
+                col = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                return {"row": row, "col": col}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {
+            "second": jax.tree.map(leaf_state, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads: PyTree, state: PyTree, params: PyTree):
+        grads, gnorm = clip_by_global_norm(grads, self.max_grad_norm)
+        step = state["step"] + 1
+        beta2 = 1.0 - step.astype(jnp.float32) ** (-self.decay)
+
+        def upd(p, g, s):
+            # memory discipline (kimi-scale leaves are GBs/device): big
+            # [*, d_in, d_out] tensors stay in the PARAM dtype; only the
+            # factored statistics and reductions run in f32 (they are
+            # row/col vectors + scalars, so precision costs nothing).
+            g2_row = jnp.mean(
+                jnp.square(g.astype(jnp.float32)), axis=-1
+            ) + self.eps1  # fused square+reduce: no f32 copy of g
+            if p.ndim >= 2:
+                g2_col = jnp.mean(
+                    jnp.square(g.astype(jnp.float32)), axis=-2
+                ) + self.eps1
+                row = beta2 * s["row"] + (1 - beta2) * g2_row
+                col = beta2 * s["col"] + (1 - beta2) * g2_col
+                rmean = jnp.mean(row, axis=-1, keepdims=True)
+                factor = jax.lax.rsqrt(
+                    (row / jnp.maximum(rmean, self.eps1))[..., None]
+                    * col[..., None, :]
+                    + self.eps1
+                ).astype(p.dtype)
+                u = g * factor
+                new_s = {"row": row, "col": col}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * (
+                    jnp.square(g.astype(jnp.float32)) + self.eps1
+                )
+                u = (g.astype(jnp.float32) * jax.lax.rsqrt(v + self.eps1)).astype(p.dtype)
+                new_s = {"v": v}
+            # update clipping (Shazeer & Stern §6); reduction in f32
+            rms_u = jnp.sqrt(
+                jnp.mean(jnp.square(u.astype(jnp.float32))) + self.eps1
+            )
+            damp = (1.0 / jnp.maximum(1.0, rms_u / self.clip_threshold)).astype(p.dtype)
+            scale = jnp.maximum(
+                self.eps2, jnp.sqrt(jnp.mean(jnp.square(p.astype(jnp.float32))))
+            ).astype(p.dtype)
+            return p - (self.lr * scale * damp).astype(p.dtype) * u, new_s
+
+        is_state = lambda x: isinstance(x, dict) and ("row" in x or "v" in x)
+        flat = jax.tree.map(upd, params, grads, state["second"], is_leaf=None)
+        # jax.tree.map zips params/grads naturally; state dict leaves align
+        new_params = jax.tree.map(
+            lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        new_second = jax.tree.map(
+            lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        return new_params, {"second": new_second, "step": step}, {"grad_norm": gnorm}
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorFeedbackCompressor:
+    """int8 gradient compression with error feedback (1-bit-Adam-style).
+
+    g_hat = dequant(quant(g + err)); err' = (g + err) − g_hat.
+    The quantized representation is what crosses the wire in deployment
+    (see repro.dist.collectives.compressed_psum for the collective itself);
+    error feedback makes the *sequence* of updates unbiased, so training
+    converges like uncompressed SGD up to O(err²) terms.
+    """
+
+    enabled: bool = True
+
+    def init(self, params: PyTree) -> PyTree:
+        if not self.enabled:
+            return {}
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def apply(self, grads: PyTree, err: PyTree):
+        if not self.enabled:
+            return grads, err
+
+        def one(g, e):
+            corrected = g.astype(jnp.float32) + e
+            q, scale = quantize_int8(corrected)
+            g_hat = dequantize_int8(q, scale)
+            return g_hat.astype(g.dtype), corrected - g_hat
+
+        flat = jax.tree.map(one, grads, err)
+        g_hat = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_err = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return g_hat, new_err

@@ -1,0 +1,176 @@
+"""Train-step builders per architecture family.
+
+``make_train_step`` composes: loss → grads → (optional int8 error-feedback
+compression) → (AdamW | Adafactor) → new state. The returned function is a
+single jit-able pure step; the launch layer owns shardings and donation.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig, LMConfig, RecSysConfig
+from repro.models import gnn, recsys as R, transformer as T
+from repro.train.optimizer import AdamW, Adafactor, ErrorFeedbackCompressor
+
+__all__ = [
+    "TrainState",
+    "lm_loss_fn",
+    "gnn_full_loss_fn",
+    "gnn_minibatch_loss_fn",
+    "gnn_molecule_loss_fn",
+    "recsys_loss_fn",
+    "make_train_step",
+    "default_optimizer",
+]
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    comp_state: Any
+    step: jnp.ndarray
+
+
+def default_optimizer(cfg) -> AdamW | Adafactor:
+    """kimi-scale MoE trains with Adafactor (optimizer-state memory);
+    everything else with AdamW."""
+    if isinstance(cfg, LMConfig) and cfg.moe and cfg.params_dense > 1e11:
+        return Adafactor(lr=1e-3)
+    return AdamW(lr=3e-4)
+
+
+# ------------------------------------------------------------ loss closures
+def lm_loss_fn(cfg: LMConfig) -> Callable:
+    def loss(params, batch):
+        return T.train_loss(params, cfg, batch["tokens"])
+
+    return loss
+
+
+def gnn_full_loss_fn(cfg: GNNConfig) -> Callable:
+    def loss(params, batch):
+        logits = gnn.gcn_apply(
+            params, cfg, batch["feats"], batch["src"], batch["dst"],
+            batch["edge_w"], batch.get("mean_deg"),
+        )
+        l = gnn.node_xent(logits, batch["labels"], batch["label_mask"])
+        return l, {"nll": l}
+
+    return loss
+
+
+def gnn_minibatch_loss_fn(cfg: GNNConfig) -> Callable:
+    def loss(params, batch):
+        logits = gnn.gcn_apply(
+            params, cfg, batch["feats"], batch["src"], batch["dst"],
+            batch["edge_w"],
+        )
+        l = gnn.node_xent(logits, batch["labels"], batch["seed_mask"])
+        return l, {"nll": l}
+
+    return loss
+
+
+def gnn_molecule_loss_fn(cfg: GNNConfig) -> Callable:
+    def loss(params, batch):
+        logits = gnn.batched_graph_apply(
+            params, cfg, batch["feats"], batch["src"], batch["dst"],
+            batch["edge_w"],
+        )
+        l = gnn.graph_xent(logits, batch["labels"])
+        return l, {"nll": l}
+
+    return loss
+
+
+def recsys_loss_fn(cfg: RecSysConfig) -> Callable:
+    if cfg.model == "bert4rec":
+        def loss(params, batch):
+            l = R.bert4rec_masked_xent(params, cfg, batch)
+            return l, {"nll": l}
+        return loss
+
+    score = {"fm": R.fm_score, "dlrm": R.dlrm_score, "dien": R.dien_score}[cfg.model]
+
+    def loss(params, batch):
+        logits = score(params, cfg, batch)
+        l = R.bce_loss(logits, batch["label"])
+        return l, {"nll": l}
+
+    return loss
+
+
+# --------------------------------------------------------------- train step
+def make_train_step(
+    loss_fn: Callable,
+    optimizer,
+    compressor: Optional[ErrorFeedbackCompressor] = None,
+    microbatches: int = 1,
+):
+    """Returns (init_fn(params) -> TrainState, step_fn(state, batch)).
+
+    ``microbatches > 1``: gradient accumulation — the batch is split on
+    axis 0 and scanned, so live activations scale 1/microbatches at the
+    price of one params-sized gradient buffer (kimi-k2 memory fit,
+    EXPERIMENTS.md §Perf)."""
+    comp = compressor or ErrorFeedbackCompressor(enabled=False)
+
+    def init_fn(params) -> TrainState:
+        return TrainState(
+            params=params,
+            opt_state=optimizer.init(params),
+            comp_state=comp.init(params),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    def _grads(params, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True
+            )(params, batch)
+            return loss, metrics, grads
+
+        split = jax.tree.map(
+            lambda x: x.reshape(
+                microbatches, x.shape[0] // microbatches, *x.shape[1:]
+            ),
+            batch,
+        )
+
+        def mb_step(acc, mb):
+            (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mb
+            )
+            acc = jax.tree.map(jnp.add, acc, g)
+            return acc, (loss, metrics)
+
+        acc0 = jax.tree.map(jnp.zeros_like, params)
+        acc, (losses, metrics) = jax.lax.scan(mb_step, acc0, split)
+        grads = jax.tree.map(
+            lambda g: g / jnp.asarray(microbatches, g.dtype), acc
+        )
+        metrics = jax.tree.map(jnp.mean, metrics)
+        return jnp.mean(losses), metrics, grads
+
+    def step_fn(state: TrainState, batch: Dict):
+        loss, metrics, grads = _grads(state.params, batch)
+        grads, comp_state = comp.apply(grads, state.comp_state)
+        params, opt_state, opt_metrics = optimizer.update(
+            grads, state.opt_state, state.params
+        )
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return (
+            TrainState(
+                params=params,
+                opt_state=opt_state,
+                comp_state=comp_state,
+                step=state.step + 1,
+            ),
+            metrics,
+        )
+
+    return init_fn, step_fn

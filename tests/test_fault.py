@@ -1,0 +1,62 @@
+"""Fault-tolerance plans: heartbeat bookkeeping, elastic remesh, and the
+privacy consequences of replica loss (d shrinks, adversary doesn't)."""
+
+import math
+
+import pytest
+
+from repro.core import accounting
+from repro.dist.fault import FleetState, pir_degraded_privacy, plan_elastic_remesh
+
+
+def test_fleet_heartbeats():
+    f = FleetState(n_pods=4, heartbeat_timeout_s=10.0)
+    for p in range(4):
+        f.heartbeat(p, now=100.0)
+    f.heartbeat(2, now=150.0)  # only pod 2 stays alive
+    assert f.dead_pods(now=155.0) == [0, 1, 3]
+    assert f.alive_pods(now=155.0) == [2]
+
+
+def test_remesh_two_pods_to_one():
+    plan = plan_elastic_remesh([1])
+    assert plan.mesh_shape == (16, 16)
+    assert plan.mesh_axes == ("data", "model")
+    assert plan.global_batch_scale == 1.0
+    assert plan.restore_from_checkpoint
+
+
+def test_remesh_scales_batch_with_pods():
+    plan = plan_elastic_remesh([0, 1, 2])
+    assert plan.mesh_shape == (3, 16, 16)
+    assert plan.mesh_axes == ("pod", "data", "model")
+    assert plan.global_batch_scale == 3.0
+
+
+def test_remesh_no_survivors():
+    with pytest.raises(RuntimeError):
+        plan_elastic_remesh([])
+
+
+def test_pir_degradation_raises_epsilon():
+    base = accounting.epsilon_sparse(0.25, 10, 5)
+    out = pir_degraded_privacy(
+        d=10, d_a=5, failed=2, scheme="sparse", n=1000, theta=0.25
+    )
+    assert out["serviceable"] == 1.0
+    assert out["epsilon"] > base  # fewer honest servers => worse privacy
+    assert out["epsilon"] == pytest.approx(
+        accounting.epsilon_sparse(0.25, 8, 5)
+    )
+
+
+def test_pir_degradation_unserviceable_below_da():
+    out = pir_degraded_privacy(
+        d=10, d_a=5, failed=5, scheme="sparse", n=1000, theta=0.25
+    )
+    assert out["serviceable"] == 0.0 and math.isinf(out["epsilon"])
+
+
+def test_pir_degradation_chor_stays_perfect_until_da():
+    out = pir_degraded_privacy(d=10, d_a=5, failed=4, scheme="chor", n=1000)
+    assert out["epsilon"] == 0.0 and out["serviceable"] == 1.0

@@ -1,0 +1,205 @@
+"""Per-architecture smoke tests: every assigned arch instantiates a REDUCED
+config of the same family and runs one forward/train step on CPU, asserting
+output shapes and no NaNs (brief deliverable f)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, list_archs
+from repro.data import pipeline as pipe
+from repro.models import gnn, recsys as R, transformer as T
+
+LM_ARCHS = [
+    "smollm-135m", "gemma2-2b", "mistral-nemo-12b",
+    "moonshot-v1-16b-a3b", "kimi-k2-1t-a32b",
+]
+RECSYS_ARCHS = ["dien", "fm", "dlrm-rm2", "bert4rec"]
+
+
+def _finite(x):
+    return bool(jnp.isfinite(x).all())
+
+
+# ------------------------------------------------------------------- LM
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_train_and_serve(arch):
+    mod = get_arch(arch)
+    cfg = mod.reduced()
+    assert cfg.name == mod.CONFIG.name
+    params = T.init_lm(jax.random.key(0), cfg)
+    batch = pipe.lm_batch(cfg, batch=2, seq_len=16, seed=0, step=0)
+    toks = jnp.asarray(batch["tokens"])
+
+    loss, metrics = jax.jit(lambda p, t: T.train_loss(p, cfg, t))(params, toks)
+    assert loss.shape == () and _finite(loss) and float(loss) > 0
+
+    logits, cache = jax.jit(lambda p, t: T.prefill(p, cfg, t, 32))(params, toks)
+    assert logits.shape == (2, cfg.vocab) and _finite(logits)
+    assert cache.k.shape == (cfg.n_layers, 2, 32, cfg.n_kv_heads, cfg.head_dim)
+
+    lg, cache2 = jax.jit(lambda p, c, t: T.decode_step(p, cfg, c, t, 16))(
+        params, cache, toks[:, :1]
+    )
+    assert lg.shape == (2, cfg.vocab) and _finite(lg)
+    # the cache was actually written at position 16
+    assert not np.allclose(np.asarray(cache2.k[:, :, 16]), 0.0)
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_full_config_matches_brief(arch):
+    cfg = get_arch(arch).CONFIG
+    spec = {
+        "smollm-135m": (30, 576, 9, 3, 1536, 49152, False),
+        "gemma2-2b": (26, 2304, 8, 4, 9216, 256000, False),
+        "mistral-nemo-12b": (40, 5120, 32, 8, 14336, 131072, False),
+        "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840, True),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840, True),
+    }[arch]
+    assert (
+        cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+        cfg.d_ff, cfg.vocab, cfg.moe,
+    ) == spec
+    if arch == "moonshot-v1-16b-a3b":
+        assert (cfg.n_experts, cfg.top_k) == (64, 6)
+    if arch == "kimi-k2-1t-a32b":
+        assert (cfg.n_experts, cfg.top_k) == (384, 8)
+        assert cfg.params_dense > 0.9e12  # the "1t" in the name
+        assert cfg.params_active < 40e9   # the "a32b"
+    if arch == "gemma2-2b":
+        assert cfg.local_global and cfg.attn_softcap == 50.0
+
+
+def test_gemma2_local_global_differs():
+    """Local/global alternation must actually change the math."""
+    mod = get_arch("gemma2-2b")
+    cfg = mod.reduced()
+    cfg_global = dataclasses.replace(cfg, local_global=False)
+    params = T.init_lm(jax.random.key(0), cfg)
+    toks = jnp.asarray(pipe.lm_batch(cfg, 2, 16, 0, 0)["tokens"])
+    l1, _ = T.train_loss(params, cfg, toks)
+    l2, _ = T.train_loss(params, cfg_global, toks)
+    assert not np.isclose(float(l1), float(l2))
+
+
+# ------------------------------------------------------------------ GNN
+def test_gcn_smoke_full_graph():
+    mod = get_arch("gcn-cora")
+    cfg = mod.reduced()
+    g = pipe.gnn_full_graph(n_nodes=100, n_edges=400, d_feat=32, n_classes=7, seed=0)
+    params = gnn.gcn_init(jax.random.key(0), cfg, 32)
+    logits = jax.jit(
+        lambda p, f, s, d, w, m: gnn.gcn_apply(p, cfg, f, s, d, w, m)
+    )(params, *map(jnp.asarray, (g["feats"], g["src"], g["dst"], g["edge_w"], g["mean_deg"])))
+    assert logits.shape == (100, 7) and _finite(logits)
+    loss = gnn.node_xent(logits, jnp.asarray(g["labels"]), jnp.asarray(g["label_mask"]))
+    assert _finite(loss) and float(loss) > 0
+
+
+def test_gcn_smoke_minibatch_sampler():
+    mod = get_arch("gcn-cora")
+    cfg = mod.reduced()
+    sampler = pipe.NeighborSampler.random_graph(
+        n_nodes=500, avg_degree=8, d_feat=16, n_classes=7, fanouts=(5, 3)
+    )
+    sub = sampler.sample(np.arange(8), step=0)
+    n_sub, e_sub = pipe.NeighborSampler.subgraph_shapes(8, 5, 3, 16)
+    assert sub["feats"].shape == (n_sub, 16)
+    assert sub["src"].shape == (e_sub,)
+    params = gnn.gcn_init(jax.random.key(0), cfg, 16)
+    logits = gnn.gcn_apply(
+        params, cfg, jnp.asarray(sub["feats"]), jnp.asarray(sub["src"]),
+        jnp.asarray(sub["dst"]), jnp.asarray(sub["edge_w"]),
+    )
+    loss = gnn.node_xent(
+        logits, jnp.asarray(sub["labels"]), jnp.asarray(sub["seed_mask"])
+    )
+    assert _finite(loss)
+    # local ids must be in range
+    assert sub["src"].max() < n_sub and sub["dst"].max() < n_sub
+
+
+def test_gcn_smoke_molecule():
+    mod = get_arch("gcn-cora")
+    cfg = dataclasses.replace(mod.reduced(), n_classes=2)
+    b = pipe.molecule_batch(batch=8, n_nodes=30, n_edges=64, d_feat=32,
+                            n_classes=2, seed=0, step=0)
+    params = gnn.gcn_init(jax.random.key(0), cfg, 32)
+    logits = jax.jit(
+        lambda p, f, s, d, w: gnn.batched_graph_apply(p, cfg, f, s, d, w)
+    )(params, *map(jnp.asarray, (b["feats"], b["src"], b["dst"], b["edge_w"])))
+    assert logits.shape == (8, 2) and _finite(logits)
+    assert _finite(gnn.graph_xent(logits, jnp.asarray(b["labels"])))
+
+
+# --------------------------------------------------------------- recsys
+@pytest.mark.parametrize("arch", RECSYS_ARCHS)
+def test_recsys_smoke_train(arch):
+    mod = get_arch(arch)
+    cfg = mod.reduced()
+    if cfg.model == "bert4rec":
+        batch = {k: jnp.asarray(v) for k, v in
+                 pipe.bert4rec_batch(cfg, 8, seed=0, step=0).items()}
+        params = R.bert4rec_init(jax.random.key(0), cfg)
+        loss = jax.jit(lambda p, b: R.bert4rec_masked_xent(p, cfg, b))(params, batch)
+    else:
+        batch = {k: jnp.asarray(v) for k, v in
+                 pipe.recsys_batch(cfg, 8, seed=0, step=0).items()}
+        init, score = {
+            "fm": (R.fm_init, R.fm_score),
+            "dlrm": (R.dlrm_init, R.dlrm_score),
+            "dien": (R.dien_init, R.dien_score),
+        }[cfg.model]
+        params = init(jax.random.key(0), cfg)
+        logits = jax.jit(lambda p, b: score(p, cfg, b))(params, batch)
+        assert logits.shape == (8,) and _finite(logits)
+        loss = R.bce_loss(logits, batch["label"])
+    assert loss.shape == () and _finite(loss) and float(loss) > 0
+
+
+@pytest.mark.parametrize("arch", RECSYS_ARCHS)
+def test_recsys_retrieval_tower(arch):
+    mod = get_arch(arch)
+    cfg = mod.reduced()
+    if cfg.model == "bert4rec":
+        params = R.bert4rec_init(jax.random.key(0), cfg)
+        batch = {k: jnp.asarray(v) for k, v in
+                 pipe.bert4rec_batch(cfg, 2, seed=0, step=0).items()}
+    else:
+        params = {
+            "fm": R.fm_init, "dlrm": R.dlrm_init, "dien": R.dien_init
+        }[cfg.model](jax.random.key(0), cfg)
+        batch = {k: jnp.asarray(v) for k, v in
+                 pipe.recsys_batch(cfg, 2, seed=0, step=0).items()}
+    uv = R.user_vector(params, cfg, batch)
+    assert uv.shape == (2, cfg.embed_dim)
+    cand = jax.random.normal(jax.random.key(1), (1000, cfg.embed_dim))
+    scores = R.retrieval_scores(uv, cand)
+    assert scores.shape == (2, 1000) and _finite(scores)
+
+
+def test_recsys_full_configs_match_brief():
+    assert get_arch("dien").CONFIG.gru_dim == 108
+    assert get_arch("dien").CONFIG.embed_dim == 18
+    assert get_arch("fm").CONFIG.n_sparse == 39
+    dlrm = get_arch("dlrm-rm2").CONFIG
+    assert (dlrm.n_dense, dlrm.n_sparse, dlrm.embed_dim) == (13, 26, 64)
+    assert dlrm.bot_mlp == (512, 256, 64) and dlrm.top_mlp == (512, 512, 256, 1)
+    b4 = get_arch("bert4rec").CONFIG
+    assert (b4.embed_dim, b4.n_blocks, b4.n_heads, b4.seq_len) == (64, 2, 2, 200)
+
+
+def test_registry_covers_all_assigned():
+    assert set(LM_ARCHS + RECSYS_ARCHS + ["gcn-cora", "pir-ct"]) <= set(list_archs())
+
+
+def test_data_pipeline_deterministic():
+    cfg = get_arch("dlrm-rm2").reduced()
+    a = pipe.recsys_batch(cfg, 4, seed=7, step=3)
+    b = pipe.recsys_batch(cfg, 4, seed=7, step=3)
+    c = pipe.recsys_batch(cfg, 4, seed=7, step=4)
+    np.testing.assert_array_equal(a["ids"], b["ids"])
+    assert not np.array_equal(a["ids"], c["ids"])

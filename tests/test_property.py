@@ -1,0 +1,127 @@
+"""Hypothesis property tests over the system's invariants."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import accounting as acc
+from repro.core import chor, sparse
+from repro.db import packing
+from repro.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ------------------------------------------------------------- packing
+@given(
+    st.integers(1, 8).map(lambda r: r * 7 + 1),  # n in 8..57
+    st.integers(1, 70),  # bits
+    st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_pack_unpack_roundtrip(n, bits, seed):
+    rng = np.random.default_rng(seed)
+    raw = rng.integers(0, 2, size=(n, bits)).astype(np.uint8)
+    packed = packing.pack_bits(jnp.asarray(raw))
+    back = np.asarray(packing.unpack_bits(packed, bits))
+    np.testing.assert_array_equal(back, raw)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_bitcast_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(5, 4)).astype(np.float32))
+    y = packing.bitcast_u32_to_f32(packing.bitcast_f32_to_u32(x))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+
+# ------------------------------------------------------------ GF(2) laws
+@given(st.integers(0, 2**31 - 1), st.integers(2, 48), st.integers(1, 6))
+@settings(**SETTINGS)
+def test_xor_fold_linearity(seed, n, w):
+    """fold(db, m1 ^ m2) == fold(db, m1) ^ fold(db, m2) — GF(2) linearity,
+    the algebraic property Chor correctness rests on."""
+    rng = np.random.default_rng(seed)
+    db = jnp.asarray(rng.integers(0, 2**32, size=(n, w), dtype=np.uint32))
+    m1 = jnp.asarray(rng.integers(0, 2, size=(3, n)).astype(np.uint8))
+    m2 = jnp.asarray(rng.integers(0, 2, size=(3, n)).astype(np.uint8))
+    lhs = ref.xor_fold_ref(db, m1 ^ m2)
+    rhs = ref.xor_fold_ref(db, m1) ^ ref.xor_fold_ref(db, m2)
+    np.testing.assert_array_equal(np.asarray(lhs), np.asarray(rhs))
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 32), st.integers(2, 6))
+@settings(**SETTINGS)
+def test_chor_reconstruction_property(seed, n, d):
+    rng = np.random.default_rng(seed)
+    db = jnp.asarray(rng.integers(0, 2**32, size=(n, 3), dtype=np.uint32))
+    q = jnp.asarray([int(rng.integers(0, n))])
+    pk = chor.gen_queries(jax.random.key(seed % 1000), n, d, q)
+    masks = chor.query_masks(pk, n)
+    resp = jax.vmap(lambda m: ref.xor_fold_ref(db, m))(masks)
+    got = np.asarray(chor.reconstruct(resp))[0]
+    np.testing.assert_array_equal(got, np.asarray(db)[int(q[0])])
+
+
+@given(
+    st.integers(0, 2**31 - 1),
+    st.integers(4, 24),
+    st.integers(2, 5),
+    st.floats(0.05, 0.5),
+)
+@settings(**SETTINGS)
+def test_sparse_parity_property(seed, n, d, theta):
+    """Every sampled query matrix XORs to one-hot(Q) — for all θ, d, n."""
+    q = jnp.asarray([seed % n])
+    m = np.asarray(
+        sparse.gen_query_matrix(jax.random.key(seed % 997), n, d, theta, q)
+    )
+    parity = m.sum(axis=0)[0] % 2
+    want = np.zeros(n, int)
+    want[seed % n] = 1
+    np.testing.assert_array_equal(parity, want)
+
+
+# -------------------------------------------------------- accounting laws
+@given(st.floats(0.01, 0.49), st.integers(2, 60), st.integers(0, 59))
+@settings(**SETTINGS)
+def test_sparse_epsilon_monotonicity(theta, d, d_a):
+    if d_a >= d:
+        d_a = d - 1
+    e1 = acc.epsilon_sparse(theta, d, d_a)
+    # larger theta (denser) => never worse privacy
+    e2 = acc.epsilon_sparse(min(0.5, theta + 0.05), d, d_a)
+    assert e2 <= e1 + 1e-12
+    assert e1 >= 0.0
+
+
+@given(st.floats(0.0, 6.0), st.integers(1, 10**6))
+@settings(**SETTINGS)
+def test_composition_bounds(eps1, u):
+    e2 = acc.compose_with_anonymity(eps1, u)
+    assert -1e-9 <= e2 <= 2 * eps1 + 1e-9  # never worse than 2·ε₁, never < 0
+
+
+@given(st.integers(2, 50), st.integers(0, 49), st.integers(2, 50))
+@settings(**SETTINGS)
+def test_subset_delta_is_probability_and_monotone(d, d_a, t):
+    d_a, t = min(d_a, d - 1), min(t, d)
+    delta = acc.delta_subset(d, d_a, t)
+    assert 0.0 <= delta <= 1.0
+    if t < d:
+        assert acc.delta_subset(d, d_a, t + 1) <= delta + 1e-12  # more servers, safer
+
+
+@given(st.integers(3, 1000), st.integers(2, 40), st.integers(0, 39))
+@settings(**SETTINGS)
+def test_direct_epsilon_decreases_in_p(n, d, d_a):
+    d_a = min(d_a, d - 1)
+    ps = [p for p in (d, 2 * d, 4 * d) if p <= n]
+    if len(ps) < 2:
+        return
+    es = [acc.epsilon_direct(n, d, d_a, p) for p in ps]
+    assert es == sorted(es, reverse=True)

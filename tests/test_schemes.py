@@ -1,0 +1,132 @@
+"""Functional correctness: every scheme retrieves exactly the sought record,
+for batches, all schemes through the registry, plus wire-format invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import anonymity, chor, direct, make_scheme, sparse, subset
+from repro.db import make_synthetic_store, packing
+
+
+@pytest.fixture(scope="module")
+def store():
+    return make_synthetic_store(n=128, record_bytes=24, seed=7)
+
+
+def _want(store, q):
+    return np.asarray(store.packed)[np.asarray(q)]
+
+
+@pytest.mark.parametrize("d", [2, 3, 8])
+def test_chor_retrieves(store, d):
+    q = jnp.array([0, 1, 63, 127])
+    got = np.asarray(chor.retrieve(jax.random.key(d), store, d, q))
+    np.testing.assert_array_equal(got, _want(store, q))
+
+
+def test_chor_request_vectors_xor_to_onehot(store):
+    q = jnp.array([5, 99])
+    pk = chor.gen_queries(jax.random.key(0), store.n, 4, q)
+    masks = chor.query_masks(pk, store.n)  # [d, B, n]
+    tot = np.asarray(masks).sum(axis=0) % 2
+    want = np.zeros_like(tot)
+    want[np.arange(2), np.asarray(q)] = 1
+    np.testing.assert_array_equal(tot, want)
+
+
+@pytest.mark.parametrize("theta", [0.1, 0.25, 0.5])
+@pytest.mark.parametrize("d", [2, 5])
+def test_sparse_retrieves(store, theta, d):
+    q = jnp.array([3, 64, 127])
+    got = np.asarray(
+        sparse.retrieve(jax.random.key(int(theta * 100)), store, d, theta, q)
+    )
+    np.testing.assert_array_equal(got, _want(store, q))
+
+
+def test_sparse_matrix_parity_and_weight():
+    n, d, theta, b = 256, 6, 0.2, 8
+    m = np.asarray(
+        sparse.gen_query_matrix(jax.random.key(1), n, d, theta, jnp.arange(b))
+    )  # [d, B, n]
+    col = m.sum(axis=0)  # [B, n] column weights
+    parity = col % 2
+    want = np.zeros((b, n), int)
+    want[np.arange(b), np.arange(b)] = 1
+    np.testing.assert_array_equal(parity, want)
+    # row weight concentrates near θ·n
+    mean_weight = m.sum(axis=2).mean()
+    assert abs(mean_weight - theta * n) < 4 * np.sqrt(n * theta * (1 - theta))
+
+
+@pytest.mark.parametrize("p", [4, 16, 64])
+def test_direct_retrieves(store, p):
+    q = jnp.array([17, 90])
+    got = np.asarray(direct.retrieve(jax.random.key(p), store, 4, p, q))
+    np.testing.assert_array_equal(got, _want(store, q))
+
+
+def test_direct_requests_distinct_and_contain_q(store):
+    q = jnp.array([11, 12, 13])
+    reqs = np.asarray(direct.gen_queries(jax.random.key(9), store.n, 4, 32, q))
+    flat = reqs.transpose(1, 0, 2).reshape(3, -1)
+    for b in range(3):
+        assert len(set(flat[b].tolist())) == 32  # distinct
+        assert int(q[b]) in flat[b].tolist()
+
+
+@pytest.mark.parametrize("t", [2, 4])
+def test_subset_retrieves(store, t):
+    q = jnp.array([42])
+    got = np.asarray(subset.retrieve(jax.random.key(t), store, 8, t, q))
+    np.testing.assert_array_equal(got, _want(store, q))
+
+
+@pytest.mark.parametrize(
+    "name,kw",
+    [
+        ("chor", {}),
+        ("sparse", dict(theta=0.25)),
+        ("as-sparse", dict(theta=0.25, u=100)),
+        ("direct", dict(p=16)),
+        ("as-direct", dict(p=16, u=100)),
+        ("subset", dict(t=3)),
+    ],
+)
+def test_registry_end_to_end(store, name, kw):
+    sch = make_scheme(name, d=4, d_a=2, **kw)
+    q = jnp.array([7, 70])
+    got = np.asarray(sch.retrieve(jax.random.key(5), store, q))
+    np.testing.assert_array_equal(got, _want(store, q))
+    assert sch.epsilon(store.n) >= 0.0
+    assert 0.0 <= sch.delta(store.n) <= 1.0
+    assert sch.costs(store.n)["C_m"] > 0
+
+
+def test_registry_validation():
+    with pytest.raises(ValueError):
+        make_scheme("sparse", d=4, d_a=2)  # missing theta
+    with pytest.raises(ValueError):
+        make_scheme("direct", d=4, d_a=2, p=10)  # p not multiple of d
+    with pytest.raises(ValueError):
+        make_scheme("subset", d=4, d_a=2, t=9)  # t > d
+    with pytest.raises(ValueError):
+        make_scheme("nope", d=4, d_a=2)
+
+
+def test_anonymity_roundtrip():
+    ch = anonymity.AnonymityChannel(key=jax.random.key(3))
+    msgs = jnp.arange(10 * 4).reshape(10, 4)
+    out = ch.forward(msgs)
+    assert not np.array_equal(np.asarray(out), np.asarray(msgs))  # permuted
+    back = ch.backward(out)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(msgs))
+
+
+def test_packing_roundtrip_np():
+    rng = np.random.default_rng(0)
+    raw = rng.integers(0, 256, size=(13, 17), dtype=np.uint8)
+    packed = packing.pack_bytes_np(raw)
+    np.testing.assert_array_equal(packing.unpack_bytes_np(packed, 17), raw)

@@ -1,0 +1,190 @@
+"""Training/serving substrate tests: optimizers converge, compression is
+error-bounded, checkpoints are atomic/exact-resume, the engine enforces
+budgets and dodges stragglers."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import make_scheme
+from repro.core.accounting import PrivacyBudget
+from repro.data import pipeline as pipe
+from repro.db import make_synthetic_store
+from repro.models import transformer as T
+from repro.serve import PIRServingEngine
+from repro.train import (
+    AdamW,
+    Adafactor,
+    CheckpointManager,
+    ErrorFeedbackCompressor,
+    make_train_step,
+)
+from repro.train.optimizer import clip_by_global_norm
+from repro.train.train_step import default_optimizer, lm_loss_fn
+
+
+# ------------------------------------------------------------- optimizers
+def _train(cfg, opt, steps, comp=None, seed=0):
+    params = T.init_lm(jax.random.key(seed), cfg)
+    init_fn, step_fn = make_train_step(lm_loss_fn(cfg), opt, comp)
+    state = init_fn(params)
+    step = jax.jit(step_fn)
+    losses = []
+    for i in range(steps):
+        batch = {"tokens": jnp.asarray(
+            pipe.lm_batch(cfg, 8, 32, seed, i)["tokens"])}
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    return losses, state
+
+
+def test_adamw_reduces_loss():
+    cfg = get_arch("smollm-135m").reduced()
+    losses, _ = _train(cfg, AdamW(lr=1e-3), 30)
+    assert losses[-1] < losses[0] - 0.3
+    assert all(np.isfinite(losses))
+
+
+def test_adafactor_reduces_loss():
+    cfg = get_arch("smollm-135m").reduced()
+    losses, _ = _train(cfg, Adafactor(lr=5e-3), 40)
+    assert losses[-1] < losses[0] - 0.2
+
+
+def test_adafactor_state_is_factored():
+    cfg = get_arch("smollm-135m").reduced()
+    params = T.init_lm(jax.random.key(0), cfg)
+    opt = Adafactor()
+    st = opt.init(params)
+    p_bytes = sum(x.size * 4 for x in jax.tree_util.tree_leaves(params))
+    s_bytes = sum(x.size * 4 for x in jax.tree_util.tree_leaves(st))
+    assert s_bytes < 0.2 * p_bytes  # vs 2× for Adam
+
+
+def test_default_optimizer_selection():
+    assert isinstance(default_optimizer(get_arch("kimi-k2-1t-a32b").CONFIG), Adafactor)
+    assert isinstance(default_optimizer(get_arch("smollm-135m").CONFIG), AdamW)
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((4,), 100.0), "b": jnp.full((2,), -100.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    cn = jnp.sqrt(sum(jnp.sum(x**2) for x in jax.tree_util.tree_leaves(clipped)))
+    assert float(cn) == pytest.approx(1.0, rel=1e-5)
+    assert float(norm) == pytest.approx(np.sqrt(6 * 100.0**2), rel=1e-5)
+
+
+def test_compressed_training_tracks_uncompressed():
+    cfg = get_arch("smollm-135m").reduced()
+    l_plain, _ = _train(cfg, AdamW(lr=1e-3), 25)
+    l_comp, _ = _train(cfg, AdamW(lr=1e-3), 25, comp=ErrorFeedbackCompressor(True))
+    # error feedback keeps compressed training within a small gap
+    assert abs(l_comp[-1] - l_plain[-1]) < 0.25
+    assert l_comp[-1] < l_comp[0] - 0.3
+
+
+def test_error_feedback_is_unbiased_over_time():
+    comp = ErrorFeedbackCompressor(True)
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(64,)) * 1e-3)}
+    err = comp.init(g)
+    acc = jnp.zeros((64,))
+    for _ in range(50):
+        g_hat, err = comp.apply(g, err)
+        acc = acc + g_hat["w"]
+    # accumulated compressed grads ≈ accumulated true grads
+    np.testing.assert_allclose(
+        np.asarray(acc), np.asarray(g["w"]) * 50, rtol=0.05, atol=1e-4
+    )
+
+
+# ------------------------------------------------------------ checkpoints
+def test_checkpoint_atomic_and_gc():
+    cfg = get_arch("smollm-135m").reduced()
+    _, state = _train(cfg, AdamW(lr=1e-3), 2)
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, state)
+        assert mgr.all_steps() == [3, 4]  # GC kept last 2
+        restored, man = mgr.restore(state)
+        assert man["step"] == 4
+        for a, b in zip(jax.tree_util.tree_leaves(state),
+                        jax.tree_util.tree_leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # no stray tmp dirs (atomicity)
+        assert not [x for x in os.listdir(d) if x.startswith("tmp-")]
+
+
+def test_exact_resume_reproduces_run():
+    cfg = get_arch("smollm-135m").reduced()
+    params = T.init_lm(jax.random.key(0), cfg)
+    init_fn, step_fn = make_train_step(lm_loss_fn(cfg), AdamW(lr=1e-3))
+    step = jax.jit(step_fn)
+
+    def run(state, lo, hi):
+        last = None
+        for i in range(lo, hi):
+            batch = {"tokens": jnp.asarray(
+                pipe.lm_batch(cfg, 8, 32, 0, i)["tokens"])}
+            state, m = step(state, batch)
+            last = float(m["loss"])
+        return state, last
+
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        state, _ = run(init_fn(params), 0, 10)
+        mgr.save(10, state, extra={"seed": 0}, blocking=False)
+        _, loss_a = run(state, 10, 20)          # uninterrupted
+        restored, man = mgr.restore(init_fn(params))
+        _, loss_b = run(restored, man["step"], 20)  # crash + resume
+        assert loss_a == pytest.approx(loss_b, rel=1e-6)
+
+
+# ---------------------------------------------------------------- engine
+def test_engine_budget_enforcement():
+    store = make_synthetic_store(128, 16, seed=0)
+    sch = make_scheme("sparse", d=4, d_a=2, theta=0.25)
+    eps = sch.epsilon(store.n)
+    eng = PIRServingEngine(
+        store, sch,
+        default_budget=lambda: PrivacyBudget(epsilon_limit=2.5 * eps),
+    )
+    assert eng.submit("c", 1) and eng.submit("c", 2)
+    assert not eng.submit("c", 3)  # third exceeds 2.5×eps
+    assert eng.metrics["refused"] == 1
+
+
+def test_engine_straggler_avoidance():
+    store = make_synthetic_store(256, 16, seed=1)
+    sch = make_scheme("subset", d=8, d_a=3, t=3)
+    slow = {2, 5}
+    lat = {i: (0.05 if i in slow else 0.001) for i in range(8)}
+    eng = PIRServingEngine(store, sch, simulate_latency=lambda s: lat[s])
+    for _ in range(5):  # warm the latency EMAs across replicas
+        eng.submit("c", 7)
+        out = eng.flush()
+    assert (out["c"] == store.record_bytes(7)).all()
+    chosen = set(eng.fastest_servers(3))
+    assert not (chosen & slow), f"straggler chosen: {chosen}"
+
+
+def test_engine_all_schemes_correct():
+    store = make_synthetic_store(512, 24, seed=2)
+    for name, kw in [
+        ("chor", {}),
+        ("sparse", dict(theta=0.3)),
+        ("direct", dict(p=20)),
+        ("subset", dict(t=3)),
+        ("as-sparse", dict(theta=0.3, u=64)),
+    ]:
+        eng = PIRServingEngine(store, make_scheme(name, d=5, d_a=2, **kw))
+        eng.submit("x", 99)
+        eng.submit("y", 500)
+        out = eng.flush()
+        assert (out["x"] == store.record_bytes(99)).all(), name
+        assert (out["y"] == store.record_bytes(500)).all(), name
