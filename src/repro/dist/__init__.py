@@ -1,0 +1,67 @@
+"""repro.dist — sharding rules, collectives, param specs, fault plans.
+
+The load-bearing layer under models/, launch/, train/ and serve/: model
+code names *logical* axes, this package maps them onto whatever mesh is
+active (none, the 8-device test mesh, or the 256/512-chip production
+meshes) with semantics-preserving sharded implementations. Every sharded
+path is proven equal to its single-device reference in
+tests/_multidevice_checks.py.
+"""
+
+from repro.dist import collectives, fault, params, sharding
+from repro.dist.collectives import (
+    compressed_psum,
+    dequantize_int8,
+    quantize_int8,
+    sharded_table_lookup,
+    sharded_vocab_lookup,
+)
+from repro.dist.fault import FleetState, pir_degraded_privacy, plan_elastic_remesh
+# the function shadows the submodule attribute on purpose: `from repro.dist
+# import flash_decode` gives the callable; the module stays importable as
+# `repro.dist.flash_decode` via sys.modules
+from repro.dist.flash_decode import flash_decode
+from repro.dist.params import (
+    generic_param_specs,
+    lm_param_specs,
+    tree_named_shardings,
+)
+from repro.dist.sharding import (
+    DEFAULT_RULES,
+    MULTIPOD_RULES,
+    axis_size,
+    constrain,
+    current_mesh,
+    current_rules,
+    logical_to_spec,
+    mesh_axis_names,
+    mesh_rules,
+)
+
+__all__ = [
+    "DEFAULT_RULES",
+    "MULTIPOD_RULES",
+    "FleetState",
+    "axis_size",
+    "collectives",
+    "compressed_psum",
+    "constrain",
+    "current_mesh",
+    "current_rules",
+    "dequantize_int8",
+    "fault",
+    "flash_decode",
+    "generic_param_specs",
+    "lm_param_specs",
+    "logical_to_spec",
+    "mesh_axis_names",
+    "mesh_rules",
+    "params",
+    "pir_degraded_privacy",
+    "plan_elastic_remesh",
+    "quantize_int8",
+    "sharded_table_lookup",
+    "sharded_vocab_lookup",
+    "sharding",
+    "tree_named_shardings",
+]

@@ -1,0 +1,140 @@
+"""Hand-written collectives for the sharded hot paths.
+
+Three families:
+
+* **Vocab-sharded lookups** (:func:`sharded_vocab_lookup` for LM embedding
+  tables, :func:`sharded_table_lookup` for RecSys tables): each shard owns
+  a contiguous row range, answers only the ids that land in its range, and
+  the partial rows are psum'd — one [ids, D] all-reduce instead of
+  all-gathering the table. Exactly one shard contributes each row (the
+  rest add 0.0), so the result is bit-exact vs ``jnp.take``.
+
+* **Compressed gradient all-reduce** (:func:`compressed_psum` +
+  :func:`quantize_int8` / :func:`dequantize_int8`): int8 wire format with
+  a shared pmax'd scale. Pairs with train.optimizer.ErrorFeedbackCompressor
+  which makes the update *sequence* unbiased.
+
+All entry points degrade to their single-device reference when no mesh is
+active, the logical axis is unmapped, or shapes don't divide — identical
+numerics, asserted in tests/_multidevice_checks.py.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import current_mesh, mesh_axis_names
+
+__all__ = [
+    "sharded_vocab_lookup",
+    "sharded_table_lookup",
+    "compressed_psum",
+    "quantize_int8",
+    "dequantize_int8",
+]
+
+
+# --------------------------------------------------------------------------
+# Vocab-sharded lookups
+# --------------------------------------------------------------------------
+def _sharded_lookup(table: jnp.ndarray, ids: jnp.ndarray, vocab_logical: str):
+    # clamp ids in EVERY path: out-of-range ids would otherwise behave
+    # differently on-mesh (no shard owns them -> psum of zeros) vs off-mesh
+    # (jnp.take's jit default fills NaN) — lookups must not depend on mesh
+    ids = jnp.clip(ids, 0, table.shape[0] - 1)
+
+    mesh = current_mesh()
+    vaxes = mesh_axis_names(vocab_logical)
+    if mesh is None or not vaxes:
+        return jnp.take(table, ids, axis=0)
+
+    v = table.shape[0]
+    vshards = math.prod(mesh.shape[a] for a in vaxes)
+    if vshards <= 1 or v % vshards != 0:
+        # can't row-shard evenly (e.g. dien's 18-dim table on 16-way TP)
+        return jnp.take(table, ids, axis=0)
+    v_loc = v // vshards
+
+    baxes = tuple(a for a in mesh_axis_names("batch") if a not in vaxes)
+    bshards = math.prod(mesh.shape[a] for a in baxes) if baxes else 1
+    if baxes and ids.shape[0] % bshards != 0:
+        baxes = ()
+
+    ids_spec = P(baxes or None, *([None] * (ids.ndim - 1)))
+    out_spec = P(baxes or None, *([None] * ids.ndim))
+
+    @partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(P(vaxes, *([None] * (table.ndim - 1))), ids_spec),
+        out_specs=out_spec,
+        check_rep=False,
+    )
+    def _lookup(tbl, idl):
+        lin = jnp.int32(0)
+        for a in vaxes:
+            lin = lin * mesh.shape[a] + jax.lax.axis_index(a)
+        rel = idl - lin * v_loc
+        ok = (rel >= 0) & (rel < v_loc)
+        rows = jnp.take(tbl, jnp.clip(rel, 0, v_loc - 1), axis=0)
+        rows = jnp.where(ok[..., None], rows, jnp.zeros((), rows.dtype))
+        return jax.lax.psum(rows, vaxes)
+
+    return _lookup(table, ids)
+
+
+def sharded_vocab_lookup(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """LM token-embedding gather. table: [V, D] (rows sharded over the
+    "vocab" rule); ids: int32 [...] (lead dim sharded over "batch").
+    Returns [..., D], bit-exact vs ``jnp.take(table, ids, axis=0)`` for
+    in-range ids; out-of-range ids clamp (identically on and off mesh)."""
+    return _sharded_lookup(table, ids, "vocab")
+
+
+def sharded_table_lookup(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """RecSys embedding-table gather, rows sharded over "table_vocab"."""
+    return _sharded_lookup(table, ids, "table_vocab")
+
+
+# --------------------------------------------------------------------------
+# int8 compression + compressed all-reduce
+# --------------------------------------------------------------------------
+def quantize_int8(
+    x: jnp.ndarray, scale: jnp.ndarray | None = None
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-tensor symmetric int8: returns (q int8, scale f32 scalar) with
+    x ≈ q·scale, |error| ≤ scale/2 elementwise. Pass ``scale`` to quantize
+    onto a shared grid (compressed_psum pmax-shares it across shards)."""
+    xf = x.astype(jnp.float32)
+    if scale is None:
+        scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127.0, 127.0).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(x: jnp.ndarray, axis_names) -> jnp.ndarray:
+    """int8-compressed psum — call INSIDE shard_map over ``axis_names``.
+
+    The scale is pmax-shared first so every shard quantizes onto the same
+    grid; the int8 payloads then sum losslessly in int32 (what crosses the
+    wire is the 1-byte tensor + one scalar). Total error is bounded by
+    ``n_shards · scale/2`` elementwise — asserted in the multidevice checks.
+    """
+    axes = tuple(axis_names) if not isinstance(axis_names, str) else (axis_names,)
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-30) / 127.0
+    scale = jax.lax.pmax(scale, axes)
+    q, _ = quantize_int8(xf, scale)
+    acc = jax.lax.psum(q.astype(jnp.int32), axes)
+    return (acc.astype(jnp.float32) * scale).astype(x.dtype)

@@ -1,0 +1,172 @@
+"""Fault tolerance: heartbeats, elastic remesh plans, and what replica loss
+does to privacy.
+
+The paper's threat model fixes d_a corrupt servers *by assumption*; fleet
+operations don't get that luxury. When a pod (= one PIR replica group)
+drops out, the scheme keeps serving with d' = d − failed servers — but the
+adversary doesn't shrink, so ε degrades exactly as the closed forms say
+with d' substituted for d (cf. the multi-server trade-offs in
+"Multi-Server Weakly-Private Information Retrieval"). Once d' ≤ d_a every
+surviving server may be corrupt and privacy is gone (ε = ∞): the planner
+must refuse to serve, not degrade silently. :func:`pir_degraded_privacy`
+computes both facts from the same `core.accounting` formulas the configs
+use, so ops and accounting can never disagree (asserted in
+tests/test_fault.py).
+
+:func:`plan_elastic_remesh` is the training-side analogue: survivors are
+reassembled into a smaller mesh (checkpoints are topology-free, see
+train.checkpoint) and the global batch rescales with pod count.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence
+
+from repro.core import accounting
+
+__all__ = [
+    "POD_MESH_SHAPE",
+    "POD_MESH_AXES",
+    "FleetState",
+    "RemeshPlan",
+    "plan_elastic_remesh",
+    "pir_degraded_privacy",
+]
+
+# One production pod (repro.launch.mesh): 16×16 chips, ("data", "model").
+POD_MESH_SHAPE = (16, 16)
+POD_MESH_AXES = ("data", "model")
+
+
+# --------------------------------------------------------------------------
+# Heartbeats
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class FleetState:
+    """Last-heartbeat bookkeeping for n_pods replica groups.
+
+    A pod that has never heartbeated is dead (conservative: a booting pod
+    must prove liveness before the planner counts on it).
+    """
+
+    n_pods: int
+    heartbeat_timeout_s: float = 30.0
+    last_beat: Dict[int, float] = dataclasses.field(default_factory=dict)
+
+    def heartbeat(self, pod: int, now: float) -> None:
+        if not (0 <= pod < self.n_pods):
+            raise ValueError(f"pod {pod} out of range [0, {self.n_pods})")
+        self.last_beat[pod] = max(now, self.last_beat.get(pod, -math.inf))
+
+    def _alive(self, pod: int, now: float) -> bool:
+        last = self.last_beat.get(pod)
+        return last is not None and now - last <= self.heartbeat_timeout_s
+
+    def alive_pods(self, now: float) -> List[int]:
+        return [p for p in range(self.n_pods) if self._alive(p, now)]
+
+    def dead_pods(self, now: float) -> List[int]:
+        return [p for p in range(self.n_pods) if not self._alive(p, now)]
+
+
+# --------------------------------------------------------------------------
+# Elastic remesh
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    survivors: tuple
+    mesh_shape: tuple
+    mesh_axes: tuple
+    global_batch_scale: float
+    restore_from_checkpoint: bool = True
+
+
+def plan_elastic_remesh(alive_pods: Sequence[int]) -> RemeshPlan:
+    """Plan the post-failure topology from the surviving pod ids.
+
+    One pod collapses to the plain ("data", "model") pod mesh; k > 1 pods
+    keep a leading data-parallel "pod" axis of size k. The global batch
+    scales linearly with pod count (the "pod" axis is pure DP), and the
+    restart always goes through a checkpoint restore — checkpoints are
+    topology-free, so restoring onto the new mesh is the normal path.
+    """
+    survivors = tuple(sorted(alive_pods))
+    k = len(survivors)
+    if k == 0:
+        raise RuntimeError("no surviving pods: nothing to remesh onto")
+    if k == 1:
+        shape, axes = POD_MESH_SHAPE, POD_MESH_AXES
+    else:
+        shape = (k,) + POD_MESH_SHAPE
+        axes = ("pod",) + POD_MESH_AXES
+    return RemeshPlan(
+        survivors=survivors,
+        mesh_shape=shape,
+        mesh_axes=axes,
+        global_batch_scale=float(k),
+        restore_from_checkpoint=True,
+    )
+
+
+# --------------------------------------------------------------------------
+# Privacy under replica loss
+# --------------------------------------------------------------------------
+def pir_degraded_privacy(
+    *,
+    d: int,
+    d_a: int,
+    failed: int,
+    scheme: str,
+    n: int,
+    theta: Optional[float] = None,
+    p: Optional[int] = None,
+    t: Optional[int] = None,
+    u: int = 1,
+) -> Dict[str, float]:
+    """Privacy of a d-server deployment after ``failed`` servers drop.
+
+    The d' = d − failed survivors keep answering; d_a (the adversary) is
+    unchanged — failures are assumed to hit honest servers, the worst case.
+    Returns ``{"d_effective", "serviceable", "epsilon", "delta"}``:
+    serviceable == 0.0 (and ε = ∞) once d' ≤ d_a, because privacy would
+    rest entirely on corrupt servers; the engine must stop admitting
+    queries rather than serve at ε = ∞.
+    """
+    if not (0 <= failed <= d):
+        raise ValueError(f"need 0 <= failed <= d, got failed={failed}, d={d}")
+    d_eff = d - failed
+    out: Dict[str, float] = {"d_effective": float(d_eff), "delta": 0.0}
+
+    if d_eff <= d_a or d_eff < 1:
+        out.update(serviceable=0.0, epsilon=math.inf)
+        return out
+
+    scheme = scheme.lower()
+    if scheme in ("chor", "it-pir"):
+        # information-theoretic: perfect while ≥ 1 honest server survives
+        eps = 0.0
+    elif scheme in ("sparse", "as-sparse"):
+        if theta is None:
+            raise ValueError("sparse schemes need theta")
+        eps = accounting.epsilon_sparse(theta, d_eff, d_a)
+        if scheme == "as-sparse":
+            eps = accounting.compose_with_anonymity(eps, u)
+    elif scheme in ("direct", "as-direct"):
+        if p is None:
+            raise ValueError("direct schemes need p")
+        if scheme == "direct":
+            eps = accounting.epsilon_direct(n, d_eff, d_a, p)
+        else:
+            eps = accounting.epsilon_as_direct(n, d_eff, d_a, p, u)
+    elif scheme == "subset":
+        if t is None:
+            raise ValueError("subset needs t")
+        eps = 0.0
+        out["delta"] = accounting.delta_subset(d_eff, d_a, min(t, d_eff))
+    else:
+        raise ValueError(f"unknown scheme {scheme!r}")
+
+    out.update(serviceable=1.0, epsilon=eps)
+    return out

@@ -1,0 +1,115 @@
+"""Parameter sharding specs: pytrees of PartitionSpec mirroring param trees.
+
+Specs are resolved from the *logical* rule table at build time (so the same
+code yields Megatron TP×FSDP under DEFAULT_RULES and pure ZeRO-3 under the
+fsdp variant's overrides), but the returned leaves are plain mesh-axis
+``PartitionSpec``s — launch.cells mirrors them through optimizer-state
+trees (m/v/row/col suffixes) and wraps them into NamedShardings.
+
+Conventions (baseline rules):
+
+  LM (lm_param_specs — keyed on the init_lm tree layout):
+    embed [V, D]               -> ("vocab", "fsdp")   vocab-sharded, tied
+    layers/wq|wk|wv/w [L,D,H]  -> (None, "fsdp", "heads"/"kv_heads")
+    layers/wo/w [L,H,D]        -> (None, "heads", "fsdp")
+    layers/mlp/wi|wg/w [L,D,F] -> (None, "fsdp", "ff")
+    layers/mlp/wo/w [L,F,D]    -> (None, "ff", "fsdp")
+    layers/moe/w_gate|w_in     -> (None, "experts", "fsdp", None)
+    layers/moe/w_out           -> (None, "experts", None, "fsdp")
+    norms / router / scalars   -> replicated
+
+  Generic (generic_param_specs — RecSys/GNN trees): any rank-≥2 leaf with
+  ≥ 4096 rows is treated as an embedding table and row-sharded over
+  "table_vocab"; other rank-≥2 leaves FSDP-shard their leading dim;
+  vectors/scalars replicate. Non-divisible dims are dropped downstream by
+  cells._sanitize_shardings.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import current_mesh, logical_to_spec
+
+__all__ = ["generic_param_specs", "lm_param_specs", "tree_named_shardings"]
+
+TABLE_ROWS_THRESHOLD = 4096
+
+_is_spec = lambda x: isinstance(x, P)
+
+
+def _path_str(path) -> str:
+    return "/".join(
+        str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+        for p in path
+    )
+
+
+def _map_with_paths(tree: Any, fn) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [fn(_path_str(p), leaf) for p, leaf in flat]
+    )
+
+
+# --------------------------------------------------------------------------
+# LM
+# --------------------------------------------------------------------------
+def _lm_leaf_spec(path: str, leaf) -> P:
+    seg = path.split("/")
+    ndim = getattr(leaf, "ndim", 0)
+    if seg[0] == "embed":
+        return logical_to_spec("vocab", "fsdp")
+    if seg[-1] in ("scale", "bias") or "router" in seg or ndim < 2:
+        return P()
+    if "w_gate" in seg or "w_in" in seg:          # [L, E, D, F]
+        return logical_to_spec(None, "experts", "fsdp", None)
+    if "w_out" in seg:                            # [L, E, F, D]
+        return logical_to_spec(None, "experts", None, "fsdp")
+    if "wq" in seg:                               # [L, D, Hq·dh]
+        return logical_to_spec(None, "fsdp", "heads")
+    if "wk" in seg or "wv" in seg:                # [L, D, Hkv·dh]
+        return logical_to_spec(None, "fsdp", "kv_heads")
+    if "mlp" in seg and "wo" in seg:              # [L, F, D]
+        return logical_to_spec(None, "ff", "fsdp")
+    if "wo" in seg:                               # attn out [L, Hq·dh, D]
+        return logical_to_spec(None, "heads", "fsdp")
+    if "wi" in seg or "wg" in seg:                # [L, D, F]
+        return logical_to_spec(None, "fsdp", "ff")
+    return P()
+
+
+def lm_param_specs(params: Any) -> Any:
+    """PartitionSpec tree for an init_lm parameter tree (TP×FSDP×SP)."""
+    return _map_with_paths(params, _lm_leaf_spec)
+
+
+# --------------------------------------------------------------------------
+# Generic (RecSys / GNN / anything without a bespoke layout)
+# --------------------------------------------------------------------------
+def _generic_leaf_spec(path: str, leaf) -> P:
+    ndim = getattr(leaf, "ndim", 0)
+    if ndim < 2:
+        return P()
+    if leaf.shape[0] >= TABLE_ROWS_THRESHOLD:     # embedding table rows
+        return logical_to_spec("table_vocab", *([None] * (ndim - 1)))
+    return logical_to_spec("fsdp", *([None] * (ndim - 1)))
+
+
+def generic_param_specs(params: Any) -> Any:
+    return _map_with_paths(params, _generic_leaf_spec)
+
+
+# --------------------------------------------------------------------------
+# Specs -> NamedShardings on the active mesh
+# --------------------------------------------------------------------------
+def tree_named_shardings(spec_tree: Any) -> Any:
+    mesh = current_mesh()
+    if mesh is None:
+        raise RuntimeError("tree_named_shardings requires a mesh_rules context")
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree, is_leaf=_is_spec
+    )

@@ -1,0 +1,204 @@
+"""Logical-axis sharding: the naming layer between models and meshes.
+
+Model code never mentions mesh axes. It annotates arrays with *logical*
+axis names ("batch", "vocab", "records", ...) via :func:`constrain`, and a
+rule table maps each logical name to zero or more *mesh* axes. The same
+model source then runs
+
+  * single-device (no mesh context: every annotation is the identity),
+  * on the 8-device forced-host test mesh (tests/_multidevice_checks.py),
+  * on the 256-chip pod / 512-chip multi-pod production meshes
+    (repro.launch.mesh), where only the rule table changes.
+
+Rule values are ``None`` (replicate), a mesh-axis name, or a tuple of
+mesh-axis names (the logical axis is sharded over their product, major to
+minor). Per-cell overrides (repro.launch.cells.rules_for_cell) and perf
+variants swap entries without touching model code — e.g. pure ZeRO-3 is
+``{"heads": None, "ff": None, "fsdp": ("data", "model")}``.
+
+The context is process-local trace-time state, *not* a jax mesh context:
+``constrain`` resolves rules eagerly at trace time into concrete
+``NamedSharding``s, so nothing here survives into the jaxpr except the
+sharding annotations themselves.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "DEFAULT_RULES",
+    "MULTIPOD_RULES",
+    "mesh_rules",
+    "current_mesh",
+    "current_rules",
+    "mesh_axis_names",
+    "axis_size",
+    "logical_to_spec",
+    "constrain",
+]
+
+
+# --------------------------------------------------------------------------
+# Rule tables
+# --------------------------------------------------------------------------
+# Single-pod baseline: Megatron TP over "model" × FSDP/DP over "data", with
+# sequence-parallel residual streams (DESIGN.md §5). The multidevice checks
+# run these rules unchanged on a (2, 4) host mesh.
+DEFAULT_RULES: Dict[str, object] = {
+    # LM / generic batched compute
+    "batch": "data",          # per-example axes (tokens, queries, users)
+    "fsdp": "data",           # parameter shard axis (ZeRO-style)
+    "seq": None,              # full sequence inside attention blocks
+    "seq_res": "model",       # sequence-parallel residual stream
+    "embed": None,            # d_model stays unsharded (SP shards seq)
+    "heads": "model",         # Megatron TP: attention heads
+    "kv_heads": "model",
+    "head_dim": None,
+    "ff": "model",            # Megatron TP: MLP hidden
+    "vocab": "model",         # tied embedding + logits stay vocab-sharded
+    "kv_seq": "model",        # decode KV-cache sequence parallelism
+    "experts": "model",       # MoE expert parallelism (TP over experts)
+    # GNN full-batch: nodes and edges over every axis, flattened
+    "nodes": ("data", "model"),
+    "edges": ("data", "model"),
+    # RecSys
+    "table_vocab": "model",   # vocab-sharded embedding tables
+    "candidates": ("data", "model"),
+    # PIR serve (baseline variant; xorbfly overrides records per-cell)
+    "queries": "data",
+    "records": "model",
+}
+
+# Multi-pod (2×16×16): the "pod" axis is data-parallel across pods; batch-
+# like axes extend over it, TP axes never cross the DCI.
+MULTIPOD_RULES: Dict[str, object] = dict(
+    DEFAULT_RULES,
+    batch=("pod", "data"),
+    fsdp=("pod", "data"),
+    nodes=("pod", "data", "model"),
+    edges=("pod", "data", "model"),
+    candidates=("pod", "data", "model"),
+    queries=("pod", "data"),
+)
+
+
+# --------------------------------------------------------------------------
+# Context
+# --------------------------------------------------------------------------
+_STATE = threading.local()
+
+
+def _stack():
+    if not hasattr(_STATE, "stack"):
+        _STATE.stack = []
+    return _STATE.stack
+
+
+@contextlib.contextmanager
+def mesh_rules(mesh: Mesh, rules: Dict[str, object]):
+    """Activate ``mesh`` + logical ``rules`` for the enclosed trace/build."""
+    _stack().append((mesh, dict(rules)))
+    try:
+        yield mesh
+    finally:
+        _stack().pop()
+
+
+def current_mesh() -> Optional[Mesh]:
+    s = _stack()
+    return s[-1][0] if s else None
+
+
+def current_rules() -> Dict[str, object]:
+    s = _stack()
+    return s[-1][1] if s else {}
+
+
+# --------------------------------------------------------------------------
+# Resolution
+# --------------------------------------------------------------------------
+def _as_axes(value) -> Tuple[str, ...]:
+    if value is None:
+        return ()
+    if isinstance(value, str):
+        return (value,)
+    return tuple(value)
+
+
+def mesh_axis_names(logical: str) -> Tuple[str, ...]:
+    """Mesh axes a logical axis maps to under the current rules.
+
+    () when no mesh is active, the rule is None/absent, or none of the
+    mapped axes exist on the active mesh — callers treat () as "replicated"
+    and skip their shard_map path.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return ()
+    axes = _as_axes(current_rules().get(logical))
+    return tuple(a for a in axes if a in mesh.shape)
+
+
+def axis_size(logical: str) -> int:
+    """Product of mesh-axis sizes behind a logical axis (1 if unmapped)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return 1
+    return math.prod(mesh.shape[a] for a in mesh_axis_names(logical)) or 1
+
+
+def logical_to_spec(*logical) -> P:
+    """Resolve per-dim logical names (or None) into a PartitionSpec.
+
+    A mesh axis may appear at most once in a spec; if two dims resolve to
+    overlapping mesh axes the later dim silently drops the duplicates —
+    rule-table overrides (not call sites) decide who wins an axis.
+    """
+    mesh = current_mesh()
+    parts, used = [], set()
+    for name in logical:
+        axes = () if name is None else _as_axes(current_rules().get(name))
+        if mesh is not None:
+            axes = tuple(a for a in axes if a in mesh.shape)
+        axes = tuple(a for a in axes if a not in used)
+        used.update(axes)
+        if not axes:
+            parts.append(None)
+        elif len(axes) == 1:
+            parts.append(axes[0])
+        else:
+            parts.append(axes)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def constrain(x: jax.Array, *logical) -> jax.Array:
+    """``with_sharding_constraint`` by logical names; identity off-mesh.
+
+    Dims whose size is not divisible by the mapped axis product fall back
+    to replicated (same policy as cells._sanitize_shardings) so reduced
+    smoke configs trace under production rules.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_spec(*logical)
+    parts = list(spec) + [None] * (x.ndim - len(spec))
+    new = []
+    for dim, part in zip(x.shape, parts):
+        if part is None:
+            new.append(None)
+            continue
+        size = math.prod(mesh.shape[a] for a in _as_axes(part))
+        new.append(part if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*new))
+    )

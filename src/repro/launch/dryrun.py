@@ -139,6 +139,8 @@ def run_cell(arch_id: str, sp, multi_pod: bool, out_dir: str, force=False,
 
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):  # newer jax: per-partition
+                cost = cost[0] if cost else {}
             hlo = compiled.as_text()
             coll = parse_collectives(hlo)          # flat (loop-unaware) view
             trip_true = analyze_hlo(hlo)           # loop-aware per-device cost

@@ -226,11 +226,17 @@ class _Module:
                     for k in COLLECTIVE_OPS:
                         c.coll_bytes[k] += sub.coll_bytes[k]
                         c.coll_counts[k] += sub.coll_counts[k]
+                    c.bytes += _bytes_of(instr.result_type) + self._operand_bytes(
+                        instr.rhs, types, instr.op
+                    )
                 else:
+                    # call/async wrappers are not materialization points:
+                    # the callee's own instructions carry the traffic
                     c.add(sub)
-            c.bytes += _bytes_of(instr.result_type) + self._operand_bytes(
-                instr.rhs, types
-            )
+            else:
+                c.bytes += _bytes_of(instr.result_type) + self._operand_bytes(
+                    instr.rhs, types, instr.op
+                )
             return c
 
         if op == "conditional":
@@ -262,19 +268,25 @@ class _Module:
 
         if op == "dot":
             result_elems = _elems_of(instr.result_type)
-            lhs_name = self._first_operand(instr.rhs)
             contract = 1
             m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rhs)
-            if m and lhs_name and lhs_name in types:
-                lhs_shapes = _shapes(types[lhs_name])
-                if lhs_shapes:
-                    dims = lhs_shapes[0][1]
-                    for idx in m.group(1).split(","):
-                        if idx and int(idx) < len(dims):
-                            contract *= dims[int(idx)]
+            lhs_shapes = []
+            args = self._operand_texts(instr.rhs, instr.op)
+            if args:
+                # newer XLA prints operand types inline:
+                #   dot(f32[256,512]{1,0} %Arg_0.1, ...)
+                lhs_shapes = _shapes(args[0])
+                if not lhs_shapes:
+                    name = args[0].strip().split(" ")[-1].lstrip("%")
+                    lhs_shapes = _shapes(types.get(name, ""))
+            if m and lhs_shapes:
+                dims = lhs_shapes[0][1]
+                for idx in m.group(1).split(","):
+                    if idx and int(idx) < len(dims):
+                        contract *= dims[int(idx)]
             c.flops += 2.0 * result_elems * contract
             c.bytes += _bytes_of(instr.result_type) + self._operand_bytes(
-                instr.rhs, types
+                instr.rhs, types, instr.op
             )
             return c
 
@@ -286,29 +298,36 @@ class _Module:
                 kernel_bytes = _elems_of(types[rhs_name[1]])
             c.flops += 2.0 * _elems_of(instr.result_type) * max(kernel_bytes, 1)
             c.bytes += _bytes_of(instr.result_type) + self._operand_bytes(
-                instr.rhs, types
+                instr.rhs, types, instr.op
             )
             return c
 
         # generic non-trivial op: memory traffic only
         c.bytes += _bytes_of(instr.result_type) + self._operand_bytes(
-            instr.rhs, types
+            instr.rhs, types, instr.op
         )
         return c
 
-    def _first_operand(self, rhs: str) -> Optional[str]:
-        m = re.search(r"\(%?([\w.\-]+)", rhs[rhs.index("("):] if "(" in rhs else rhs)
-        return m.group(1) if m else None
+    @staticmethod
+    def _operand_texts(rhs: str, op: str = "") -> List[str]:
+        """Split the top-level operand list out of "TYPE op(a, b, ...), ...";
+        each entry may carry an inline type ("f32[2,3]{1,0} %name").
 
-    def _operand_bytes(self, rhs: str, types: Dict[str, str]) -> int:
-        if "(" not in rhs:
-            return 0
-        inside = rhs[rhs.index("(") + 1:]
+        Anchors on "op(" when the op is known — a tuple result type like
+        "(f32[...], s32[...]) sort(...)" contains earlier parens."""
+        start = rhs.find(op + "(") if op else -1
+        if start >= 0:
+            start += len(op)
+        elif "(" in rhs:
+            start = rhs.index("(")
+        else:
+            return []
+        inside = rhs[start + 1:]
         depth, args, cur = 1, [], ""
         for ch in inside:
-            if ch == "(":
+            if ch in "([{":
                 depth += 1
-            elif ch == ")":
+            elif ch in ")]}":
                 depth -= 1
                 if depth == 0:
                     args.append(cur)
@@ -318,10 +337,17 @@ class _Module:
                 if ch == "," and depth == 1:
                     args.append(cur[:-1])
                     cur = ""
+        return args
+
+    def _operand_bytes(self, rhs: str, types: Dict[str, str], op: str = "") -> int:
         total = 0
-        for a in args:
-            a = a.strip().lstrip("%")
-            name = a.split(" ")[-1].lstrip("%") if " " in a else a
+        for a in self._operand_texts(rhs, op):
+            a = a.strip()
+            inline = _bytes_of(a.rsplit("%", 1)[0]) if "%" in a else 0
+            if inline:
+                total += inline
+                continue
+            name = a.split(" ")[-1].lstrip("%") if " " in a else a.lstrip("%")
             if name in types:
                 total += _bytes_of(types[name])
         return total

@@ -176,3 +176,45 @@ def test_privacy_budget_rate_limits():
     assert b.remaining_epsilon == pytest.approx(0.0)
     with pytest.raises(PermissionError):
         b.spend(0.01)
+
+
+# ------------------------------------------------- edge cases (dist/fault PR)
+def test_sparse_single_server_offers_little_privacy():
+    """d=1, d_a=0: a lone server sees the sparse query directly; ε is the
+    one-hop bound 4·atanh(1−2θ) — large for small θ, and strictly worse
+    than any multi-server deployment at the same θ."""
+    theta = 0.05
+    e1 = acc.epsilon_sparse(theta, 1, 0)
+    assert e1 > 4.0  # ~ no privacy at 5% dummy density
+    assert e1 > acc.epsilon_sparse(theta, 2, 0) > acc.epsilon_sparse(theta, 3, 0)
+    # theta -> 1/2 is the full-coin-flip limit: perfect even at d=1
+    assert acc.epsilon_sparse(0.5, 1, 0) == 0.0
+
+
+def test_direct_single_server_epsilon_and_corruption_guard():
+    # d=1 honest server: ε = ln((n−1)/(p−1)); full download p=n gives 0
+    n = 100
+    assert acc.epsilon_direct(n, 1, 0, n) == pytest.approx(0.0)
+    assert acc.epsilon_direct(n, 1, 0, 10) == pytest.approx(
+        math.log((n - 1) / 9)
+    )
+    # d_a >= d can never be valid (no honest server at all)
+    with pytest.raises(ValueError):
+        acc.epsilon_direct(n, 1, 1, 10)
+    with pytest.raises(ValueError):
+        acc.epsilon_sparse(0.25, 1, 1)
+
+
+def test_direct_epsilon_monotone_in_dummy_count():
+    """More dummies (larger p) never hurt: ε is non-increasing in p."""
+    n, d, d_a = 1000, 4, 2
+    eps = [acc.epsilon_direct(n, d, d_a, p) for p in range(2, n + 1, 49)]
+    assert all(a >= b - 1e-12 for a, b in zip(eps, eps[1:]))
+    assert eps[0] > eps[-1]
+
+
+def test_sparse_epsilon_monotone_in_honest_servers():
+    """ε shrinks as d−d_a grows — the quantity replica loss eats into."""
+    theta = 0.25
+    eps = [acc.epsilon_sparse(theta, d, 2) for d in range(3, 12)]
+    assert all(a > b for a, b in zip(eps, eps[1:]))

@@ -60,3 +60,71 @@ def test_pir_degradation_unserviceable_below_da():
 def test_pir_degradation_chor_stays_perfect_until_da():
     out = pir_degraded_privacy(d=10, d_a=5, failed=4, scheme="chor", n=1000)
     assert out["epsilon"] == 0.0 and out["serviceable"] == 1.0
+
+
+# ---------------------------------------------- fault ↔ accounting agreement
+def test_degraded_epsilon_matches_accounting_for_every_failure_count():
+    """dist.fault must report exactly what core.accounting computes at
+    d' = d − failed, for every scheme — ops and accounting can't drift."""
+    d, d_a, n, theta, p, u = 10, 3, 1000, 0.25, 40, 64
+    for failed in range(0, d - d_a):
+        d_eff = d - failed
+        sp = pir_degraded_privacy(
+            d=d, d_a=d_a, failed=failed, scheme="sparse", n=n, theta=theta
+        )
+        assert sp["epsilon"] == pytest.approx(
+            accounting.epsilon_sparse(theta, d_eff, d_a)
+        )
+        assert sp["d_effective"] == d_eff and sp["serviceable"] == 1.0
+        di = pir_degraded_privacy(
+            d=d, d_a=d_a, failed=failed, scheme="direct", n=n, p=p
+        )
+        assert di["epsilon"] == pytest.approx(
+            accounting.epsilon_direct(n, d_eff, d_a, p)
+        )
+        ass = pir_degraded_privacy(
+            d=d, d_a=d_a, failed=failed, scheme="as-sparse", n=n,
+            theta=theta, u=u,
+        )
+        assert ass["epsilon"] == pytest.approx(
+            accounting.compose_with_anonymity(
+                accounting.epsilon_sparse(theta, d_eff, d_a), u
+            )
+        )
+        sub = pir_degraded_privacy(
+            d=d, d_a=d_a, failed=failed, scheme="subset", n=n, t=3
+        )
+        assert sub["epsilon"] == 0.0
+        assert sub["delta"] == pytest.approx(
+            accounting.delta_subset(d_eff, d_a, min(3, d_eff))
+        )
+
+
+def test_degraded_epsilon_monotone_in_failures():
+    """Each lost replica strictly degrades ε until service cuts off."""
+    eps = [
+        pir_degraded_privacy(
+            d=10, d_a=3, failed=f, scheme="sparse", n=1000, theta=0.25
+        )["epsilon"]
+        for f in range(0, 7)
+    ]
+    assert all(a < b for a, b in zip(eps, eps[1:]))
+    out = pir_degraded_privacy(
+        d=10, d_a=3, failed=7, scheme="sparse", n=1000, theta=0.25
+    )
+    assert out["serviceable"] == 0.0 and math.isinf(out["epsilon"])
+
+
+def test_fleet_drives_remesh_plan():
+    """End to end: heartbeats -> survivor set -> remesh plan."""
+    f = FleetState(n_pods=3, heartbeat_timeout_s=5.0)
+    f.heartbeat(0, now=10.0)
+    f.heartbeat(2, now=12.0)
+    # pod 1 never checked in; pod 0 expires by t=16
+    plan = plan_elastic_remesh(f.alive_pods(now=16.0))
+    assert plan.survivors == (2,)
+    assert plan.mesh_shape == (16, 16)
+    plan2 = plan_elastic_remesh(f.alive_pods(now=13.0))
+    assert plan2.survivors == (0, 2)
+    assert plan2.mesh_shape == (2, 16, 16)
+    assert plan2.global_batch_scale == 2.0

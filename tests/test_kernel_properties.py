@@ -4,6 +4,11 @@ shapes, densities and block sizes must match the oracles bit-for-bit."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (dev extra)"
+)
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import gather_xor, indices_from_mask, parity_matmul, ref, xor_fold

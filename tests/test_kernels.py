@@ -123,3 +123,64 @@ def test_sparse_index_budget_bounds():
     m = ops.sparse_index_budget(10_000, 0.25)
     assert 2500 < m < 3000 and m % 8 == 0
     assert ops.sparse_index_budget(16, 0.5) == 16  # clamped at n
+
+
+# --------------------------------------------------------------------------
+# Non-power-of-two database shapes (interpret mode on CPU): the Pallas
+# kernels pad/clamp internally; every ragged edge must still be bit-exact
+# against the pure-JAX oracles in kernels/ref.py.
+# --------------------------------------------------------------------------
+NONPOW2_SHAPES = [
+    # (n records, record_bytes, q queries) — nothing a power of two
+    (91, 12, 3),
+    (137, 24, 7),
+    (333, 36, 5),
+    (1000, 20, 11),
+    (63, 129, 9),     # W crosses the default block boundary
+]
+
+
+@pytest.mark.parametrize("n,rb,q", NONPOW2_SHAPES)
+def test_gather_xor_nonpow2_shapes(n, rb, q):
+    store, mask = _case(n, rb, q, seed=n)
+    m = min(n, 160)
+    idx = indices_from_mask(mask, m)
+    want = np.asarray(ref.gather_xor_ref(store.packed, idx))
+    got = np.asarray(gather_xor(store.packed, idx, interpret=True))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("n,rb,q", NONPOW2_SHAPES)
+def test_parity_matmul_nonpow2_shapes(n, rb, q):
+    store, mask = _case(n, rb, q, seed=n + 1)
+    planes = store.bitplanes()
+    want = np.asarray(ref.parity_matmul_ref(mask, planes))
+    got = np.asarray(parity_matmul(mask, planes, interpret=True))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("block_q,block_b,block_n", [(4, 8, 32), (16, 128, 512)])
+def test_parity_matmul_nonpow2_block_sweep(block_q, block_b, block_n):
+    """Ragged shapes × non-aligned blocks: the padding path end to end."""
+    store, mask = _case(147, 18, 5, seed=3)
+    planes = store.bitplanes()
+    want = np.asarray(ref.parity_matmul_ref(mask, planes))
+    got = np.asarray(
+        parity_matmul(
+            mask, planes,
+            block_q=block_q, block_b=block_b, block_n=block_n,
+            interpret=True,
+        )
+    )
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("block_w", [8, 64])
+def test_gather_xor_nonpow2_block_sweep(block_w):
+    store, mask = _case(211, 21, 6, seed=4)
+    idx = indices_from_mask(mask, 120)
+    want = np.asarray(ref.gather_xor_ref(store.packed, idx))
+    got = np.asarray(
+        gather_xor(store.packed, idx, block_w=block_w, interpret=True)
+    )
+    np.testing.assert_array_equal(got, want)
