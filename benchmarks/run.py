@@ -6,11 +6,15 @@ any point. Analytic figures time the accountant; system rows time the
 actual jitted server paths on this host (CPU — TPU numbers come from the
 dry-run roofline, EXPERIMENTS.md §Roofline).
 
-Run: PYTHONPATH=src python -m benchmarks.run
+Run: PYTHONPATH=src python -m benchmarks.run [--smoke]
+
+``--smoke`` shrinks every system row to tiny shapes with 1 timing rep —
+a seconds-long CI guard that the whole harness still runs end to end.
 """
 
 from __future__ import annotations
 
+import argparse
 import csv
 import math
 import os
@@ -25,14 +29,25 @@ from repro.core import accounting as acc
 from repro.core import chor, make_scheme, sparse
 from repro.db import make_synthetic_store
 from repro.kernels import ref
-from repro.serve import PIRServingEngine
+from repro.serve import BatchScheduler, ServingPipeline
 
-OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "benchmarks")
+# abspath: CSVs must land in results/benchmarks/ regardless of the cwd the
+# harness is launched from
+OUT_DIR = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "results", "benchmarks")
+)
+
+SMOKE = False  # set by main(); system rows shrink to tiny shapes, 1 rep
 
 Row = Tuple[str, float, str]
 
 
+def _reps(full: int) -> int:
+    return 1 if SMOKE else full
+
+
 def _time_us(fn: Callable, *args, reps: int = 5, warmup: int = 2) -> float:
+    reps = _reps(reps)
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
@@ -158,7 +173,7 @@ def fig6_frontier() -> List[Row]:
 def table1() -> List[Row]:
     """Security & cost summary — analytic columns PLUS measured record
     touches from actual query matrices (validates C_p empirically)."""
-    n, d, d_a, u = 4096, 8, 4, 1000
+    n, d, d_a, u = (256, 8, 4, 1000) if SMOKE else (4096, 8, 4, 1000)
     store = make_synthetic_store(n=n, record_bytes=64, seed=0)
     key = jax.random.key(0)
     q = jnp.arange(16)
@@ -211,7 +226,7 @@ def table1() -> List[Row]:
 def server_paths() -> List[Row]:
     """The three TPU server paths, timed on host XLA (correctness-scale);
     derived column reports throughput. TPU projections: §Roofline."""
-    n, rb, qn = 8192, 128, 64
+    n, rb, qn = (512, 16, 8) if SMOKE else (8192, 128, 64)
     store = make_synthetic_store(n=n, record_bytes=rb, seed=1)
     masks = (jax.random.uniform(jax.random.key(2), (qn, n)) < 0.25).astype(jnp.uint8)
     planes = store.bitplanes()
@@ -229,7 +244,7 @@ def server_paths() -> List[Row]:
 
     from repro.kernels.gather_xor import indices_from_mask
 
-    idx = indices_from_mask(masks, 3072)
+    idx = indices_from_mask(masks, 192 if SMOKE else 3072)
     gat = jax.jit(lambda i: ref.gather_xor_ref(store.packed, i))
     us = _time_us(gat, idx)
     out.append(("server_gather_xor", us,
@@ -237,9 +252,10 @@ def server_paths() -> List[Row]:
     return out
 
 
-# ------------------------------------------------------ engine end-to-end
+# ---------------------------------------------------- pipeline end-to-end
 def engine_throughput() -> List[Row]:
-    n, d, d_a = 4096, 6, 3
+    n, d, d_a = (512, 6, 3) if SMOKE else (4096, 6, 3)
+    b = 16 if SMOKE else 64
     store = make_synthetic_store(n=n, record_bytes=64, seed=3)
     out: List[Row] = []
     for name, kw in (
@@ -248,27 +264,84 @@ def engine_throughput() -> List[Row]:
         ("subset", dict(t=3)),
         ("direct", dict(p=24)),
     ):
-        eng = PIRServingEngine(store, make_scheme(name, d=d, d_a=d_a, **kw))
+        pipe = ServingPipeline(
+            store, make_scheme(name, d=d, d_a=d_a, **kw),
+            scheduler=BatchScheduler(max_batch=1024),
+        )
         rng = np.random.default_rng(0)
-        for i in range(64):
-            eng.submit(f"c{i}", int(rng.integers(0, n)))
-        eng.flush()  # pays jit
-        for i in range(64):
-            eng.submit(f"c{i}", int(rng.integers(0, n)))
+        for i in range(b):
+            pipe.submit(f"c{i}", int(rng.integers(0, n)))
+        pipe.flush()  # pays jit
+        for i in range(b):
+            pipe.submit(f"c{i}", int(rng.integers(0, n)))
         t0 = time.perf_counter()
-        eng.flush()
+        pipe.flush()
         dt = time.perf_counter() - t0
-        out.append((f"engine_{name}", dt * 1e6 / 64, f"qps={64 / dt:.0f}"))
+        out.append((f"engine_{name}", dt * 1e6 / b, f"qps={b / dt:.0f}"))
     return out
+
+
+def serve_batched_vs_loop() -> List[Row]:
+    """The tentpole number: one scheduled batch of B queries vs B
+    per-request round-trips through the same pipeline (batch 1). Batching
+    is what makes the MXU parity path and dispatch amortisation pay."""
+    n, b, loop_n = (512, 128, 8) if SMOKE else (4096, 1024, 64)
+    store = make_synthetic_store(n=n, record_bytes=64, seed=4)
+    sch = make_scheme("chor", d=2, d_a=1)
+
+    def make_pipe(max_batch):
+        return ServingPipeline(
+            store, sch, scheduler=BatchScheduler(max_batch=max_batch)
+        )
+
+    # batched: B queries served as one scheduled batch
+    pipe = make_pipe(b)
+    for rep in range(2):  # first rep pays jit
+        for i in range(b):
+            pipe.submit(f"c{i}", (i * 37) % n)
+        t0 = time.perf_counter()
+        pipe.flush()
+        dt_batched = time.perf_counter() - t0
+    qps_batched = b / dt_batched
+
+    # per-request loop: batch-1 round trips (same scheme, same store)
+    pipe1 = make_pipe(1)
+    pipe1.submit("w", 0)
+    pipe1.flush()  # pays jit for the [1, n] shapes
+    t0 = time.perf_counter()
+    for i in range(loop_n):
+        pipe1.submit("c", (i * 37) % n)
+        pipe1.flush()
+    dt_loop = time.perf_counter() - t0
+    qps_loop = loop_n / dt_loop
+
+    speedup = qps_batched / qps_loop
+    _write_csv(
+        "serve_batched_vs_loop",
+        ["mode", "batch", "qps"],
+        [("batched", b, qps_batched), ("loop", 1, qps_loop)],
+    )
+    return [(
+        f"serve_batched_b{b}", dt_batched * 1e6 / b,
+        f"batched_qps={qps_batched:.0f};loop_qps={qps_loop:.0f};"
+        f"speedup={speedup:.1f}x",
+    )]
 
 
 ALL = [
     fig1_direct, fig2_as_direct, fig3_sparse, fig4_as_sparse, fig5_subset,
     fig6_frontier, table1, server_paths, engine_throughput,
+    serve_batched_vs_loop,
 ]
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    global SMOKE
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, 1 timing rep (CI guard)")
+    args = ap.parse_args(argv)
+    SMOKE = args.smoke
     print("name,us_per_call,derived")
     for fn in ALL:
         for name, us, derived in fn():

@@ -151,3 +151,6 @@ class PIRConfig:
     t: int = 0
     u: int = 1000
     query_batch: int = 1024
+    # serving-pipeline knobs (repro.serve.BatchScheduler)
+    max_wait_ms: float = 5.0          # deadline before a partial batch cuts
+    target_latency_ms: float = 50.0   # adaptive batch-size target

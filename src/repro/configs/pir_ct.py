@@ -2,7 +2,11 @@
 
 n = 10^6 records (certificates ≈ 1.5 kB), d = 100 databases, adversary
 controls half; Sparse-PIR θ = 0.25 by default (the paper's reference
-operating point: ε ≈ 3.6e-15 at d_a = d/2, ≈ 2.2 at d_a = d−1)."""
+operating point: ε ≈ 3.6e-15 at d_a = d/2, ≈ 2.2 at d_a = d−1).
+
+:func:`scheme_from_config` / :func:`make_serving_pipeline` build the
+repro.serve pipeline straight from a PIRConfig — the one-call path from
+"the paper's workload" to a running, budgeted, batch-scheduled server."""
 
 import dataclasses
 
@@ -30,4 +34,40 @@ SHAPES = (
 def reduced() -> PIRConfig:
     return dataclasses.replace(
         CONFIG, n_records=2048, record_bytes=64, d=4, d_a=2, query_batch=8, u=16
+    )
+
+
+def scheme_from_config(cfg: PIRConfig = CONFIG):
+    """PIRConfig -> repro.core Scheme (only the fields the scheme needs)."""
+    from repro.core import make_scheme
+
+    kw = {}
+    if cfg.scheme in ("sparse", "as-sparse"):
+        kw["theta"] = cfg.theta
+    if cfg.scheme in ("direct", "as-direct"):
+        kw["p"] = cfg.p or cfg.d
+    if cfg.scheme == "subset":
+        kw["t"] = cfg.t
+    if cfg.scheme.startswith("as-"):
+        kw["u"] = cfg.u
+    return make_scheme(cfg.scheme, d=cfg.d, d_a=cfg.d_a, **kw)
+
+
+def make_serving_pipeline(cfg: PIRConfig = CONFIG, store=None, **kw):
+    """PIRConfig -> repro.serve.ServingPipeline (synthetic store unless one
+    is passed). ``kw`` forwards to the pipeline (budgets, backend, seed)."""
+    from repro.db import make_synthetic_store
+    from repro.serve import BatchScheduler, ServingPipeline
+
+    if store is None:
+        store = make_synthetic_store(cfg.n_records, cfg.record_bytes, seed=0)
+    return ServingPipeline(
+        store,
+        scheme_from_config(cfg),
+        scheduler=BatchScheduler(
+            max_batch=cfg.query_batch,
+            max_wait_s=cfg.max_wait_ms / 1e3,
+            target_latency_s=cfg.target_latency_ms / 1e3,
+        ),
+        **kw,
     )

@@ -13,8 +13,10 @@ from repro.dist.collectives import (
     compressed_psum,
     dequantize_int8,
     quantize_int8,
+    sharded_record_lookup,
     sharded_table_lookup,
     sharded_vocab_lookup,
+    xor_psum,
 )
 from repro.dist.fault import FleetState, pir_degraded_privacy, plan_elastic_remesh
 # the function shadows the submodule attribute on purpose: `from repro.dist
@@ -60,8 +62,10 @@ __all__ = [
     "pir_degraded_privacy",
     "plan_elastic_remesh",
     "quantize_int8",
+    "sharded_record_lookup",
     "sharded_table_lookup",
     "sharded_vocab_lookup",
     "sharding",
     "tree_named_shardings",
+    "xor_psum",
 ]

@@ -14,6 +14,14 @@ Three families:
   a shared pmax'd scale. Pairs with train.optimizer.ErrorFeedbackCompressor
   which makes the update *sequence* unbiased.
 
+* **GF(2) collectives for the PIR serve path** (:func:`xor_psum`,
+  :func:`sharded_record_lookup`): XOR is the reduction the PIR algebra
+  wants — partial parities/folds from record shards combine exactly, with
+  32× fewer collective bytes than an int32 psum of unpacked bits. The
+  record lookup is the Direct-Requests gather with rows sharded over the
+  "records" logical axis; exactly one shard owns each row, so the XOR
+  all-reduce reconstructs it bit-exactly.
+
 All entry points degrade to their single-device reference when no mesh is
 active, the logical axis is unmapped, or shapes don't divide — identical
 numerics, asserted in tests/_multidevice_checks.py.
@@ -38,6 +46,8 @@ __all__ = [
     "compressed_psum",
     "quantize_int8",
     "dequantize_int8",
+    "xor_psum",
+    "sharded_record_lookup",
 ]
 
 
@@ -101,6 +111,81 @@ def sharded_vocab_lookup(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
 def sharded_table_lookup(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
     """RecSys embedding-table gather, rows sharded over "table_vocab"."""
     return _sharded_lookup(table, ids, "table_vocab")
+
+
+# --------------------------------------------------------------------------
+# GF(2) collectives (PIR serve path)
+# --------------------------------------------------------------------------
+def xor_psum(x: jnp.ndarray, axis_names) -> jnp.ndarray:
+    """XOR all-reduce — call INSIDE shard_map over ``axis_names``.
+
+    Power-of-two axes use a log2-round ppermute butterfly (each round moves
+    the packed uint32 payload once); other sizes fall back to all_gather +
+    fold. XOR is associative/commutative, so the result is bit-exact
+    regardless of schedule. Requires an active mesh_rules context at trace
+    time (for the static axis sizes).
+    """
+    axes = (axis_names,) if isinstance(axis_names, str) else tuple(axis_names)
+    mesh = current_mesh()
+    if mesh is None:
+        raise ValueError("xor_psum needs an active mesh_rules context")
+    for ax in axes:
+        size = mesh.shape[ax]
+        if size & (size - 1) == 0:
+            k = 1
+            while k < size:
+                perm = [(i, i ^ k) for i in range(size)]
+                x = x ^ jax.lax.ppermute(x, ax, perm)
+                k *= 2
+        else:
+            g = jax.lax.all_gather(x, ax)
+            x = jax.lax.reduce(
+                g, jnp.zeros((), x.dtype), jax.lax.bitwise_xor, (0,)
+            )
+    return x
+
+
+def sharded_record_lookup(packed: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """Record gather with rows sharded over the "records" logical axis.
+
+    packed: [n, W] uint32 (the RecordStore payload); ids: int32 [...].
+    Returns [..., W] uint32, bit-exact vs ``jnp.take(packed, ids, axis=0)``
+    for in-range ids (out-of-range clamp, identically on and off mesh).
+    Each shard answers only the rows it owns (the rest contribute 0) and the
+    partials XOR-combine — the Direct-Requests server path at mesh scale.
+    """
+    ids = jnp.clip(ids, 0, packed.shape[0] - 1)
+
+    mesh = current_mesh()
+    raxes = mesh_axis_names("records")
+    if mesh is None or not raxes:
+        return jnp.take(packed, ids, axis=0)
+
+    n = packed.shape[0]
+    rshards = math.prod(mesh.shape[a] for a in raxes)
+    if rshards <= 1 or n % rshards != 0:
+        return jnp.take(packed, ids, axis=0)
+    n_loc = n // rshards
+
+    @partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(P(raxes, *([None] * (packed.ndim - 1))),
+                  P(*([None] * ids.ndim))),
+        out_specs=P(*([None] * (ids.ndim + 1))),
+        check_rep=False,
+    )
+    def _lookup(db, idl):
+        lin = jnp.int32(0)
+        for a in raxes:
+            lin = lin * mesh.shape[a] + jax.lax.axis_index(a)
+        rel = idl - lin * n_loc
+        ok = (rel >= 0) & (rel < n_loc)
+        rows = jnp.take(db, jnp.clip(rel, 0, n_loc - 1), axis=0)
+        rows = jnp.where(ok[..., None], rows, jnp.zeros((), rows.dtype))
+        return xor_psum(rows, raxes)
+
+    return _lookup(packed, ids)
 
 
 # --------------------------------------------------------------------------

@@ -17,7 +17,7 @@ import numpy as np
 from repro.core import make_scheme
 from repro.core.accounting import PrivacyBudget
 from repro.db import make_synthetic_store
-from repro.serve import PIRServingEngine
+from repro.serve import BatchScheduler, ServingPipeline
 
 
 def main() -> None:
@@ -35,6 +35,7 @@ def main() -> None:
     ap.add_argument("--u", type=int, default=1000)
     ap.add_argument("--queries", type=int, default=256)
     ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--max-wait-ms", type=float, default=0.0)
     ap.add_argument("--eps-budget", type=float, default=float("inf"))
     args = ap.parse_args()
 
@@ -50,8 +51,11 @@ def main() -> None:
 
     scheme = make_scheme(args.scheme, d=args.d, d_a=args.da, **kw)
     store = make_synthetic_store(args.n, args.record_bytes, seed=0)
-    engine = PIRServingEngine(
-        store, scheme, max_batch=args.batch,
+    engine = ServingPipeline(
+        store, scheme,
+        scheduler=BatchScheduler(
+            max_batch=args.batch, max_wait_s=args.max_wait_ms / 1e3
+        ),
         default_budget=lambda: PrivacyBudget(
             epsilon_limit=args.eps_budget, delta_limit=1.0
         ),
@@ -84,6 +88,8 @@ def main() -> None:
               f"({nq/dt:8.0f} qps)")
     wall = time.perf_counter() - t_start
     print(f"\n{served} queries in {wall:.2f}s; engine metrics: {engine.metrics}")
+    print(f"scheduler target batch: {engine.scheduler.target_batch}; "
+          f"backend paths: {engine.backend.path_counts}")
 
 
 if __name__ == "__main__":

@@ -1,3 +1,26 @@
-from repro.serve.engine import PIRServingEngine, ServerStats
+"""repro.serve — the batch-scheduled, sharded PIR serving subsystem.
 
-__all__ = ["PIRServingEngine", "ServerStats"]
+queue → router → backend: ``BatchScheduler`` decides when/how big batches
+are, ``SchemeRouter`` turns a batch into per-server payloads for the
+configured scheme, ``ShardedBackend`` answers them (single-host kernels
+off-mesh; record-sharded Pallas + GF(2) collectives under an active
+``repro.dist`` mesh). ``ServingPipeline`` composes the three and enforces
+per-client (ε, δ) budgets; ``PIRServingEngine`` is the back-compat facade.
+"""
+
+from repro.serve.engine import PIRServingEngine, ServingPipeline
+from repro.serve.router import RoutedBatch, SchemeRouter
+from repro.serve.scheduler import BatchScheduler, Request, bucket_size
+from repro.serve.sharded import ServerStats, ShardedBackend
+
+__all__ = [
+    "BatchScheduler",
+    "PIRServingEngine",
+    "Request",
+    "RoutedBatch",
+    "SchemeRouter",
+    "ServerStats",
+    "ServingPipeline",
+    "ShardedBackend",
+    "bucket_size",
+]

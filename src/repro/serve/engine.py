@@ -1,75 +1,82 @@
-"""The PIR serving engine: batch scheduling, straggler-aware server
-selection, and per-client privacy budgets.
+"""The serving pipeline: queue → router → execution backend.
 
 This is the production face of the paper: clients submit (client_id, index)
-requests; the engine batches them (batched queries are what make the MXU
-parity path profitable, DESIGN.md §Hardware adaptation), executes the
-configured scheme against the replicated record stores, and returns records.
+requests; the :class:`~repro.serve.scheduler.BatchScheduler` batches them
+(batched queries are what make the MXU parity path profitable, DESIGN.md
+§Hardware adaptation) and pads to power-of-two buckets; the
+:class:`~repro.serve.router.SchemeRouter` turns each batch into per-server
+payloads for the configured scheme; the
+:class:`~repro.serve.sharded.ShardedBackend` answers them — on the
+single-host kernels off-mesh, or with record stores partitioned across the
+active mesh (``repro.dist``) when one is in scope.
 
-Straggler mitigation = Subset-PIR (paper §5.1): the engine tracks a latency
-EMA per database replica and contacts only the fastest ``t`` — the paper's
-own optimization *is* the straggler policy, with its privacy price δ
-accounted per query. Clients with exhausted (ε, δ) budgets are refused
-(the §2.2 rate-limiting discussion, enforced).
+Privacy is enforced at admission: every accepted query spends its scheme's
+(ε, δ) from the client's :class:`~repro.core.accounting.PrivacyBudget`
+(sequential composition, §2.2) and exhausted clients are refused.
+Straggler mitigation = Subset-PIR (paper §5.1): the backend's per-replica
+latency EMAs rank the databases and the router contacts only the fastest
+``t`` — the paper's own optimization *is* the straggler policy, with its
+privacy price δ accounted per query.
+
+:class:`PIRServingEngine` is the back-compat facade over the pipeline —
+the pre-refactor one-file engine's constructor and methods, unchanged.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import chor, sparse
 from repro.core.accounting import PrivacyBudget
 from repro.core.schemes import Scheme
+from repro.db import packing
 from repro.db.store import RecordStore
-from repro.kernels import ops
+from repro.serve.router import SchemeRouter
+from repro.serve.scheduler import BatchScheduler, Request
+from repro.serve.sharded import ServerStats, ShardedBackend
 
-__all__ = ["ServerStats", "PIRServingEngine"]
-
-
-@dataclasses.dataclass
-class ServerStats:
-    """Latency EMA per database replica (straggler tracking)."""
-
-    ema_s: float = 0.0
-    n: int = 0
-
-    def observe(self, dt: float, alpha: float = 0.2) -> None:
-        self.ema_s = dt if self.n == 0 else (1 - alpha) * self.ema_s + alpha * dt
-        self.n += 1
+__all__ = ["ServerStats", "ServingPipeline", "PIRServingEngine"]
 
 
-class PIRServingEngine:
+class ServingPipeline:
+    """Batch-scheduled, scheme-routed, mesh-shardable PIR serving."""
+
     def __init__(
         self,
         store: RecordStore,
         scheme: Scheme,
         *,
-        max_batch: int = 1024,
+        scheduler: Optional[BatchScheduler] = None,
+        backend: Optional[ShardedBackend] = None,
         default_budget: Optional[Callable[[], PrivacyBudget]] = None,
         simulate_latency: Optional[Callable[[int], float]] = None,
         seed: int = 0,
     ):
         self.store = store
         self.scheme = scheme
-        self.max_batch = max_batch
-        self._queue: List[Tuple[str, int]] = []
+        # explicit None checks: an empty BatchScheduler is falsy (__len__)
+        self.scheduler = scheduler if scheduler is not None else BatchScheduler()
+        self.backend = backend if backend is not None else ShardedBackend(
+            store, simulate_latency=simulate_latency
+        )
+        self.backend.ensure_replicas(scheme.d)
+        self.router = SchemeRouter(
+            scheme,
+            pick_servers=(
+                self.backend.fastest if scheme.name == "subset" else None
+            ),
+        )
         self._budgets: Dict[str, PrivacyBudget] = {}
         self._default_budget = default_budget or (
             lambda: PrivacyBudget(epsilon_limit=float("inf"), delta_limit=1.0)
         )
-        self.stats = {i: ServerStats() for i in range(scheme.d)}
-        self._sim = simulate_latency
         self._key = jax.random.key(seed)
-        self._planes = None  # lazy bitplanes for the parity path
         self.metrics = {
             "queries": 0, "batches": 0, "records_touched": 0.0,
-            "blocks_sent": 0.0, "refused": 0,
+            "blocks_sent": 0.0, "refused": 0, "padded": 0, "truncated": 0,
         }
 
     # ------------------------------------------------------------ clients
@@ -83,116 +90,98 @@ class PIRServingEngine:
         n = self.store.n
         eps = self.scheme.epsilon(n)
         delta = self.scheme.delta(n)
-        if self.scheme.name == "subset":
-            # straggler-aware subset: delta depends on the CHOSEN t
-            delta = self.scheme.delta(n)
         if not self.budget(client).can_spend(eps, delta):
             self.metrics["refused"] += 1
             return False
         self.budget(client).spend(eps, delta)
-        self._queue.append((client, int(index)))
+        self.scheduler.submit(client, index)
         return True
 
     # ------------------------------------------------------------ serving
     def fastest_servers(self, t: int) -> List[int]:
-        """Subset-PIR straggler policy: rank replicas by latency EMA.
-        Unobserved servers rank first (explore) with jitter."""
-        order = sorted(
-            self.stats,
-            key=lambda i: (self.stats[i].n > 0, self.stats[i].ema_s),
+        return self.backend.fastest(t)
+
+    @property
+    def stats(self) -> Dict[int, ServerStats]:
+        return self.backend.stats
+
+    def _serve(self, batch: List[Request]) -> Dict[str, np.ndarray]:
+        import time
+
+        b = len(batch)
+        padded = self.scheduler.padded_size(b)
+        q_idx = jnp.asarray(
+            [r.index for r in batch] + [0] * (padded - b), jnp.int32
         )
-        return order[:t]
-
-    def _observe_latency(self, server: int, dt: float) -> None:
-        self.stats[server].observe(dt)
-
-    def flush(self) -> Dict[str, np.ndarray]:
-        """Serve every queued query in one batch; returns client→record."""
-        if not self._queue:
-            return {}
-        batch = self._queue[: self.max_batch]
-        self._queue = self._queue[len(batch):]
-        clients = [c for c, _ in batch]
-        q_idx = jnp.asarray([i for _, i in batch], jnp.int32)
         self._key, sub = jax.random.split(self._key)
 
-        out = self._serve_batch(sub, q_idx)
+        t0 = time.perf_counter()
+        routed = self.router.plan(sub, self.store.n, q_idx)
+        responses = self.backend.answer_batch(routed)
+        out = self.router.finalize(routed, responses)
+        out.block_until_ready()
+        self.scheduler.observe_service(padded, time.perf_counter() - t0)
 
-        self.metrics["queries"] += len(batch)
+        self.metrics["queries"] += b
         self.metrics["batches"] += 1
+        self.metrics["padded"] += padded - b
         costs = self.scheme.costs(self.store.n)
-        self.metrics["records_touched"] += costs["C_p"] / 2.0 * len(batch)
-        self.metrics["blocks_sent"] += costs["C_m"] * len(batch)
+        self.metrics["records_touched"] += costs["C_p"] / 2.0 * b
+        self.metrics["blocks_sent"] += costs["C_m"] * b
 
         nbytes = -(-self.store.record_bits // 8)
-        from repro.db import packing
+        raw = packing.unpack_bytes_np(np.asarray(out[:b]), nbytes)
+        return {r.client: raw[i] for i, r in enumerate(batch)}
 
-        raw = packing.unpack_bytes_np(np.asarray(out), nbytes)
-        return {c: raw[i] for i, (c, _) in enumerate(zip(clients, batch))}
+    def step(self) -> Dict[str, np.ndarray]:
+        """Serve at most one scheduled batch (≤ max_batch; the rest of the
+        queue stays). Returns client → record bytes for the served batch."""
+        if not len(self.scheduler):
+            return {}
+        batch = self.scheduler.next_batch()
+        if len(self.scheduler):
+            self.metrics["truncated"] += 1
+        return self._serve(batch)
 
-    # ----------------------------------------------------- scheme dispatch
-    def _serve_batch(self, key: jax.Array, q_idx: jnp.ndarray) -> jnp.ndarray:
-        name = self.scheme.name
-        n, d = self.store.n, self.scheme.d
+    def poll(self) -> Dict[str, np.ndarray]:
+        """The async-style entry point: serve one batch only if the
+        scheduler says it's time (adaptive target reached, or the oldest
+        request hit the max_wait deadline); {} otherwise. An ingest loop
+        calls this between submits instead of forcing flushes."""
+        return self.step() if self.scheduler.ready() else {}
 
-        if name in ("chor",):
-            masks = chor.query_masks(chor.gen_queries(key, n, d, q_idx), n)
-            responses = self._per_server_fold(masks, theta=None)
-            return chor.reconstruct(responses)
+    def flush(self) -> Dict[str, np.ndarray]:
+        """Drain the whole queue in max_batch-sized steps."""
+        out: Dict[str, np.ndarray] = {}
+        while len(self.scheduler):
+            out.update(self.step())
+        return out
 
-        if name in ("sparse", "as-sparse"):
-            masks = sparse.gen_query_matrix(key, n, d, self.scheme.theta, q_idx)
-            responses = self._per_server_fold(masks, theta=self.scheme.theta)
-            return chor.reconstruct(responses)
 
-        if name == "subset":
-            t = self.scheme.t
-            servers = self.fastest_servers(t)
-            masks = chor.query_masks(chor.gen_queries(key, n, t, q_idx), n)
-            responses = self._per_server_fold(masks, theta=None, servers=servers)
-            return chor.reconstruct(responses)
+class PIRServingEngine(ServingPipeline):
+    """Back-compat facade: the pre-refactor engine's exact surface."""
 
-        if name in ("direct", "as-direct"):
-            from repro.core import direct as direct_mod
+    def __init__(
+        self,
+        store: RecordStore,
+        scheme: Scheme,
+        *,
+        max_batch: int = 1024,
+        default_budget: Optional[Callable[[], PrivacyBudget]] = None,
+        simulate_latency: Optional[Callable[[int], float]] = None,
+        seed: int = 0,
+    ):
+        super().__init__(
+            store,
+            scheme,
+            scheduler=BatchScheduler(max_batch=max_batch),
+            default_budget=default_budget,
+            simulate_latency=simulate_latency,
+            seed=seed,
+        )
+        self.max_batch = max_batch
 
-            reqs = direct_mod.gen_queries(key, n, d, self.scheme.p, q_idx)
-            responses = []
-            for s in range(d):
-                t0 = time.perf_counter()
-                r = direct_mod.server_answer(self.store.packed, reqs[s])
-                r.block_until_ready()
-                self._observe_latency(
-                    s, (self._sim(s) if self._sim else 0.0)
-                    + time.perf_counter() - t0
-                )
-                responses.append(r)
-            return direct_mod.select_response(
-                reqs, jnp.stack(responses), q_idx
-            )
-
-        raise ValueError(name)
-
-    def _per_server_fold(self, masks, theta, servers=None):
-        """Run the kernel server path per replica, tracking latency."""
-        d = masks.shape[0]
-        responses = []
-        for s in range(d):
-            t0 = time.perf_counter()
-            if theta is not None and theta < 0.5:
-                r = ops.server_answer_sparse(self.store.packed, masks[s], theta)
-            elif masks.shape[1] >= ops.parity_crossover_batch(
-                self.store.n, self.store.record_bits
-            ):
-                if self._planes is None:
-                    self._planes = self.store.bitplanes()
-                r = ops.server_answer_parity(self._planes, masks[s])
-            else:
-                r = ops.server_answer_fold(self.store.packed, masks[s])
-            r.block_until_ready()
-            sid = servers[s] if servers is not None else s
-            self._observe_latency(
-                sid, (self._sim(sid) if self._sim else 0.0)
-                + time.perf_counter() - t0
-            )
-            responses.append(r)
-        return jnp.stack(responses)
+    def flush(self) -> Dict[str, np.ndarray]:
+        """Old contract: serve ONE batch of at most max_batch; anything
+        beyond max_batch stays queued for the next flush() call."""
+        return self.step()

@@ -1,0 +1,133 @@
+"""Scheme router: one batch of indices in, per-server work out.
+
+The router is the seam between the scheduler (which hands over a padded
+[B] index batch) and the execution backend (which answers per-server
+payloads). It owns exactly the scheme-shaped decisions:
+
+  * which replicas to contact (all d, or the straggler-policy's fastest t
+    for Subset-PIR),
+  * what each contacted server receives (query *masks* for the XOR
+    family chor/sparse/as-sparse/subset, plain *index requests* for
+    direct/as-direct),
+  * how the per-server responses reconstruct into records (XOR for the
+    mask family, response selection for direct).
+
+Query generation reuses the exact per-scheme functions the reference
+``Scheme.retrieve`` path uses, so for a given key the routed batch and the
+single-host reference produce identical wire bits — that is what makes the
+sharded-equals-single-host proofs (tests/_multidevice_checks.py) exact
+rather than statistical.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import chor, direct, sparse, subset
+from repro.core.schemes import SCHEMES, Scheme
+
+__all__ = ["RoutedBatch", "SchemeRouter"]
+
+# schemes whose servers XOR-fold masked records ("mask" kind) vs. answer
+# plain index requests ("index" kind)
+MASK_SCHEMES = ("chor", "sparse", "as-sparse", "subset")
+INDEX_SCHEMES = ("direct", "as-direct")
+
+
+@dataclasses.dataclass
+class RoutedBatch:
+    """One batch's per-server execution plan.
+
+    kind "mask" : payload [d_eff, B, n] {0,1} uint8 request masks
+    kind "index": payload [d_eff, B, p/d] int32 record indices
+    ``servers`` are the replica ids contacted (len d_eff ≤ scheme.d);
+    ``theta`` is set for the sparse family so the backend can pick the
+    gather path.
+    """
+
+    kind: str
+    payload: jnp.ndarray
+    servers: Tuple[int, ...]
+    q_idx: jnp.ndarray
+    theta: Optional[float] = None
+
+
+class SchemeRouter:
+    """Dispatches chor/sparse/direct/subset/as-* batches.
+
+    ``pick_servers(t) -> Sequence[int]`` supplies Subset-PIR's replica
+    choice — the serving pipeline passes its straggler policy (fastest-t by
+    latency EMA); the default is the paper's uniform random subset.
+    """
+
+    def __init__(
+        self,
+        scheme: Scheme,
+        *,
+        pick_servers: Optional[Callable[[int], Sequence[int]]] = None,
+    ):
+        if scheme.name not in SCHEMES:
+            raise ValueError(
+                f"unknown scheme {scheme.name!r}; choose from {SCHEMES}"
+            )
+        self.scheme = scheme
+        self._pick_servers = pick_servers
+
+    # ------------------------------------------------------------ planning
+    def plan(self, key: jax.Array, n: int, q_idx: jnp.ndarray) -> RoutedBatch:
+        """[B] indices -> per-server payloads for one batch."""
+        sch = self.scheme
+        name = sch.name
+
+        if name == "chor":
+            masks = chor.query_masks(
+                chor.gen_queries(key, n, sch.d, q_idx), n
+            )
+            return RoutedBatch("mask", masks, tuple(range(sch.d)), q_idx)
+
+        if name in ("sparse", "as-sparse"):
+            masks = sparse.gen_query_matrix(key, n, sch.d, sch.theta, q_idx)
+            return RoutedBatch(
+                "mask", masks, tuple(range(sch.d)), q_idx, theta=sch.theta
+            )
+
+        if name == "subset":
+            k_srv, k_q = jax.random.split(key)
+            if self._pick_servers is not None:
+                servers = tuple(int(s) for s in self._pick_servers(sch.t))
+            else:
+                servers = tuple(
+                    int(s) for s in subset.choose_servers(k_srv, sch.d, sch.t)
+                )
+            if len(servers) != sch.t:
+                raise ValueError(
+                    f"subset needs t={sch.t} servers, got {servers}"
+                )
+            masks = chor.query_masks(
+                chor.gen_queries(k_q, n, sch.t, q_idx), n
+            )
+            return RoutedBatch("mask", masks, servers, q_idx)
+
+        if name in ("direct", "as-direct"):
+            reqs = direct.gen_queries(key, n, sch.d, sch.p, q_idx)
+            return RoutedBatch("index", reqs, tuple(range(sch.d)), q_idx)
+
+        raise ValueError(name)
+
+    # -------------------------------------------------------- reconstruction
+    def finalize(
+        self, routed: RoutedBatch, responses: jnp.ndarray
+    ) -> jnp.ndarray:
+        """Per-server responses -> [B, W] packed records.
+
+        mask kind : responses [d_eff, B, W] packed partial folds -> XOR.
+        index kind: responses [d, B, p/d, W] gathered records -> select the
+        slot holding the real query.
+        """
+        if routed.kind == "mask":
+            return chor.reconstruct(responses)
+        return direct.select_response(routed.payload, responses, routed.q_idx)

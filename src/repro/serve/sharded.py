@@ -1,0 +1,328 @@
+"""Execution backends: where a routed batch actually touches records.
+
+``ShardedBackend`` answers per-server payloads against the record store.
+With no active mesh it is the single-host kernel path (exactly what the
+old one-file engine did). Under ``repro.dist.mesh_rules`` with a rule
+mapping the "records" logical axis, every server's database is partitioned
+across the mesh and each device answers only its record shard:
+
+  * XOR-family batches run the Pallas kernels *per shard* —
+    ``xor_fold`` (VPU), ``parity_matmul`` (MXU, batch ≥ crossover) or
+    ``gather_xor`` (Sparse-PIR, only θ·n records touched) — and the
+    partial answers combine with :func:`repro.dist.collectives.xor_psum`
+    (GF(2) butterfly; XOR is the reduction the PIR algebra wants, and both
+    the fold and the mod-2 parity are XOR-additive across record shards,
+    so the result is bit-exact vs the single-host path).
+  * Direct-Requests batches gather through
+    :func:`repro.dist.collectives.sharded_record_lookup`.
+
+Records are zero-padded up to the shard product — zero records are
+XOR-neutral and query masks never select them, so padding cannot change
+any answer.
+
+``kernel_impl`` picks the per-shard implementation: "pallas" runs the TPU
+kernels (interpret mode off-TPU), "ref" the pure-jnp oracles from
+``repro.kernels.ref``, and the default "auto" uses the kernels on
+accelerators but the oracles on CPU hosts — emulating a TPU interpreter
+in a CPU serving hot path costs ~50× for identical bits
+(tests/test_kernels.py proves kernel == oracle exactly; the multidevice
+checks additionally pin the Pallas-in-shard_map path).
+
+The backend also owns **straggler tracking**: a latency EMA per database
+replica (the paper's d databases stay *logical* replicas — sharding is
+within one replica's answer), which the pipeline's Subset-PIR policy reads
+to contact only the fastest t replicas (paper §5.1, priced at δ).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from functools import partial
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.db import packing
+from repro.db.store import RecordStore
+from repro.dist.collectives import sharded_record_lookup, xor_psum
+from repro.dist.sharding import current_mesh, mesh_axis_names
+from repro.kernels import ops, ref
+from repro.kernels.gather_xor import gather_xor, indices_from_mask
+from repro.kernels.parity_matmul import parity_matmul
+from repro.kernels.xor_fold import xor_fold
+from repro.serve.router import RoutedBatch
+
+__all__ = ["ServerStats", "ShardedBackend"]
+
+
+# jitted single-host oracle paths (bit-identical to the Pallas kernels,
+# asserted exactly in tests/test_kernels.py)
+_ref_fold = jax.jit(ref.xor_fold_ref)
+_ref_parity = jax.jit(
+    lambda planes, mask: packing.pack_bits(ref.parity_matmul_ref(mask, planes))
+)
+
+
+@partial(jax.jit, static_argnames=("m",))
+def _ref_sparse(db: jnp.ndarray, mask: jnp.ndarray, m: int) -> jnp.ndarray:
+    return ref.gather_xor_ref(db, indices_from_mask(mask, m))
+
+
+@dataclasses.dataclass
+class ServerStats:
+    """Latency EMA per database replica (straggler tracking)."""
+
+    ema_s: float = 0.0
+    n: int = 0
+
+    def observe(self, dt: float, alpha: float = 0.2) -> None:
+        self.ema_s = dt if self.n == 0 else (1 - alpha) * self.ema_s + alpha * dt
+        self.n += 1
+
+
+class ShardedBackend:
+    """Mesh-aware batch executor with per-replica latency tracking."""
+
+    def __init__(
+        self,
+        store: RecordStore,
+        *,
+        simulate_latency: Optional[Callable[[int], float]] = None,
+        parity_min_batch: Optional[int] = None,
+        kernel_impl: str = "auto",
+    ):
+        if kernel_impl not in ("auto", "pallas", "ref"):
+            raise ValueError(f"kernel_impl must be auto|pallas|ref, got {kernel_impl!r}")
+        self.kernel_impl = kernel_impl
+        self.store = store
+        self.stats: Dict[int, ServerStats] = {}
+        self._sim = simulate_latency
+        self._planes = None  # lazy bitplanes for the parity path
+        self._parity_min_batch = parity_min_batch
+        # per-mesh sharded copies of the db/planes + jitted shard_map fns
+        self._mesh_db: Dict[int, dict] = {}
+        self._mesh_fns: Dict[tuple, Callable] = {}
+        self.path_counts = {"fold": 0, "parity": 0, "sparse": 0, "direct": 0}
+
+    # ------------------------------------------------------------ stragglers
+    def ensure_replicas(self, d: int) -> None:
+        for i in range(d):
+            self.stats.setdefault(i, ServerStats())
+
+    def observe_latency(self, server: int, dt: float) -> None:
+        self.stats.setdefault(server, ServerStats()).observe(dt)
+
+    def fastest(self, t: int) -> List[int]:
+        """Rank replicas by latency EMA; unobserved rank first (explore)."""
+        order = sorted(
+            self.stats,
+            key=lambda i: (self.stats[i].n > 0, self.stats[i].ema_s),
+        )
+        return order[:t]
+
+    # -------------------------------------------------------------- helpers
+    def _use_ref(self) -> bool:
+        return self.kernel_impl == "ref" or (
+            self.kernel_impl == "auto" and ops.on_cpu()
+        )
+
+    def _parity_crossover(self) -> int:
+        if self._parity_min_batch is not None:
+            return self._parity_min_batch
+        return ops.parity_crossover_batch(self.store.n, self.store.record_bits)
+
+    def planes(self) -> jnp.ndarray:
+        if self._planes is None:
+            self._planes = self.store.bitplanes()
+        return self._planes
+
+    # ------------------------------------------------------- mesh residency
+    def _mesh_state(self) -> Optional[dict]:
+        """Sharded db residency for the active mesh (None off-mesh)."""
+        mesh = current_mesh()
+        if mesh is None:
+            return None
+        raxes = mesh_axis_names("records")
+        if not raxes:
+            return None
+        rshards = math.prod(mesh.shape[a] for a in raxes)
+        if rshards <= 1:
+            return None
+        state = self._mesh_db.get(id(mesh))
+        if state is None or state["raxes"] != raxes:
+            # single-mesh residency: switching meshes (elastic remesh) evicts
+            # the previous mesh's device-resident db/planes and jitted fns
+            # instead of pinning one sharded copy per mesh generation
+            self._mesh_db.clear()
+            self._mesh_fns.clear()
+            n = self.store.n
+            n_pad = -(-n // rshards) * rshards
+            db = jnp.pad(self.store.packed, ((0, n_pad - n), (0, 0)))
+            state = {
+                "mesh": mesh,
+                "raxes": raxes,
+                "rshards": rshards,
+                "n_pad": n_pad,
+                "db": jax.device_put(db, NamedSharding(mesh, P(raxes, None))),
+                "planes": None,
+            }
+            self._mesh_db[id(mesh)] = state
+        return state
+
+    def _mesh_planes(self, state: dict) -> jnp.ndarray:
+        if state["planes"] is None:
+            planes = jnp.pad(
+                self.planes(),
+                ((0, state["n_pad"] - self.store.n), (0, 0)),
+            )
+            state["planes"] = jax.device_put(
+                planes, NamedSharding(state["mesh"], P(state["raxes"], None))
+            )
+        return state["planes"]
+
+    def _query_axes(self, state: dict, b: int) -> Tuple[str, ...]:
+        """Mesh axes for the batch dim: "queries" rule minus record axes,
+        dropped when the batch doesn't divide."""
+        qaxes = tuple(
+            a for a in mesh_axis_names("queries") if a not in state["raxes"]
+        )
+        if not qaxes:
+            return ()
+        qshards = math.prod(state["mesh"].shape[a] for a in qaxes)
+        return qaxes if qshards > 1 and b % qshards == 0 else ()
+
+    def _mask_fn(
+        self, state: dict, qaxes: Tuple[str, ...], path: str,
+        theta: Optional[float],
+    ) -> Callable:
+        """Build (and cache) the shard_map'd per-server answer function."""
+        key = (id(state["mesh"]), state["raxes"], qaxes, path, theta)
+        fn = self._mesh_fns.get(key)
+        if fn is not None:
+            return fn
+
+        mesh, raxes = state["mesh"], state["raxes"]
+        n_loc = state["n_pad"] // state["rshards"]
+        interp = ops.on_cpu()
+        use_ref = self._use_ref()
+        if path == "sparse":
+            m_budget = ops.sparse_index_budget(n_loc, theta)
+
+        @partial(
+            shard_map,
+            mesh=mesh,
+            in_specs=(P(raxes, None), P(qaxes or None, raxes)),
+            out_specs=P(qaxes or None, None),
+            check_rep=False,
+        )
+        def _answer(db_loc, m_loc):
+            if path == "sparse":
+                idx = indices_from_mask(m_loc, m_budget)
+                r = (ref.gather_xor_ref(db_loc, idx) if use_ref
+                     else gather_xor(db_loc, idx, interpret=interp))
+            elif path == "parity":
+                bits = (ref.parity_matmul_ref(m_loc, db_loc) if use_ref
+                        else parity_matmul(m_loc, db_loc, interpret=interp))
+                r = packing.pack_bits(bits)
+            else:  # fold
+                r = (ref.xor_fold_ref(db_loc, m_loc) if use_ref
+                     else xor_fold(db_loc, m_loc, interpret=interp))
+            return xor_psum(r, raxes)
+
+        fn = jax.jit(_answer)
+        self._mesh_fns[key] = fn
+        return fn
+
+    # ------------------------------------------------------------ execution
+    def _answer_mask_server(
+        self, masks_s: jnp.ndarray, theta: Optional[float]
+    ) -> jnp.ndarray:
+        """One server's [B, n] masks -> [B, W] packed partial answer."""
+        b = masks_s.shape[0]
+        sparse_path = theta is not None and theta < 0.5
+        parity_path = not sparse_path and b >= self._parity_crossover()
+
+        state = self._mesh_state()
+        if state is None:  # single host
+            use_ref = self._use_ref()
+            if sparse_path:
+                self.path_counts["sparse"] += 1
+                if use_ref:
+                    m = ops.sparse_index_budget(self.store.n, theta)
+                    return _ref_sparse(self.store.packed, masks_s, m)
+                return ops.server_answer_sparse(
+                    self.store.packed, masks_s, theta
+                )
+            if parity_path:
+                self.path_counts["parity"] += 1
+                if use_ref:
+                    return _ref_parity(self.planes(), masks_s)
+                return ops.server_answer_parity(self.planes(), masks_s)
+            self.path_counts["fold"] += 1
+            if use_ref:
+                return _ref_fold(self.store.packed, masks_s)
+            return ops.server_answer_fold(self.store.packed, masks_s)
+
+        pad = state["n_pad"] - self.store.n
+        if pad:
+            masks_s = jnp.pad(masks_s, ((0, 0), (0, pad)))
+        qaxes = self._query_axes(state, b)
+        if sparse_path:
+            self.path_counts["sparse"] += 1
+            fn = self._mask_fn(state, qaxes, "sparse", theta)
+            return fn(state["db"], masks_s)
+        if parity_path:
+            self.path_counts["parity"] += 1
+            fn = self._mask_fn(state, qaxes, "parity", None)
+            return fn(self._mesh_planes(state), masks_s)
+        self.path_counts["fold"] += 1
+        fn = self._mask_fn(state, qaxes, "fold", None)
+        return fn(state["db"], masks_s)
+
+    def _answer_index_server(self, reqs_s: jnp.ndarray) -> jnp.ndarray:
+        """One server's [B, k] index requests -> [B, k, W] records."""
+        self.path_counts["direct"] += 1
+        state = self._mesh_state()
+        if state is None:
+            return jnp.take(self.store.packed, reqs_s, axis=0)
+        # clamp to the REAL record range: the db is zero-padded to n_pad and
+        # the lookup's own clamp is against n_pad, which would make an
+        # out-of-range id return the zero pad record on-mesh only
+        reqs_s = jnp.clip(reqs_s, 0, self.store.n - 1)
+        key = (id(state["mesh"]), state["raxes"], "index")
+        fn = self._mesh_fns.get(key)
+        if fn is None:
+            # a fresh jit wrapper per mesh: jit's cache keys on shapes, not
+            # on the mesh the traced shard_map baked in
+            fn = jax.jit(sharded_record_lookup)
+            self._mesh_fns[key] = fn
+        return fn(state["db"], reqs_s)
+
+    def answer_batch(self, routed: RoutedBatch) -> jnp.ndarray:
+        """Answer every contacted server, tracking per-replica latency.
+
+        Returns stacked responses: [d_eff, B, W] (mask) or
+        [d_eff, B, k, W] (index), ordered like ``routed.servers``.
+        """
+        responses = []
+        for pos, sid in enumerate(routed.servers):
+            t0 = time.perf_counter()
+            if routed.kind == "mask":
+                r = self._answer_mask_server(
+                    routed.payload[pos], routed.theta
+                )
+            else:
+                r = self._answer_index_server(routed.payload[pos])
+            r.block_until_ready()
+            self.observe_latency(
+                sid,
+                (self._sim(sid) if self._sim else 0.0)
+                + time.perf_counter() - t0,
+            )
+            responses.append(r)
+        return jnp.stack(responses)

@@ -20,6 +20,8 @@ MARKERS = [
     "OK elastic_checkpoint",
     "OK pir_sharded",
     "OK pir_xor_butterfly",
+    "OK serve_pipeline_sharded",
+    "OK xor_collectives",
     "ALL MULTIDEVICE OK",
 ]
 

@@ -1,0 +1,271 @@
+"""Serving-subsystem behavior: the scheduler's adaptive batching /
+padding / truncation, the router's scheme dispatch, and the pipeline's
+budget enforcement + straggler policy. Sharded-equals-single-host proofs
+live in tests/_multidevice_checks.py (they need the 8-device subprocess)."""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_scheme
+from repro.core.accounting import PrivacyBudget
+from repro.db import make_synthetic_store
+from repro.serve import (
+    BatchScheduler,
+    PIRServingEngine,
+    SchemeRouter,
+    ServingPipeline,
+    ShardedBackend,
+    bucket_size,
+)
+
+
+# ------------------------------------------------------------- scheduler
+def test_bucket_size_pow2_capped():
+    assert [bucket_size(b, 1024) for b in (1, 2, 3, 5, 8, 9)] == \
+        [1, 2, 4, 8, 8, 16]
+    assert bucket_size(1000, 64) == 64
+    assert bucket_size(0, 64) == 0
+
+
+def test_scheduler_adaptive_target_tracks_service_rate():
+    s = BatchScheduler(max_batch=1024, target_latency_s=0.1)
+    assert s.target_batch == 1024  # optimistic until observations arrive
+    s.observe_service(batch_size=128, dt_s=1.28)  # 10 ms/query -> target 10
+    assert s.target_batch == 16  # bucketed up from 10
+    for _ in range(20):  # hardware speeds up 100x -> target grows
+        s.observe_service(batch_size=128, dt_s=0.0128)
+    assert s.target_batch == 1024
+    for _ in range(20):  # hardware melts -> target collapses
+        s.observe_service(batch_size=16, dt_s=16.0)
+    assert s.target_batch == 1
+
+
+def test_scheduler_deadline_flush_with_fake_clock():
+    now = itertools.count()  # each clock() call advances 1 "second"
+    s = BatchScheduler(max_batch=8, max_wait_s=5.0, clock=lambda: next(now))
+    s.observe_service(8, 2.0 * s.target_latency_s)  # pin target well above 1
+    assert s.target_batch > 1
+    s.submit("a", 1)  # enqueued at t=0
+    # each ready() poll advances the fake clock 1s; under target the batch
+    # is held until the oldest request has waited max_wait_s
+    polls = 0
+    while not s.ready():
+        polls += 1
+        assert polls < 10, "deadline never tripped"
+    assert polls == 4  # trips at t=5 = max_wait_s
+    assert [r.client for r in s.next_batch()] == ["a"]
+    assert not s.ready()  # empty queue is never ready
+
+
+def test_scheduler_truncates_at_max_batch():
+    s = BatchScheduler(max_batch=4)
+    for i in range(11):
+        s.submit(f"c{i}", i)
+    sizes = []
+    while len(s):
+        sizes.append(len(s.next_batch()))
+    assert sizes == [4, 4, 3]
+
+
+def test_pipeline_pads_and_truncates():
+    store = make_synthetic_store(64, 8, seed=0)
+    pipe = ServingPipeline(
+        store, make_scheme("chor", d=2, d_a=1),
+        scheduler=BatchScheduler(max_batch=4),
+    )
+    for i in range(6):
+        assert pipe.submit(f"c{i}", i * 9 % 64)
+    out = pipe.step()  # serves 4 of 6, truncation leaves 2 queued
+    assert len(out) == 4 and len(pipe.scheduler) == 2
+    assert pipe.metrics["truncated"] == 1
+    out.update(pipe.flush())  # drains the remaining 2, padded 2 -> 2 (pow2)
+    assert len(out) == 6
+    # batch of 3 pads to 4: check via a fresh pipeline
+    pipe2 = ServingPipeline(
+        store, make_scheme("chor", d=2, d_a=1),
+        scheduler=BatchScheduler(max_batch=8),
+    )
+    for i in range(3):
+        pipe2.submit(f"c{i}", i)
+    out2 = pipe2.flush()
+    assert pipe2.metrics["padded"] == 1  # 3 -> bucket 4
+    for i in range(3):
+        assert (out2[f"c{i}"] == store.record_bytes(i)).all()
+
+
+# ---------------------------------------------------------------- router
+def test_router_dispatch_kinds():
+    key = jax.random.key(0)
+    q = jnp.array([3, 7])
+    n = 64
+    for name, kw, kind, d_eff in [
+        ("chor", {}, "mask", 4),
+        ("sparse", dict(theta=0.25), "mask", 4),
+        ("as-sparse", dict(theta=0.25, u=16), "mask", 4),
+        ("subset", dict(t=3), "mask", 3),
+        ("direct", dict(p=8), "index", 4),
+        ("as-direct", dict(p=8, u=16), "index", 4),
+    ]:
+        router = SchemeRouter(make_scheme(name, d=4, d_a=2, **kw))
+        routed = router.plan(key, n, q)
+        assert routed.kind == kind, name
+        assert len(routed.servers) == d_eff, name
+        assert routed.payload.shape[0] == d_eff, name
+        assert routed.payload.shape[1] == 2, name
+
+
+def test_router_subset_uses_policy_servers():
+    router = SchemeRouter(
+        make_scheme("subset", d=8, d_a=3, t=3),
+        pick_servers=lambda t: [6, 1, 4][:t],
+    )
+    routed = router.plan(jax.random.key(1), 32, jnp.array([5]))
+    assert routed.servers == (6, 1, 4)
+
+
+def test_router_mask_reconstruction_is_exact():
+    store = make_synthetic_store(128, 12, seed=2)
+    router = SchemeRouter(make_scheme("sparse", d=3, d_a=1, theta=0.3))
+    backend = ShardedBackend(store)
+    q = jnp.array([0, 64, 127])
+    routed = router.plan(jax.random.key(3), store.n, q)
+    out = router.finalize(routed, backend.answer_batch(routed))
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(store.packed)[np.asarray(q)]
+    )
+
+
+# -------------------------------------------------------------- pipeline
+def test_pipeline_budget_exhaustion_refusal():
+    store = make_synthetic_store(128, 16, seed=0)
+    sch = make_scheme("sparse", d=4, d_a=2, theta=0.25)
+    eps = sch.epsilon(store.n)
+    pipe = ServingPipeline(
+        store, sch,
+        default_budget=lambda: PrivacyBudget(epsilon_limit=2.5 * eps),
+    )
+    assert pipe.submit("c", 1) and pipe.submit("c", 2)
+    assert not pipe.submit("c", 3)  # third exceeds 2.5x eps
+    assert pipe.metrics["refused"] == 1
+    assert pipe.submit("other", 3)  # budgets are per client
+
+
+def test_pipeline_subset_straggler_selection():
+    store = make_synthetic_store(256, 16, seed=1)
+    sch = make_scheme("subset", d=8, d_a=3, t=3)
+    slow = {2, 5}
+    lat = {i: (0.05 if i in slow else 0.001) for i in range(8)}
+    pipe = ServingPipeline(store, sch, simulate_latency=lambda s: lat[s])
+    for _ in range(5):  # warm the latency EMAs across replicas
+        pipe.submit("c", 7)
+        out = pipe.flush()
+    assert (out["c"] == store.record_bytes(7)).all()
+    chosen = set(pipe.fastest_servers(3))
+    assert not (chosen & slow), f"straggler chosen: {chosen}"
+    # the contacted set the router actually uses excludes the stragglers too
+    routed = pipe.router.plan(jax.random.key(0), store.n, jnp.array([7]))
+    assert not (set(routed.servers) & slow)
+
+
+def test_pipeline_all_schemes_correct_and_paths_used():
+    store = make_synthetic_store(512, 24, seed=2)
+    for name, kw, path in [
+        ("chor", {}, "fold"),
+        ("sparse", dict(theta=0.3), "sparse"),
+        ("direct", dict(p=20), "direct"),
+        ("subset", dict(t=3), "fold"),
+        ("as-sparse", dict(theta=0.3, u=64), "sparse"),
+    ]:
+        pipe = ServingPipeline(store, make_scheme(name, d=5, d_a=2, **kw))
+        pipe.submit("x", 99)
+        pipe.submit("y", 500)
+        out = pipe.flush()
+        assert (out["x"] == store.record_bytes(99)).all(), name
+        assert (out["y"] == store.record_bytes(500)).all(), name
+        assert pipe.backend.path_counts[path] > 0, name
+
+
+def test_pipeline_parity_path_above_crossover():
+    store = make_synthetic_store(128, 8, seed=4)
+    pipe = ServingPipeline(
+        store, make_scheme("chor", d=2, d_a=1),
+        scheduler=BatchScheduler(max_batch=16),
+        backend=ShardedBackend(store, parity_min_batch=8),
+    )
+    for i in range(16):
+        pipe.submit(f"c{i}", i * 7 % 128)
+    out = pipe.flush()
+    assert pipe.backend.path_counts["parity"] == 2  # both servers, MXU path
+    for i in range(16):
+        assert (out[f"c{i}"] == store.record_bytes(i * 7 % 128)).all()
+
+
+def test_pipeline_poll_serves_on_target_or_deadline():
+    store = make_synthetic_store(64, 8, seed=3)
+    now = itertools.count()
+    sched = BatchScheduler(max_batch=8, max_wait_s=3.0, clock=lambda: next(now))
+    sched.observe_service(8, 4 * sched.target_latency_s)  # pin target to 2
+    assert sched.target_batch == 2
+    pipe = ServingPipeline(store, make_scheme("chor", d=2, d_a=1),
+                           scheduler=sched)
+    pipe.submit("a", 5)  # 1 queued < target
+    assert pipe.poll() == {}  # not ready: under target, deadline not hit
+    pipe.submit("b", 6)  # target reached
+    out = pipe.poll()
+    assert set(out) == {"a", "b"}
+    # deadline path: a lone request is served once it has waited max_wait_s
+    pipe.submit("c", 7)
+    polls = 0
+    while not (out := pipe.poll()):
+        polls += 1
+        assert polls < 10, "deadline never tripped"
+    assert set(out) == {"c"} and (out["c"] == store.record_bytes(7)).all()
+
+
+def test_pir_ct_config_builds_pipeline():
+    """The paper's workload config wires straight into the subsystem."""
+    from repro.configs import get_arch
+
+    mod = get_arch("pir-ct")
+    cfg = mod.reduced()
+    pipe = mod.make_serving_pipeline(cfg, seed=1)
+    assert pipe.scheme.name == cfg.scheme and pipe.scheme.d == cfg.d
+    assert pipe.scheduler.max_batch == cfg.query_batch
+    assert pipe.scheduler.max_wait_s == pytest.approx(cfg.max_wait_ms / 1e3)
+    assert pipe.submit("c", 5)
+    assert (pipe.flush()["c"] == pipe.store.record_bytes(5)).all()
+
+
+def test_engine_facade_back_compat():
+    """The old one-file engine surface still works, verbatim."""
+    store = make_synthetic_store(128, 16, seed=5)
+    eng = PIRServingEngine(
+        store, make_scheme("sparse", d=4, d_a=2, theta=0.25), max_batch=64,
+        simulate_latency=lambda s: 0.001, seed=3,
+    )
+    assert isinstance(eng, ServingPipeline)
+    assert eng.max_batch == 64
+    assert eng.submit("alice", 17)
+    out = eng.flush()
+    assert (out["alice"] == store.record_bytes(17)).all()
+    assert eng.metrics["queries"] == 1 and eng.metrics["batches"] == 1
+    assert set(eng.stats) == set(range(4))  # per-replica straggler EMAs
+    assert len(eng.fastest_servers(2)) == 2
+    assert eng.budget("alice").spent_epsilon > 0
+
+
+def test_engine_facade_flush_serves_one_batch_like_old_engine():
+    """Old engine contract: flush() serves ≤ max_batch and leaves the rest
+    queued (ServingPipeline.flush drains; the facade must not)."""
+    store = make_synthetic_store(64, 8, seed=6)
+    eng = PIRServingEngine(store, make_scheme("chor", d=2, d_a=1), max_batch=4)
+    for i in range(6):
+        eng.submit(f"c{i}", i)
+    first = eng.flush()
+    assert len(first) == 4 and len(eng.scheduler) == 2
+    second = eng.flush()
+    assert len(second) == 2 and eng.flush() == {}
