@@ -1,12 +1,16 @@
 """PIR-backed DLRM serving — the paper's technique wired into a model.
 
 The sparse-feature embedding lookup is an index→record retrieval against an
-operator-held table: exactly the PIR setting (DESIGN.md §4). Here a DLRM
+operator-held table: exactly the PIR setting (DESIGN.md
+§Arch-applicability). Here a DLRM
 scores requests with its embedding lookups routed through the Sparse-PIR
-*serving pipeline* (queue → scheme router → execution backend): every
-per-example id is submitted as one query, the scheduler cuts one padded
-batch per table, and the accountant prices each admitted query. Outputs
-are BIT-EXACT equal to the plaintext model (XOR transports raw float bits).
+*serving pipeline* behind the concurrent ingest front (DESIGN.md §Async
+front): every per-example id is submitted as a future through the
+``AsyncFrontend``, the flush worker cuts one padded batch per table, the
+accountant prices each admitted query, and the cross-batch ``QueryCache``
+absorbs repeated ids (hits still spend ε — DESIGN.md §Cross-batch cache).
+Outputs are BIT-EXACT equal to the plaintext model (XOR transports raw
+float bits).
 
     PYTHONPATH=src python examples/private_dlrm_serving.py
 """
@@ -21,7 +25,7 @@ from repro.core.accounting import PrivacyBudget
 from repro.data import pipeline as pipe
 from repro.db.store import RecordStore
 from repro.models import recsys as R
-from repro.serve import BatchScheduler, ServingPipeline
+from repro.serve import AsyncFrontend, BatchScheduler, QueryCache, ServingPipeline
 
 cfg = get_arch("dlrm-rm2").reduced()
 params = R.dlrm_init(jax.random.key(0), cfg)
@@ -31,33 +35,50 @@ batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
 # ---- plaintext baseline ---------------------------------------------------
 plain_scores = R.dlrm_score(params, cfg, batch)
 
-# ---- PIR-backed lookup through the serving pipeline -----------------------
+# ---- PIR-backed lookup through the async serving front --------------------
 D, D_A, THETA = 4, 2, 0.25
 scheme = make_scheme("sparse", d=D, d_a=D_A, theta=THETA)
 budget = PrivacyBudget(epsilon_limit=1e6)
-total_padded = 0
+# one persistent pipeline (and cross-batch cache) per embedding table, so
+# a later pass over the same requests can hit the per-(client, index) memo
+pipelines = {}
 
 
 def pir_lookup(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
-    """Embedding gather via the batch-scheduled Sparse-PIR pipeline."""
-    global total_padded
-    serving = ServingPipeline(
-        RecordStore.from_float_table(table), scheme,
-        scheduler=BatchScheduler(max_batch=4096),
-        default_budget=lambda: budget,  # all lookups drain ONE shared budget
-        seed=42,
-    )
+    """Embedding gather via Sparse-PIR: concurrent futures -> drain -> rows."""
+    serving = pipelines.get(id(table))
+    if serving is None:
+        store = RecordStore.from_float_table(table)
+        serving = pipelines[id(table)] = ServingPipeline(
+            store, scheme,
+            scheduler=BatchScheduler(max_batch=4096),
+            cache=QueryCache(scheme, store.n, max_entries=1024),
+            default_budget=lambda: budget,  # all lookups drain ONE budget
+            seed=42,
+        )
     flat = np.asarray(ids).reshape(-1)
-    for j, idx in enumerate(flat):
-        assert serving.submit(f"row{j}", int(idx))
-    answers = serving.flush()  # one padded batch per embedding table
-    total_padded += serving.metrics["padded"]
-    raw = np.stack([answers[f"row{j}"] for j in range(flat.shape[0])])
+    with AsyncFrontend(serving, ingest_workers=2, queue_limit=8192) as front:
+        # the client is the requesting example: a user re-polling the same
+        # id in the same table is the only thing the memo may ever serve
+        futures = [front.submit(f"user{j}", int(idx))
+                   for j, idx in enumerate(flat)]
+        front.drain()
+        raw = np.stack([f.result(timeout=10.0) for f in futures])
     rows = jnp.asarray(raw.view(np.float32))  # bytes -> f32, bit-exact
     return rows.reshape(*ids.shape, table.shape[1])
 
 
 pir_scores = R.dlrm_score(params, cfg, batch, lookup_fn=pir_lookup)
+lookups_per_pass = sum(p.metrics["queries"] for p in pipelines.values())
+
+# the §2.2 correlated-query pattern: the same users re-poll the same ids
+# (a monitor re-scoring) — every (client, index) repeats, so the whole
+# second pass is served from the memo, yet admission still spends ε per hit
+repoll_scores = R.dlrm_score(params, cfg, batch, lookup_fn=pir_lookup)
+total_hits = sum(p.metrics["cache_hits"] for p in pipelines.values())
+total_padded = sum(p.metrics["padded"] for p in pipelines.values())
+assert bool((np.asarray(repoll_scores) == np.asarray(plain_scores)).all())
+assert total_hits == lookups_per_pass, (total_hits, lookups_per_pass)
 
 exact = bool((np.asarray(pir_scores) == np.asarray(plain_scores)).all())
 vocab = cfg.n_sparse * cfg.vocab_per_field
@@ -72,6 +93,7 @@ print(f"eps per lookup  : {scheme.epsilon(vocab):.4f}")
 print(f"eps per request : {eps_q:.4f} ({cfg.n_sparse} field lookups)")
 print(f"records touched per server per lookup: {THETA * vocab:.0f} "
       f"(Sparse-PIR) vs {vocab / 2:.0f} expected (Chor) of {vocab}")
-print(f"budget spent    : {budget.spent_epsilon:.2f}")
-print(f"scheduler       : {cfg.n_sparse} batches (one per table), "
-      f"{total_padded} pad slots to the pow2 buckets")
+print(f"budget spent    : {budget.spent_epsilon:.2f} over two passes "
+      f"(the re-poll's {total_hits} cache hits spent ε too)")
+print(f"scheduler       : {cfg.n_sparse} tables served through the async "
+      f"front, {total_padded} pad slots to the pow2 buckets")

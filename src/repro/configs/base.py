@@ -154,3 +154,8 @@ class PIRConfig:
     # serving-pipeline knobs (repro.serve.BatchScheduler)
     max_wait_ms: float = 5.0          # deadline before a partial batch cuts
     target_latency_ms: float = 50.0   # adaptive batch-size target
+    # async ingest front (repro.serve.frontend, DESIGN.md §Async front)
+    ingest_workers: int = 2           # concurrent admission threads
+    queue_limit: int = 8192           # bounded ingest queue (backpressure)
+    # cross-batch cache (repro.serve.cache, DESIGN.md §Cross-batch cache)
+    cache_entries: int = 4096         # per-(client, index) memo slots; 0 = off

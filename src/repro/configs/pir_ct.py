@@ -55,19 +55,37 @@ def scheme_from_config(cfg: PIRConfig = CONFIG):
 
 def make_serving_pipeline(cfg: PIRConfig = CONFIG, store=None, **kw):
     """PIRConfig -> repro.serve.ServingPipeline (synthetic store unless one
-    is passed). ``kw`` forwards to the pipeline (budgets, backend, seed)."""
+    is passed). ``kw`` forwards to the pipeline (budgets, backend, seed).
+    ``cfg.cache_entries > 0`` attaches the cross-batch QueryCache."""
     from repro.db import make_synthetic_store
-    from repro.serve import BatchScheduler, ServingPipeline
+    from repro.serve import BatchScheduler, QueryCache, ServingPipeline
 
     if store is None:
         store = make_synthetic_store(cfg.n_records, cfg.record_bytes, seed=0)
+    scheme = scheme_from_config(cfg)
+    if cfg.cache_entries > 0 and "cache" not in kw:
+        kw["cache"] = QueryCache(scheme, store.n, max_entries=cfg.cache_entries)
     return ServingPipeline(
         store,
-        scheme_from_config(cfg),
+        scheme,
         scheduler=BatchScheduler(
             max_batch=cfg.query_batch,
             max_wait_s=cfg.max_wait_ms / 1e3,
             target_latency_s=cfg.target_latency_ms / 1e3,
         ),
         **kw,
+    )
+
+
+def make_async_frontend(cfg: PIRConfig = CONFIG, store=None, **kw):
+    """PIRConfig -> repro.serve.AsyncFrontend over the config's pipeline:
+    the one-call path from the paper's workload to a concurrent, budgeted,
+    cached server. Not started — use ``with make_async_frontend(cfg):`` or
+    call ``.start()``. ``kw`` forwards to :func:`make_serving_pipeline`."""
+    from repro.serve import AsyncFrontend
+
+    return AsyncFrontend(
+        make_serving_pipeline(cfg, store=store, **kw),
+        ingest_workers=cfg.ingest_workers,
+        queue_limit=cfg.queue_limit,
     )

@@ -16,6 +16,8 @@ validated against these in tests/test_kernels.py.
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
@@ -23,6 +25,9 @@ from repro.db import packing
 from repro.db.store import RecordStore
 
 __all__ = [
+    "ChorPre",
+    "precompute_queries",
+    "assemble_queries",
     "gen_queries",
     "query_masks",
     "server_answer",
@@ -32,27 +37,69 @@ __all__ = [
 ]
 
 
+@dataclasses.dataclass(frozen=True)
+class ChorPre:
+    """The query-independent half of a Chor batch plan.
+
+    ``rand`` ([d−1, B, Wn] uint32) are the first d−1 request vectors —
+    pure randomness, independent of which records the batch asks for —
+    and ``fold`` ([B, Wn]) is their XOR. Only the last vector depends on
+    the queried indices (``fold ^ e_Q``), so a serving front can generate
+    a ``ChorPre`` for an upcoming batch *ahead of time* (off the flush
+    critical path) and :func:`assemble_queries` finishes the plan with one
+    scatter + one XOR. Single-use by contract: reusing one ChorPre for two
+    batches would correlate the adversary's views across those batches
+    (DESIGN.md §Cross-batch cache).
+    """
+
+    rand: jnp.ndarray  # [d-1, B, Wn] uint32
+    fold: jnp.ndarray  # [B, Wn] uint32
+    n: int
+
+    @property
+    def d(self) -> int:
+        return int(self.rand.shape[0]) + 1
+
+    @property
+    def batch(self) -> int:
+        return int(self.rand.shape[1])
+
+
+def precompute_queries(key: jax.Array, n: int, d: int, b: int) -> ChorPre:
+    """Pre-generate the query-independent randomness for a [B]-batch."""
+    if d < 2:
+        raise ValueError(f"Chor PIR needs d >= 2 servers, got {d}")
+    wn = packing.words_per_record(n)
+    rand = jax.random.bits(key, (d - 1, b, wn), dtype=jnp.uint32)
+    fold = jax.lax.reduce(rand, jnp.uint32(0), jax.lax.bitwise_xor, (0,))
+    return ChorPre(rand=rand, fold=fold, n=n)
+
+
+def assemble_queries(pre: ChorPre, q_idx: jnp.ndarray) -> jnp.ndarray:
+    """Finish a precomputed plan for the actual indices: [d, B, Wn]."""
+    (b,) = q_idx.shape
+    if b != pre.batch:
+        raise ValueError(f"pre built for batch {pre.batch}, got {b}")
+    # packed one-hot e_Q
+    word = q_idx // packing.WORD_BITS
+    bit = (q_idx % packing.WORD_BITS).astype(jnp.uint32)
+    e_q = jnp.zeros((b, pre.fold.shape[-1]), jnp.uint32).at[
+        jnp.arange(b), word
+    ].set(jnp.uint32(1) << bit)
+    last = pre.fold ^ e_q
+    return jnp.concatenate([pre.rand, last[None]], axis=0)
+
+
 def gen_queries(key: jax.Array, n: int, d: int, q_idx: jnp.ndarray) -> jnp.ndarray:
     """Request vectors for a batch of queries.
 
     Returns packed bits, shape [d, B, Wn] uint32 with Wn = ceil(n/32);
     the element-wise XOR over axis 0 unpacks to one-hot(q_idx, n).
+    Literally ``assemble_queries(precompute_queries(...), q_idx)``, so the
+    cached/prefetched serving path is bit-identical by construction.
     """
-    if d < 2:
-        raise ValueError(f"Chor PIR needs d >= 2 servers, got {d}")
     (b,) = q_idx.shape
-    wn = packing.words_per_record(n)
-    rand = jax.random.bits(key, (d - 1, b, wn), dtype=jnp.uint32)
-    # packed one-hot e_Q
-    word = q_idx // packing.WORD_BITS
-    bit = (q_idx % packing.WORD_BITS).astype(jnp.uint32)
-    e_q = jnp.zeros((b, wn), jnp.uint32).at[jnp.arange(b), word].set(
-        jnp.uint32(1) << bit
-    )
-    last = jax.lax.reduce(
-        rand, jnp.uint32(0), jax.lax.bitwise_xor, (0,)
-    ) ^ e_q
-    return jnp.concatenate([rand, last[None]], axis=0)
+    return assemble_queries(precompute_queries(key, n, d, b), q_idx)
 
 
 def query_masks(q_packed: jnp.ndarray, n: int) -> jnp.ndarray:

@@ -15,6 +15,7 @@ kernel exploits (C_p = θ·d·n·(c_acc+c_prc), Table 1).
 
 from __future__ import annotations
 
+import dataclasses
 import math
 
 import jax
@@ -25,6 +26,9 @@ from repro.core import chor
 
 __all__ = [
     "parity_weight_logits",
+    "SparsePre",
+    "precompute_query_randomness",
+    "assemble_query_matrix",
     "gen_query_matrix",
     "gen_queries",
     "server_answer",
@@ -57,6 +61,65 @@ def parity_weight_logits(d: int, theta: float) -> np.ndarray:
     return out
 
 
+@dataclasses.dataclass(frozen=True)
+class SparsePre:
+    """The query-independent half of a Sparse-PIR batch plan.
+
+    Everything expensive about sampling the [d, B, n] query matrix — the
+    parity-conditioned weight draws over the whole column grid and the
+    double argsort that ranks the d server slots per column — does not
+    depend on which records the batch asks for. ``w_even`` are the even-
+    parity weights for every column, ``w_q`` the odd-parity weights the
+    queried columns will be switched to, and ``ranks`` the uniform slot
+    ranking. :func:`assemble_query_matrix` finishes the plan with one
+    scatter + one compare. Single-use by contract (DESIGN.md §Cross-batch
+    cache): ranks are stored uint8 (d ≤ 255) to keep a pooled batch at
+    B·n·d bytes.
+    """
+
+    w_even: jnp.ndarray  # [B, n] int32 even-parity column weights
+    w_q: jnp.ndarray     # [B] int32 odd-parity weights for queried columns
+    ranks: jnp.ndarray   # [B, n, d] uint8 slot ranks
+    n: int
+
+    @property
+    def d(self) -> int:
+        return int(self.ranks.shape[-1])
+
+    @property
+    def batch(self) -> int:
+        return int(self.ranks.shape[0])
+
+
+def precompute_query_randomness(
+    key: jax.Array, n: int, d: int, theta: float, b: int
+) -> SparsePre:
+    """Pre-sample the query-independent randomness for a [B]-batch."""
+    if d < 2:
+        raise ValueError(f"Sparse-PIR needs d >= 2 servers, got {d}")
+    if d > 255:
+        raise ValueError(f"uint8 rank storage needs d <= 255, got {d}")
+    logits = jnp.asarray(parity_weight_logits(d, theta), jnp.float32)
+    k_even, k_odd, k_pos = jax.random.split(key, 3)
+    w_even = jax.random.categorical(k_even, logits[0], shape=(b, n))
+    w_q = jax.random.categorical(k_odd, logits[1], shape=(b,))
+    # uniform choice of `w` positions out of d: rank the d slots by iid
+    # uniforms and keep ranks < w. argsort-of-argsort yields the rank.
+    u = jax.random.uniform(k_pos, (b, n, d))
+    ranks = jnp.argsort(jnp.argsort(u, axis=-1), axis=-1).astype(jnp.uint8)
+    return SparsePre(w_even=w_even, w_q=w_q, ranks=ranks, n=n)
+
+
+def assemble_query_matrix(pre: SparsePre, q_idx: jnp.ndarray) -> jnp.ndarray:
+    """Finish a precomputed plan for the actual indices: [d, B, n] uint8."""
+    (b,) = q_idx.shape
+    if b != pre.batch:
+        raise ValueError(f"pre built for batch {pre.batch}, got {b}")
+    w = pre.w_even.at[jnp.arange(b), q_idx].set(pre.w_q)  # [B, n] weights
+    m = (pre.ranks < w[..., None].astype(jnp.uint8)).astype(jnp.uint8)
+    return jnp.transpose(m, (2, 0, 1))  # [d, B, n]
+
+
 def gen_query_matrix(
     key: jax.Array, n: int, d: int, theta: float, q_idx: jnp.ndarray
 ) -> jnp.ndarray:
@@ -65,23 +128,13 @@ def gen_query_matrix(
     Column parity is even everywhere except at q_idx (odd), so rows XOR to
     one-hot(q_idx). Each column's weight follows the parity-conditioned
     Binomial(d, θ); positions of the ones are uniform given the weight.
+    Literally ``assemble_query_matrix(precompute_query_randomness(...))``,
+    so the cached/prefetched serving path is bit-identical by construction.
     """
-    if d < 2:
-        raise ValueError(f"Sparse-PIR needs d >= 2 servers, got {d}")
     (b,) = q_idx.shape
-    logits = jnp.asarray(parity_weight_logits(d, theta), jnp.float32)
-    k_even, k_odd, k_pos = jax.random.split(key, 3)
-
-    w = jax.random.categorical(k_even, logits[0], shape=(b, n))
-    w_q = jax.random.categorical(k_odd, logits[1], shape=(b,))
-    w = w.at[jnp.arange(b), q_idx].set(w_q)  # [B, n] weights
-
-    # uniform choice of `w` positions out of d: rank the d slots by iid
-    # uniforms and keep ranks < w. argsort-of-argsort yields the rank.
-    u = jax.random.uniform(k_pos, (b, n, d))
-    ranks = jnp.argsort(jnp.argsort(u, axis=-1), axis=-1)
-    m = (ranks < w[..., None]).astype(jnp.uint8)  # [B, n, d]
-    return jnp.transpose(m, (2, 0, 1))  # [d, B, n]
+    return assemble_query_matrix(
+        precompute_query_randomness(key, n, d, theta, b), q_idx
+    )
 
 
 def gen_queries(

@@ -3,13 +3,21 @@
     PYTHONPATH=src python -m repro.launch.serve --scheme sparse --theta 0.25 \
         --n 8192 --record-bytes 256 --d 10 --da 5 --queries 256
 
+    # concurrent ingest + cross-batch cache (DESIGN.md §Async front):
+    PYTHONPATH=src python -m repro.launch.serve --frontend async \
+        --ingest-workers 4 --cache-entries 4096 --submitters 8
+
 Prints per-batch latency, throughput, the (ε, δ) price per query, and the
 engine's cumulative cost metrics (records touched vs the Table-1 model).
+The async path submits from ``--submitters`` concurrent threads through
+the bounded ingest queue and reports end-to-end future-resolution
+throughput plus cache/frontend counters.
 """
 
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 
 import numpy as np
@@ -17,10 +25,15 @@ import numpy as np
 from repro.core import make_scheme
 from repro.core.accounting import PrivacyBudget
 from repro.db import make_synthetic_store
-from repro.serve import BatchScheduler, ServingPipeline
+from repro.serve import (
+    AsyncFrontend,
+    BatchScheduler,
+    QueryCache,
+    ServingPipeline,
+)
 
 
-def main() -> None:
+def build_args() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scheme", default="sparse",
                     choices=["chor", "sparse", "as-sparse", "direct",
@@ -37,8 +50,19 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--max-wait-ms", type=float, default=0.0)
     ap.add_argument("--eps-budget", type=float, default=float("inf"))
-    args = ap.parse_args()
+    ap.add_argument("--frontend", choices=["sync", "async"], default="sync",
+                    help="sync: submit+flush loop; async: AsyncFrontend "
+                         "ingest queue with per-request futures")
+    ap.add_argument("--ingest-workers", type=int, default=2)
+    ap.add_argument("--queue-limit", type=int, default=8192)
+    ap.add_argument("--submitters", type=int, default=4,
+                    help="concurrent submitter threads (async frontend)")
+    ap.add_argument("--cache-entries", type=int, default=0,
+                    help="cross-batch cache slots; 0 disables the cache")
+    return ap
 
+
+def make_engine(args) -> ServingPipeline:
     kw = {}
     if args.scheme in ("sparse", "as-sparse"):
         kw["theta"] = args.theta
@@ -51,21 +75,23 @@ def main() -> None:
 
     scheme = make_scheme(args.scheme, d=args.d, d_a=args.da, **kw)
     store = make_synthetic_store(args.n, args.record_bytes, seed=0)
-    engine = ServingPipeline(
+    cache = (
+        QueryCache(scheme, store.n, max_entries=args.cache_entries)
+        if args.cache_entries > 0 else None
+    )
+    return ServingPipeline(
         store, scheme,
         scheduler=BatchScheduler(
             max_batch=args.batch, max_wait_s=args.max_wait_ms / 1e3
         ),
+        cache=cache,
         default_budget=lambda: PrivacyBudget(
             epsilon_limit=args.eps_budget, delta_limit=1.0
         ),
     )
 
-    print(f"scheme={args.scheme} n={args.n} d={args.d} d_a={args.da}")
-    print(f"eps/query={scheme.epsilon(args.n):.4g} "
-          f"delta/query={scheme.delta(args.n):.4g} "
-          f"costs={scheme.costs(args.n)}")
 
+def run_sync(args, engine: ServingPipeline) -> None:
     rng = np.random.default_rng(1)
     served = 0
     t_start = time.perf_counter()
@@ -82,12 +108,74 @@ def main() -> None:
         dt = time.perf_counter() - t0
         # verify a sample
         q0 = int(idx[0])
-        assert (out[f"client-0"] == store.record_bytes(q0)).all() or True
+        assert (out[f"client-0"] == engine.store.record_bytes(q0)).all() or True
         served += nq
         print(f"batch of {nq:4d} served in {dt*1e3:7.1f} ms "
               f"({nq/dt:8.0f} qps)")
     wall = time.perf_counter() - t_start
     print(f"\n{served} queries in {wall:.2f}s; engine metrics: {engine.metrics}")
+
+
+def run_async(args, engine: ServingPipeline) -> None:
+    rng = np.random.default_rng(1)
+    per = -(-args.queries // args.submitters)
+    indices = [rng.integers(0, args.n, size=per) for _ in range(args.submitters)]
+    futures = [[] for _ in range(args.submitters)]
+
+    with AsyncFrontend(
+        engine, ingest_workers=args.ingest_workers,
+        queue_limit=args.queue_limit, shed_policy="block",
+    ) as fe:
+        t_start = time.perf_counter()
+
+        def feed(s: int) -> None:
+            for j, q in enumerate(indices[s]):
+                futures[s].append(
+                    fe.submit(f"client-{s}-{j % 32}", int(q))
+                )
+
+        threads = [
+            threading.Thread(target=feed, args=(s,))
+            for s in range(args.submitters)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        fe.drain()
+        wall = time.perf_counter() - t_start
+
+        refused = served = 0
+        for s, futs in enumerate(futures):
+            for j, fut in enumerate(futs):
+                try:
+                    answer = fut.result(timeout=5.0)
+                    expect = engine.store.record_bytes(int(indices[s][j]))
+                    assert (answer == expect).all()
+                    served += 1
+                except PermissionError:
+                    refused += 1
+        print(f"{served} served (+{refused} budget-refused) from "
+              f"{args.submitters} concurrent submitters in {wall:.2f}s "
+              f"({served/wall:8.0f} qps end-to-end, futures verified exact)")
+        print(f"frontend metrics: {fe.metrics}")
+
+
+def main() -> None:
+    args = build_args().parse_args()
+    engine = make_engine(args)
+    scheme = engine.scheme
+
+    print(f"scheme={args.scheme} n={args.n} d={args.d} d_a={args.da} "
+          f"frontend={args.frontend}")
+    print(f"eps/query={scheme.epsilon(args.n):.4g} "
+          f"delta/query={scheme.delta(args.n):.4g} "
+          f"costs={scheme.costs(args.n)}")
+
+    if args.frontend == "async":
+        run_async(args, engine)
+    else:
+        run_sync(args, engine)
     print(f"scheduler target batch: {engine.scheduler.target_batch}; "
           f"backend paths: {engine.backend.path_counts}")
 

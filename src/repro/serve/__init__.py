@@ -6,21 +6,37 @@ configured scheme, ``ShardedBackend`` answers them (single-host kernels
 off-mesh; record-sharded Pallas + GF(2) collectives under an active
 ``repro.dist`` mesh). ``ServingPipeline`` composes the three and enforces
 per-client (ε, δ) budgets; ``PIRServingEngine`` is the back-compat facade.
+
+In front of and across the pipeline: ``AsyncFrontend`` is the thread-
+backed (asyncio-compatible) concurrent ingest stage with per-request
+futures, backpressure and graceful drain (DESIGN.md §Async front), and
+``QueryCache`` the budget-aware cross-batch cache — per-(client, index)
+answer memoization plus single-use precomputed batch randomness, every
+hit still priced through the privacy budget (DESIGN.md §Cross-batch
+cache).
 """
 
+from repro.serve.cache import CacheEntry, QueryCache, scheme_signature
 from repro.serve.engine import PIRServingEngine, ServingPipeline
-from repro.serve.router import RoutedBatch, SchemeRouter
+from repro.serve.frontend import AsyncFrontend, BackpressureError
+from repro.serve.router import RoutedBatch, SchemeRouter, SubsetPre
 from repro.serve.scheduler import BatchScheduler, Request, bucket_size
 from repro.serve.sharded import ServerStats, ShardedBackend
 
 __all__ = [
+    "AsyncFrontend",
+    "BackpressureError",
     "BatchScheduler",
+    "CacheEntry",
     "PIRServingEngine",
+    "QueryCache",
     "Request",
     "RoutedBatch",
     "SchemeRouter",
     "ServerStats",
     "ServingPipeline",
     "ShardedBackend",
+    "SubsetPre",
     "bucket_size",
+    "scheme_signature",
 ]

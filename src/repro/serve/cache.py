@@ -1,0 +1,204 @@
+"""Cross-batch query cache: budget-aware memoization for the serving path.
+
+Caching is exactly where ε-PIR diverges from exact PIR. An exact-PIR
+response is worthless to replay (fresh randomness per query is free and
+perfect), but an ε-private scheme *prices* every query — so a cache that
+reuses work across batches changes what the adversary sees and must be
+reasoned about in the paper's (ε, δ) terms (§2.2; see DESIGN.md
+§Cross-batch cache). Two surfaces, two different privacy arguments:
+
+**L1 — per-client query memo.** ``lookup``/``insert`` memoize, per
+(client, index), the exact per-server query columns the client sent and
+the reconstructed answer. A repeat of the *same* query by the *same*
+client is served from the memo: the servers see nothing new (the entry is
+either absorbed locally or a bit-identical replay), so the adversary's
+likelihood ratio is unchanged from the first occurrence — replayed
+randomness leaks nothing beyond the one query it already priced
+(tests/test_statistical_privacy.py measures this). The privacy rule is
+structural: the cache key *is* (client, index), so cached randomness can
+never be reused across distinct client queries — a different index or a
+different client is a different key and always gets fresh randomness.
+Conservatively, **every hit still spends (ε, δ)**: admission control in
+the pipeline charges the budget before the cache is ever consulted, so a
+hit and a miss are indistinguishable to the accountant and exhausted
+clients are refused even when the answer sits in cache.
+
+**L2 — single-use precompute pool.** ``put_pre``/``take_pre`` hold
+pre-generated *query-independent* randomness for upcoming batches, keyed
+(scheme, params, bucket): :class:`repro.core.chor.ChorPre` /
+:class:`repro.core.sparse.SparsePre` objects the async frontend fills
+while the flush worker is idle. Entries are popped exactly once — a pre
+batch is fresh randomness that has never touched a wire, and using it for
+one batch is distributionally identical to generating it inline
+(bit-identical by construction: ``gen_queries = assemble ∘ precompute``).
+Reuse across batches is forbidden for the same reason L1 keys are
+structural: two batches sharing randomness would hand the adversary
+correlated views. ``take_pre`` removes the entry; there is no peek.
+
+Memory: L1 is an LRU bounded by ``max_entries``; query columns larger
+than ``max_query_vector_bytes`` are dropped (the answer memo alone still
+short-circuits the server round-trip). L2 is bounded by
+``max_pre_batches`` per bucket — a SparsePre for bucket B costs ≈ B·n·d
+bytes, so the pool depth, not the entry count, is the knob.
+
+The cache assumes the record store is immutable for its lifetime (the
+synthetic and CT stores are); call :meth:`QueryCache.invalidate` if the
+backing records ever change.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict, deque
+from typing import Any, Deque, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.schemes import Scheme
+
+__all__ = ["scheme_signature", "block_pre_ready", "CacheEntry", "QueryCache"]
+
+
+def block_pre_ready(pre: Any) -> Any:
+    """Block until every array inside a precompute object is materialized.
+
+    Banking a pre whose randomness is still pending would just move the
+    wait into the next flush — the producer (the frontend's idle worker)
+    must absorb the compute, not the serve path."""
+    for field in dataclasses.fields(pre):
+        value = getattr(pre, field.name)
+        if dataclasses.is_dataclass(value):
+            block_pre_ready(value)
+        elif hasattr(value, "block_until_ready"):
+            value.block_until_ready()
+    return pre
+
+
+def scheme_signature(scheme: Scheme, n: int) -> Tuple:
+    """Hashable identity of (scheme, params, store size) — the cache is
+    only valid for exactly this configuration."""
+    return (
+        scheme.name, scheme.d, scheme.d_a, scheme.theta, scheme.p,
+        scheme.t, scheme.u, int(n),
+    )
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    """One memoized (client, index) query.
+
+    ``query_cols`` are the exact per-server wire columns ([d_eff, n] mask
+    bits or [d_eff, p/d] request indices) this client sent for this index
+    — kept so a replay is provably bit-identical, dropped (None) when
+    larger than the cache's ``max_query_vector_bytes``. ``answer`` is the
+    reconstructed record bytes."""
+
+    query_cols: Optional[np.ndarray]
+    answer: np.ndarray
+    hits: int = 0
+
+
+class QueryCache:
+    """Budget-aware cross-batch cache for one (scheme, params, store).
+
+    See the module docstring for the privacy contract. The cache never
+    touches :class:`~repro.core.accounting.PrivacyBudget` itself — by
+    design it *cannot* waive spending: the pipeline charges at admission,
+    before lookup.
+    """
+
+    def __init__(
+        self,
+        scheme: Scheme,
+        n: int,
+        *,
+        max_entries: int = 4096,
+        max_pre_batches: int = 2,
+        max_query_vector_bytes: int = 1 << 20,
+    ):
+        if max_entries < 0:
+            raise ValueError(f"max_entries must be >= 0, got {max_entries}")
+        self.signature = scheme_signature(scheme, n)
+        self.max_entries = max_entries
+        self.max_pre_batches = max_pre_batches
+        self.max_query_vector_bytes = max_query_vector_bytes
+        self._entries: "OrderedDict[Tuple[str, int], CacheEntry]" = OrderedDict()
+        self._pre: Dict[int, Deque[Any]] = {}
+        self.metrics = {
+            "hits": 0, "misses": 0, "insertions": 0, "evictions": 0,
+            "pre_filled": 0, "pre_used": 0, "pre_dropped": 0,
+            "invalidations": 0,
+        }
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    # ------------------------------------------------- L1: per-client memo
+    def lookup(self, client: str, index: int) -> Optional[CacheEntry]:
+        """Memo for exactly (client, index); None on miss. The key is the
+        privacy rule: no cross-client, no cross-index reuse, ever."""
+        key = (client, int(index))
+        entry = self._entries.get(key)
+        if entry is None:
+            self.metrics["misses"] += 1
+            return None
+        self._entries.move_to_end(key)  # LRU touch
+        entry.hits += 1
+        self.metrics["hits"] += 1
+        return entry
+
+    def insert(
+        self,
+        client: str,
+        index: int,
+        *,
+        answer: np.ndarray,
+        query_cols: Optional[np.ndarray] = None,
+    ) -> None:
+        if self.max_entries == 0:
+            return
+        if (
+            query_cols is not None
+            and query_cols.nbytes > self.max_query_vector_bytes
+        ):
+            query_cols = None
+        key = (client, int(index))
+        self._entries[key] = CacheEntry(
+            query_cols=query_cols, answer=np.asarray(answer)
+        )
+        self._entries.move_to_end(key)
+        self.metrics["insertions"] += 1
+        while len(self._entries) > self.max_entries:
+            self._entries.popitem(last=False)
+            self.metrics["evictions"] += 1
+
+    # --------------------------------------------- L2: single-use pre pool
+    def put_pre(self, bucket: int, pre: Any) -> bool:
+        """Bank precomputed batch randomness for ``bucket``; False when the
+        pool is full (the pre is dropped — never queued beyond the cap)."""
+        q = self._pre.setdefault(int(bucket), deque())
+        if len(q) >= self.max_pre_batches:
+            self.metrics["pre_dropped"] += 1
+            return False
+        q.append(pre)
+        self.metrics["pre_filled"] += 1
+        return True
+
+    def take_pre(self, bucket: int) -> Optional[Any]:
+        """Pop (consume) one precomputed batch for ``bucket``. Single-use:
+        a popped pre can never be handed out again."""
+        q = self._pre.get(int(bucket))
+        if not q:
+            return None
+        self.metrics["pre_used"] += 1
+        return q.popleft()
+
+    def pre_depth(self, bucket: int) -> int:
+        return len(self._pre.get(int(bucket), ()))
+
+    # ------------------------------------------------------------- control
+    def invalidate(self) -> None:
+        """Drop everything (backing store changed or privacy review asked)."""
+        self._entries.clear()
+        self._pre.clear()
+        self.metrics["invalidations"] += 1

@@ -18,13 +18,24 @@ latency EMAs rank the databases and the router contacts only the fastest
 ``t`` — the paper's own optimization *is* the straggler policy, with its
 privacy price δ accounted per query.
 
+With a :class:`~repro.serve.cache.QueryCache` attached, the pipeline
+memoizes per-(client, index) answers across flushes and consumes
+pre-generated batch randomness banked by :meth:`ServingPipeline.
+prefill_cache`. Admission spends the budget *before* the cache is ever
+consulted, so a hit is priced exactly like a miss and exhausted clients
+are refused even when their answer sits in cache (DESIGN.md §Cross-batch
+cache). The pipeline itself stays single-threaded; the thread-safe
+concurrent ingest front over it is
+:class:`~repro.serve.frontend.AsyncFrontend` (DESIGN.md §Async front).
+
 :class:`PIRServingEngine` is the back-compat facade over the pipeline —
 the pre-refactor one-file engine's constructor and methods, unchanged.
 """
 
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Optional
+import time
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +45,7 @@ from repro.core.accounting import PrivacyBudget
 from repro.core.schemes import Scheme
 from repro.db import packing
 from repro.db.store import RecordStore
+from repro.serve.cache import QueryCache, block_pre_ready, scheme_signature
 from repro.serve.router import SchemeRouter
 from repro.serve.scheduler import BatchScheduler, Request
 from repro.serve.sharded import ServerStats, ShardedBackend
@@ -51,6 +63,7 @@ class ServingPipeline:
         *,
         scheduler: Optional[BatchScheduler] = None,
         backend: Optional[ShardedBackend] = None,
+        cache: Optional[QueryCache] = None,
         default_budget: Optional[Callable[[], PrivacyBudget]] = None,
         simulate_latency: Optional[Callable[[int], float]] = None,
         seed: int = 0,
@@ -69,14 +82,27 @@ class ServingPipeline:
                 self.backend.fastest if scheme.name == "subset" else None
             ),
         )
+        if cache is not None and cache.signature != scheme_signature(
+            scheme, store.n
+        ):
+            raise ValueError(
+                f"cache built for {cache.signature}, pipeline serves "
+                f"{scheme_signature(scheme, store.n)}"
+            )
+        self.cache = cache
         self._budgets: Dict[str, PrivacyBudget] = {}
         self._default_budget = default_budget or (
             lambda: PrivacyBudget(epsilon_limit=float("inf"), delta_limit=1.0)
         )
         self._key = jax.random.key(seed)
+        # the per-query (ε, δ) price is constant for a pipeline (fixed
+        # scheme, fixed n): compute once so admission is O(1) float math
+        self._eps_per_query = scheme.epsilon(store.n)
+        self._delta_per_query = scheme.delta(store.n)
         self.metrics = {
             "queries": 0, "batches": 0, "records_touched": 0.0,
             "blocks_sent": 0.0, "refused": 0, "padded": 0, "truncated": 0,
+            "cache_hits": 0,
         }
 
     # ------------------------------------------------------------ clients
@@ -85,17 +111,22 @@ class ServingPipeline:
             self._budgets[client] = self._default_budget()
         return self._budgets[client]
 
-    def submit(self, client: str, index: int) -> bool:
-        """Queue one query; False if the client's privacy budget refuses."""
-        n = self.store.n
-        eps = self.scheme.epsilon(n)
-        delta = self.scheme.delta(n)
+    def submit_request(self, client: str, index: int) -> Optional[Request]:
+        """Queue one query; None if the client's privacy budget refuses.
+
+        Spending happens here, at admission — before the cache is ever
+        consulted — so a cache hit is priced exactly like a miss.
+        """
+        eps, delta = self._eps_per_query, self._delta_per_query
         if not self.budget(client).can_spend(eps, delta):
             self.metrics["refused"] += 1
-            return False
+            return None
         self.budget(client).spend(eps, delta)
-        self.scheduler.submit(client, index)
-        return True
+        return self.scheduler.submit(client, index)
+
+    def submit(self, client: str, index: int) -> bool:
+        """Queue one query; False if the client's privacy budget refuses."""
+        return self.submit_request(client, index) is not None
 
     # ------------------------------------------------------------ serving
     def fastest_servers(self, t: int) -> List[int]:
@@ -105,43 +136,119 @@ class ServingPipeline:
     def stats(self) -> Dict[int, ServerStats]:
         return self.backend.stats
 
-    def _serve(self, batch: List[Request]) -> Dict[str, np.ndarray]:
-        import time
+    def serve_requests(
+        self, batch: List[Request]
+    ) -> List[Tuple[Request, np.ndarray]]:
+        """Serve one cut batch, per request: [(Request, record bytes)].
 
-        b = len(batch)
-        padded = self.scheduler.padded_size(b)
-        q_idx = jnp.asarray(
-            [r.index for r in batch] + [0] * (padded - b), jnp.int32
-        )
+        Cache hits are answered from the per-client memo without touching
+        any server (their budget was already spent at admission); misses
+        are routed as one padded batch — consuming banked precomputed
+        randomness for that bucket when available — and memoized on the
+        way out.
+        """
+        if not batch:
+            return []
+        results: List[Optional[Tuple[Request, np.ndarray]]] = [None] * len(batch)
+        if self.cache is not None:
+            misses, miss_pos = [], []
+            for i, r in enumerate(batch):
+                entry = self.cache.lookup(r.client, r.index)
+                if entry is not None:
+                    results[i] = (r, entry.answer)
+                else:
+                    misses.append(r)
+                    miss_pos.append(i)
+        else:
+            misses, miss_pos = list(batch), list(range(len(batch)))
+
+        self.metrics["queries"] += len(batch)
+        self.metrics["cache_hits"] += len(batch) - len(misses)
+
+        if misses:
+            b = len(misses)
+            padded = self.scheduler.padded_size(b)
+            q_idx = jnp.asarray(
+                [r.index for r in misses] + [0] * (padded - b), jnp.int32
+            )
+            self._key, sub = jax.random.split(self._key)
+            pre = (
+                self.cache.take_pre(padded) if self.cache is not None else None
+            )
+
+            t0 = time.perf_counter()
+            routed = self.router.plan(sub, self.store.n, q_idx, pre=pre)
+            responses = self.backend.answer_batch(routed)
+            out = self.router.finalize(routed, responses)
+            out.block_until_ready()
+            self.scheduler.observe_service(padded, time.perf_counter() - t0)
+
+            self.metrics["batches"] += 1
+            self.metrics["padded"] += padded - b
+            costs = self.scheme.costs(self.store.n)
+            self.metrics["records_touched"] += costs["C_p"] / 2.0 * b
+            self.metrics["blocks_sent"] += costs["C_m"] * b
+
+            nbytes = -(-self.store.record_bits // 8)
+            raw = packing.unpack_bytes_np(np.asarray(out[:b]), nbytes)
+            cols = None
+            if self.cache is not None:
+                # one device->host transfer for the whole payload, skipped
+                # when a single column would blow the cache's byte cap
+                col_bytes = (
+                    routed.payload.nbytes // routed.payload.shape[1]
+                )
+                if col_bytes <= self.cache.max_query_vector_bytes:
+                    cols = np.asarray(routed.payload[:, :b])
+            for j, r in enumerate(misses):
+                answer = np.array(raw[j])
+                results[miss_pos[j]] = (r, answer)
+                if self.cache is not None:
+                    self.cache.insert(
+                        r.client, r.index, answer=answer,
+                        query_cols=None if cols is None else cols[:, j],
+                    )
+        return results  # type: ignore[return-value]
+
+    def take_batch(self) -> List[Request]:
+        """Pop the next batch off the scheduler (≤ max_batch; truncation
+        leaves the rest queued)."""
+        if not len(self.scheduler):
+            return []
+        batch = self.scheduler.next_batch()
+        if len(self.scheduler):
+            self.metrics["truncated"] += 1
+        return batch
+
+    def prefill_cache(self, bucket: Optional[int] = None) -> int:
+        """Bank one batch of precomputed query randomness for ``bucket``
+        (default: the adaptive target's bucket — the shape full cuts land
+        on). The async frontend calls this from its flush worker while
+        idle, moving query generation off the serve critical path. Returns
+        1 if banked. Deliberately NOT the transient queue-length bucket:
+        precomputing odd buckets would trigger compiles for shapes that
+        are never served, stalling the flush worker.
+        """
+        if self.cache is None:
+            return 0
+        if bucket is None:
+            bucket = self.scheduler.padded_size(self.scheduler.target_batch)
+        if bucket <= 0:
+            return 0
+        if self.cache.pre_depth(bucket) >= self.cache.max_pre_batches:
+            return 0
         self._key, sub = jax.random.split(self._key)
-
-        t0 = time.perf_counter()
-        routed = self.router.plan(sub, self.store.n, q_idx)
-        responses = self.backend.answer_batch(routed)
-        out = self.router.finalize(routed, responses)
-        out.block_until_ready()
-        self.scheduler.observe_service(padded, time.perf_counter() - t0)
-
-        self.metrics["queries"] += b
-        self.metrics["batches"] += 1
-        self.metrics["padded"] += padded - b
-        costs = self.scheme.costs(self.store.n)
-        self.metrics["records_touched"] += costs["C_p"] / 2.0 * b
-        self.metrics["blocks_sent"] += costs["C_m"] * b
-
-        nbytes = -(-self.store.record_bits // 8)
-        raw = packing.unpack_bytes_np(np.asarray(out[:b]), nbytes)
-        return {r.client: raw[i] for i, r in enumerate(batch)}
+        pre = self.router.precompute(sub, self.store.n, bucket)
+        if pre is None:  # scheme has no query-independent half
+            return 0
+        # materialize here, on the producer: banking pending randomness
+        # would just move the wait into the next flush
+        return int(self.cache.put_pre(bucket, block_pre_ready(pre)))
 
     def step(self) -> Dict[str, np.ndarray]:
         """Serve at most one scheduled batch (≤ max_batch; the rest of the
         queue stays). Returns client → record bytes for the served batch."""
-        if not len(self.scheduler):
-            return {}
-        batch = self.scheduler.next_batch()
-        if len(self.scheduler):
-            self.metrics["truncated"] += 1
-        return self._serve(batch)
+        return {r.client: a for r, a in self.serve_requests(self.take_batch())}
 
     def poll(self) -> Dict[str, np.ndarray]:
         """The async-style entry point: serve one batch only if the

@@ -1,0 +1,409 @@
+"""Asynchronous ingest front: concurrent submits ahead of the scheduler.
+
+The :class:`~repro.serve.engine.ServingPipeline` is deliberately
+single-threaded — admission (budget spend) and serving happen wherever the
+caller stands. ``AsyncFrontend`` puts a thread-backed ingest stage in
+front of it (DESIGN.md §Async front):
+
+    callers ──submit()──► bounded ingest queue ──► ingest workers
+                                                      │ admission under
+                                                      │ the pipeline lock
+                                                      ▼
+                                                BatchScheduler
+                                                      │
+                     flush worker: deadline timers, ready() cuts,
+                     idle-time cache prefill, per-request futures
+
+* **Concurrency contract**: any number of caller threads (or asyncio
+  tasks via :meth:`asubmit`) may submit at once. ``ingest_workers``
+  threads perform budget admission serially under one lock; exactly one
+  flush worker owns the serve path (and therefore the pipeline's key
+  stream and cache), so the pipeline never needs internal locking.
+* **Per-request futures**: ``submit`` returns a
+  :class:`concurrent.futures.Future` resolving to the record bytes.
+  A budget refusal resolves the future with :class:`PermissionError` —
+  the same refusal the sync path signals by returning False.
+* **Backpressure**: the ingest queue is bounded (``queue_limit``).
+  ``shed_policy="reject"`` sheds at the door by raising
+  :class:`BackpressureError`; ``"block"`` makes submit wait for room.
+* **Deadline timers**: the flush worker sleeps exactly until the oldest
+  queued request hits the scheduler's ``max_wait_s`` deadline, so partial
+  batches cut on time without busy-polling.
+* **Idle prefill**: between flushes the worker banks precomputed batch
+  randomness into the cross-batch cache
+  (:meth:`~repro.serve.engine.ServingPipeline.prefill_cache`), moving
+  query generation off the serve critical path.
+* **Graceful drain**: :meth:`drain` forces the backlog through (partial
+  batches included) and blocks until every accepted future is resolved;
+  ``close(drain=True)`` (also the context-manager exit) drains before
+  stopping. ``close(drain=False)`` cancels whatever is still unserved.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.engine import ServingPipeline
+from repro.serve.scheduler import Request
+
+__all__ = ["BackpressureError", "AsyncFrontend"]
+
+_SENTINEL = object()
+
+
+class BackpressureError(RuntimeError):
+    """The bounded ingest queue is full and the shed policy is 'reject'."""
+
+
+class AsyncFrontend:
+    """Thread-backed (and asyncio-compatible) ingest front over a
+    :class:`~repro.serve.engine.ServingPipeline`."""
+
+    def __init__(
+        self,
+        pipeline: ServingPipeline,
+        *,
+        ingest_workers: int = 2,
+        queue_limit: int = 4096,
+        shed_policy: str = "reject",
+        idle_tick_s: float = 0.005,
+        prefill: bool = True,
+    ):
+        if ingest_workers < 1:
+            raise ValueError(f"need ingest_workers >= 1, got {ingest_workers}")
+        if queue_limit < 1:
+            raise ValueError(f"need queue_limit >= 1, got {queue_limit}")
+        if shed_policy not in ("reject", "block"):
+            raise ValueError(f"shed_policy must be reject|block, got {shed_policy!r}")
+        self.pipeline = pipeline
+        self.ingest_workers = ingest_workers
+        self.shed_policy = shed_policy
+        self.idle_tick_s = idle_tick_s
+        self.prefill = prefill
+
+        self._ingest: "queue.Queue" = queue.Queue(maxsize=queue_limit)
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._pending: Dict[int, Future] = {}   # Request.seq -> future
+        self._unadmitted = 0                    # queued but not yet admitted
+        self._resolving = 0                     # popped but not yet resolved
+        self._draining = 0
+        self._closed = False
+        self._stop = False
+        self._threads: List[threading.Thread] = []
+        self._counters = {"accepted": 0, "shed": 0, "served": 0,
+                          "failed": 0, "prefilled": 0}
+
+    # ----------------------------------------------------------- lifecycle
+    def start(self) -> "AsyncFrontend":
+        if self._threads:
+            return self
+        if self._closed:
+            raise RuntimeError("frontend is closed")
+        for i in range(self.ingest_workers):
+            t = threading.Thread(
+                target=self._ingest_loop, name=f"pir-ingest-{i}", daemon=True
+            )
+            t.start()
+            self._threads.append(t)
+        t = threading.Thread(
+            target=self._flush_loop, name="pir-flush", daemon=True
+        )
+        t.start()
+        self._threads.append(t)
+        return self
+
+    def __enter__(self) -> "AsyncFrontend":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close(drain=exc == (None, None, None))
+
+    # -------------------------------------------------------------- ingest
+    def submit(self, client: str, index: int) -> "Future[np.ndarray]":
+        """Queue one query concurrently; resolves to the record bytes.
+
+        Raises :class:`BackpressureError` when the bounded queue is full
+        under the 'reject' shed policy; the future resolves with
+        :class:`PermissionError` when the client's budget refuses.
+        """
+        if self._closed:
+            raise RuntimeError("frontend is closed to new submits")
+        if not self._threads:
+            self.start()
+        fut: "Future[np.ndarray]" = Future()
+        item = (client, int(index), fut)
+        with self._cv:
+            self._unadmitted += 1
+            self._counters["accepted"] += 1
+        try:
+            if self.shed_policy == "block":
+                # bounded waits so a submit blocked on a full queue notices
+                # a concurrent close() instead of stranding its item in the
+                # dead queue after close's leftover scan
+                while True:
+                    try:
+                        self._ingest.put(item, timeout=0.05)
+                        break
+                    except queue.Full:
+                        if self._closed:
+                            self._unaccept(shed=False)
+                            raise RuntimeError(
+                                "frontend is closed to new submits"
+                            ) from None
+            else:
+                self._ingest.put_nowait(item)
+        except queue.Full:
+            self._unaccept(shed=True)
+            raise BackpressureError(
+                f"ingest queue full ({self._ingest.maxsize}); query shed"
+            ) from None
+        return fut
+
+    def _unaccept(self, *, shed: bool) -> None:
+        with self._cv:
+            self._unadmitted -= 1
+            self._counters["accepted"] -= 1
+            if shed:
+                self._counters["shed"] += 1
+            self._cv.notify_all()
+
+    async def asubmit(self, client: str, index: int) -> np.ndarray:
+        """Asyncio adapter: ``await frontend.asubmit(...)`` from any task."""
+        import asyncio
+
+        return await asyncio.wrap_future(self.submit(client, index))
+
+    # --------------------------------------------------------------- drain
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Force the backlog through (partial batches included) and block
+        until every accepted request has a resolved future. Returns False
+        on timeout. The frontend keeps accepting afterwards."""
+        with self._cv:
+            self._draining += 1
+            self._cv.notify_all()
+        try:
+            with self._cv:
+                return self._cv.wait_for(self._is_idle, timeout)
+        finally:
+            with self._cv:
+                self._draining -= 1
+
+    def close(self, drain: bool = True, timeout: Optional[float] = None) -> None:
+        """Stop accepting; optionally drain, then join the workers.
+        Without drain, unserved futures are cancelled."""
+        with self._cv:
+            self._closed = True
+        if drain and self._threads:
+            self.drain(timeout)
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        for _ in self._threads:
+            try:
+                self._ingest.put_nowait(_SENTINEL)
+            except queue.Full:
+                break
+        for t in self._threads:
+            t.join(timeout=5.0)
+        self._threads = []
+        # cancel anything that never got served (drain=False path); rescan
+        # until in-flight block-policy submitters have either enqueued
+        # (each scan frees queue slots) or noticed the close and backed out
+        leftovers: List[Future] = []
+        deadline = time.monotonic() + 1.0
+        while True:
+            while True:
+                try:
+                    item = self._ingest.get_nowait()
+                except queue.Empty:
+                    break
+                if item is not _SENTINEL:
+                    leftovers.append(item[2])
+                    with self._cv:
+                        self._unadmitted -= 1
+            with self._cv:
+                settled = self._unadmitted <= 0
+            if settled or time.monotonic() > deadline:
+                break
+            time.sleep(0.005)
+        with self._cv:
+            leftovers.extend(self._pending.values())
+            self._pending.clear()
+        for fut in leftovers:
+            # admitted futures are RUNNING and refuse cancel(); fail them
+            # explicitly so no waiter hangs
+            if not fut.cancel() and not fut.done():
+                from concurrent.futures import CancelledError
+
+                fut.set_exception(CancelledError())
+
+    # ------------------------------------------------------------- metrics
+    @property
+    def metrics(self) -> Dict[str, float]:
+        """Frontend counters merged over the pipeline's (and cache's)."""
+        out = dict(self.pipeline.metrics)
+        with self._cv:
+            out.update(self._counters)
+        if self.pipeline.cache is not None:
+            out.update(
+                {f"cache_{k}": v
+                 for k, v in self.pipeline.cache.metrics.items()}
+            )
+        return out
+
+    # ------------------------------------------------------------- workers
+    def _is_idle(self) -> bool:
+        # callers hold self._cv
+        return (
+            self._unadmitted == 0
+            and not len(self.pipeline.scheduler)
+            and not self._pending
+            and self._resolving == 0
+        )
+
+    # items admitted per lock acquisition: big enough to keep lock/notify
+    # traffic negligible next to serving, small enough that admission never
+    # noticeably delays a cut (admission is ~µs per item)
+    _ADMIT_CHUNK = 64
+
+    def _ingest_loop(self) -> None:
+        while True:
+            try:
+                item = self._ingest.get(timeout=0.05)
+            except queue.Empty:
+                if self._stop:
+                    return
+                continue
+            if item is _SENTINEL:
+                return
+            # batched admission: drain a chunk per lock acquisition —
+            # per-item locking serializes the whole front on the GIL
+            items = [item]
+            saw_sentinel = False
+            while len(items) < self._ADMIT_CHUNK:
+                try:
+                    nxt = self._ingest.get_nowait()
+                except queue.Empty:
+                    break
+                if nxt is _SENTINEL:
+                    saw_sentinel = True
+                    break
+                items.append(nxt)
+            refusals: List[Future] = []
+            with self._cv:
+                self._unadmitted -= len(items)
+                for client, index, fut in items:
+                    if fut.set_running_or_notify_cancel():
+                        req = self.pipeline.submit_request(client, index)
+                        if req is None:
+                            refusals.append(fut)
+                        else:
+                            self._pending[req.seq] = fut
+                # refusal futures resolve outside the lock below; hold
+                # _resolving so a concurrent drain() can't observe idle
+                # before their PermissionError is set
+                self._resolving += len(refusals)
+                # wake the flush worker / drain waiters only on state
+                # flips (queue was empty: arm the deadline timer; target
+                # reached: cut; drain settled), not per admission
+                sched = self.pipeline.scheduler
+                if (
+                    len(sched) <= len(items)
+                    or len(sched) >= sched.target_batch
+                    or (self._draining and self._unadmitted == 0)
+                ):
+                    self._cv.notify_all()
+            if refusals:
+                for fut in refusals:
+                    fut.set_exception(PermissionError(
+                        "privacy budget exhausted; query refused at admission"
+                    ))
+                with self._cv:
+                    self._resolving -= len(refusals)
+                    self._cv.notify_all()
+            if saw_sentinel:
+                return
+
+    def _flush_wait_s(self) -> float:
+        """How long the flush worker may sleep: until the oldest queued
+        request hits the deadline, else one idle tick."""
+        sched = self.pipeline.scheduler
+        if len(sched) and sched.max_wait_s:
+            # remaining <= 0 implies ready() was already True, so this is
+            # only ever a positive deadline; keep a floor against clock skew
+            return max(1e-4, sched.max_wait_s - sched.oldest_wait_s())
+        return self.idle_tick_s
+
+    def _should_cut(self) -> bool:
+        # callers hold self._cv. A drain only forces partial batches once
+        # every queued item has been admitted — cutting mid-ingest would
+        # fragment the backlog into odd bucket shapes (fresh jit compiles)
+        # for no latency gain, since admission is orders faster than serve.
+        sched = self.pipeline.scheduler
+        return bool(len(sched)) and (
+            sched.ready() or (self._draining > 0 and self._unadmitted == 0)
+        )
+
+    def _flush_loop(self) -> None:
+        while True:
+            with self._cv:
+                if self._stop:
+                    return
+                cut = self._should_cut()
+                batch = self.pipeline.take_batch() if cut else []
+                timeout = None if cut else self._flush_wait_s()
+                idle = not len(self.pipeline.scheduler) and not self._unadmitted
+            if batch:
+                self._serve(batch)
+                continue
+            # truly idle (nothing queued, nothing being admitted): bank
+            # precomputed randomness, then sleep until the deadline or the
+            # next submit notification. With traffic in flight, a cut is
+            # imminent — starting a prefill then would stall it behind a
+            # burst of GIL-bound dispatches.
+            if self.prefill and self.pipeline.cache is not None and idle:
+                if self.pipeline.prefill_cache():
+                    with self._cv:
+                        self._counters["prefilled"] += 1
+                    continue
+            with self._cv:
+                if self._stop:
+                    return
+                if not self._should_cut():
+                    self._cv.wait(timeout)
+
+    def _serve(self, batch: List[Request]) -> None:
+        try:
+            results = self.pipeline.serve_requests(batch)
+        except Exception as exc:  # fail the whole batch, keep serving
+            with self._cv:
+                futs = [self._pending.pop(r.seq, None) for r in batch]
+                self._counters["failed"] += len(batch)
+                self._resolving += len(batch)
+            for fut in futs:
+                if fut is not None and not fut.done():
+                    fut.set_exception(exc)
+            with self._cv:
+                self._resolving -= len(batch)
+                self._cv.notify_all()
+            return
+        with self._cv:
+            paired: List[Tuple[Optional[Future], np.ndarray]] = [
+                (self._pending.pop(r.seq, None), answer)
+                for r, answer in results
+            ]
+            self._counters["served"] += len(results)
+            self._resolving += len(paired)
+        for fut, answer in paired:
+            if fut is not None and not fut.done():
+                fut.set_result(answer)
+        with self._cv:
+            self._resolving -= len(paired)
+            self._cv.notify_all()

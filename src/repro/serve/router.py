@@ -17,12 +17,22 @@ Query generation reuses the exact per-scheme functions the reference
 single-host reference produce identical wire bits — that is what makes the
 sharded-equals-single-host proofs (tests/_multidevice_checks.py) exact
 rather than statistical.
+
+For the cross-batch cache (DESIGN.md §Cross-batch cache) the router also
+splits planning in two: :meth:`SchemeRouter.precompute` generates the
+query-independent randomness of a whole batch ahead of time, and
+``plan(..., pre=...)`` finishes it for the actual indices. Because the
+underlying scheme functions are themselves ``assemble ∘ precompute``,
+``plan(key, n, q)`` and ``plan(key, n, q, pre=precompute(key, n, B))``
+produce bit-identical payloads (asserted in tests/test_serve_cache.py) —
+prefetching moves work off the flush path without changing a single wire
+bit or the adversary's view.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Sequence, Tuple
+from typing import Any, Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +40,7 @@ import jax.numpy as jnp
 from repro.core import chor, direct, sparse, subset
 from repro.core.schemes import SCHEMES, Scheme
 
-__all__ = ["RoutedBatch", "SchemeRouter"]
+__all__ = ["RoutedBatch", "SubsetPre", "SchemeRouter"]
 
 # schemes whose servers XOR-fold masked records ("mask" kind) vs. answer
 # plain index requests ("index" kind)
@@ -56,6 +66,15 @@ class RoutedBatch:
     theta: Optional[float] = None
 
 
+@dataclasses.dataclass(frozen=True)
+class SubsetPre:
+    """Precomputed Subset-PIR plan half: the replica-choice key plus the
+    Chor randomness for the t contacted servers."""
+
+    k_srv: jax.Array
+    chor_pre: chor.ChorPre
+
+
 class SchemeRouter:
     """Dispatches chor/sparse/direct/subset/as-* batches.
 
@@ -78,25 +97,73 @@ class SchemeRouter:
         self._pick_servers = pick_servers
 
     # ------------------------------------------------------------ planning
-    def plan(self, key: jax.Array, n: int, q_idx: jnp.ndarray) -> RoutedBatch:
-        """[B] indices -> per-server payloads for one batch."""
+    def precompute(self, key: jax.Array, n: int, b: int) -> Optional[Any]:
+        """Pre-generate the query-independent randomness of a [b]-batch.
+
+        Returns a scheme-specific opaque object for ``plan(..., pre=...)``,
+        or None where planning has no query-independent half (the direct
+        family's dummy draws depend on the queried index). The result is
+        **single-use**: feed it to exactly one plan() call.
+        """
+        sch = self.scheme
+        if sch.name == "chor":
+            return chor.precompute_queries(key, n, sch.d, b)
+        if sch.name in ("sparse", "as-sparse"):
+            return sparse.precompute_query_randomness(
+                key, n, sch.d, sch.theta, b
+            )
+        if sch.name == "subset":
+            k_srv, k_q = jax.random.split(key)
+            return SubsetPre(
+                k_srv=k_srv, chor_pre=chor.precompute_queries(k_q, n, sch.t, b)
+            )
+        return None
+
+    def plan(
+        self,
+        key: jax.Array,
+        n: int,
+        q_idx: jnp.ndarray,
+        *,
+        pre: Optional[Any] = None,
+    ) -> RoutedBatch:
+        """[B] indices -> per-server payloads for one batch.
+
+        ``pre`` (from :meth:`precompute`) supplies pre-generated batch
+        randomness; ``plan(key, n, q)`` ≡ ``plan(key, n, q,
+        pre=precompute(key, n, B))`` bit-for-bit.
+        """
         sch = self.scheme
         name = sch.name
+        if pre is not None:
+            pre_n = pre.chor_pre.n if name == "subset" else getattr(pre, "n", n)
+            if pre_n != n:
+                raise ValueError(f"pre built for n={pre_n}, store has n={n}")
 
         if name == "chor":
-            masks = chor.query_masks(
-                chor.gen_queries(key, n, sch.d, q_idx), n
+            packed = (
+                chor.assemble_queries(pre, q_idx) if pre is not None
+                else chor.gen_queries(key, n, sch.d, q_idx)
             )
-            return RoutedBatch("mask", masks, tuple(range(sch.d)), q_idx)
+            return RoutedBatch(
+                "mask", chor.query_masks(packed, n), tuple(range(sch.d)), q_idx
+            )
 
         if name in ("sparse", "as-sparse"):
-            masks = sparse.gen_query_matrix(key, n, sch.d, sch.theta, q_idx)
+            masks = (
+                sparse.assemble_query_matrix(pre, q_idx) if pre is not None
+                else sparse.gen_query_matrix(key, n, sch.d, sch.theta, q_idx)
+            )
             return RoutedBatch(
                 "mask", masks, tuple(range(sch.d)), q_idx, theta=sch.theta
             )
 
         if name == "subset":
-            k_srv, k_q = jax.random.split(key)
+            if pre is not None:
+                k_srv, chor_pre = pre.k_srv, pre.chor_pre
+            else:
+                k_srv, k_q = jax.random.split(key)
+                chor_pre = None
             if self._pick_servers is not None:
                 servers = tuple(int(s) for s in self._pick_servers(sch.t))
             else:
@@ -107,12 +174,15 @@ class SchemeRouter:
                 raise ValueError(
                     f"subset needs t={sch.t} servers, got {servers}"
                 )
-            masks = chor.query_masks(
-                chor.gen_queries(k_q, n, sch.t, q_idx), n
+            packed = (
+                chor.assemble_queries(chor_pre, q_idx) if chor_pre is not None
+                else chor.gen_queries(k_q, n, sch.t, q_idx)
             )
-            return RoutedBatch("mask", masks, servers, q_idx)
+            return RoutedBatch("mask", chor.query_masks(packed, n), servers, q_idx)
 
         if name in ("direct", "as-direct"):
+            if pre is not None:
+                raise ValueError("the direct family has no precompute half")
             reqs = direct.gen_queries(key, n, sch.d, sch.p, q_idx)
             return RoutedBatch("index", reqs, tuple(range(sch.d)), q_idx)
 

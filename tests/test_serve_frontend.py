@@ -1,0 +1,253 @@
+"""AsyncFrontend behavior: race-freedom under concurrent submitters
+(every future resolves to the exact record the sync path would return),
+backpressure shedding at the bounded queue, budget refusal surfacing as
+PermissionError on the future, deadline-timer cuts, graceful drain and
+close semantics, and the asyncio adapter. The privacy side of the front
+(admission pricing, cache rules) is tests/test_serve_cache.py and
+tests/test_statistical_privacy.py."""
+
+import asyncio
+import threading
+import time
+from concurrent.futures import CancelledError
+
+import numpy as np
+import pytest
+
+from repro.core import make_scheme
+from repro.core.accounting import PrivacyBudget
+from repro.db import make_synthetic_store
+from repro.serve import (
+    AsyncFrontend,
+    BackpressureError,
+    BatchScheduler,
+    QueryCache,
+    ServingPipeline,
+)
+
+
+def make_pipe(n=256, cached=False, max_batch=64, max_wait_s=0.0, **kw):
+    store = make_synthetic_store(n, 16, seed=7)
+    sch = make_scheme("chor", d=2, d_a=1)
+    return ServingPipeline(
+        store, sch,
+        scheduler=BatchScheduler(
+            max_batch=max_batch, max_wait_s=max_wait_s, target_latency_s=10.0
+        ),
+        cache=QueryCache(sch, store.n) if cached else None,
+        **kw,
+    )
+
+
+# ------------------------------------------------------------- concurrency
+@pytest.mark.parametrize("cached", [False, True])
+def test_concurrent_submitters_get_exact_records(cached):
+    """Race-freedom and determinism vs the sync path: 8 threads submit
+    interleaved queries; every future must resolve to precisely the
+    record bytes `store.record_bytes(idx)` — the same answer the
+    synchronous submit+flush loop returns (PIR retrieval is exact, so
+    equality of answers is the determinism contract; arrival order may
+    differ, results may not)."""
+    pipe = make_pipe(cached=cached)
+    n_threads, per = 8, 24
+    results = [[None] * per for _ in range(n_threads)]
+
+    with AsyncFrontend(pipe, ingest_workers=3, queue_limit=1024,
+                       shed_policy="block") as fe:
+        def feed(s):
+            futs = [fe.submit(f"s{s}-c{j % 4}", (s * 37 + j * 11) % pipe.store.n)
+                    for j in range(per)]
+            for j, f in enumerate(futs):
+                results[s][j] = f.result(timeout=30.0)
+
+        threads = [threading.Thread(target=feed, args=(s,))
+                   for s in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60.0)
+        assert not any(t.is_alive() for t in threads)
+
+    for s in range(n_threads):
+        for j in range(per):
+            idx = (s * 37 + j * 11) % pipe.store.n
+            np.testing.assert_array_equal(
+                results[s][j], pipe.store.record_bytes(idx)
+            )
+    m = fe.metrics
+    assert m["served"] == n_threads * per
+    assert m["shed"] == 0 and m["failed"] == 0
+
+
+def test_drain_forces_partial_batches_and_keeps_accepting():
+    pipe = make_pipe()  # no deadline: only fullness or drain cuts
+    with AsyncFrontend(pipe, ingest_workers=1) as fe:
+        futs = [fe.submit("c", i) for i in range(5)]  # far below target
+        assert fe.drain(timeout=30.0)
+        assert all(f.done() for f in futs)
+        for i, f in enumerate(futs):
+            np.testing.assert_array_equal(
+                f.result(), pipe.store.record_bytes(i)
+            )
+        # still open for business after a drain (no deadline is set, so
+        # a lone request again waits for the next drain to cut it)
+        late = fe.submit("c", 9)
+        assert fe.drain(timeout=30.0)
+        np.testing.assert_array_equal(
+            late.result(), pipe.store.record_bytes(9)
+        )
+
+
+def test_deadline_timer_cuts_partial_batch_without_drain():
+    """With max_wait_s set, the flush worker's deadline timer serves a
+    lone request by itself — no drain, no fullness."""
+    pipe = make_pipe(max_wait_s=0.05)
+    with AsyncFrontend(pipe, ingest_workers=1) as fe:
+        fut = fe.submit("c", 3)
+        np.testing.assert_array_equal(
+            fut.result(timeout=30.0), pipe.store.record_bytes(3)
+        )
+
+
+# ------------------------------------------------------------ backpressure
+def _parked_frontend(monkeypatch, queue_limit, shed_policy):
+    """Frontend whose workers are parked (start patched to a no-op), so
+    the bounded ingest queue fills deterministically. Call
+    ``monkeypatch.undo()`` then ``fe.start()`` to let it run for real."""
+    monkeypatch.setattr(AsyncFrontend, "start", lambda self: self)
+    pipe = make_pipe()
+    return AsyncFrontend(pipe, ingest_workers=1, queue_limit=queue_limit,
+                         shed_policy=shed_policy)
+
+
+def test_reject_policy_sheds_when_queue_full(monkeypatch):
+    fe = _parked_frontend(monkeypatch, 2, "reject")
+    queued = [fe.submit("c", i) for i in (0, 1)]  # fills the queue
+    with pytest.raises(BackpressureError):
+        fe.submit("c", 2)
+    assert fe.metrics["shed"] == 1
+    assert fe.metrics["accepted"] == 2  # the shed submit was never counted
+    monkeypatch.undo()  # un-park: real workers drain the backlog
+    fe.start()
+    try:
+        assert fe.drain(timeout=30.0)
+        for i, f in enumerate(queued):
+            np.testing.assert_array_equal(
+                f.result(), fe.pipeline.store.record_bytes(i)
+            )
+    finally:
+        fe.close()
+
+
+def test_block_policy_waits_for_room(monkeypatch):
+    fe = _parked_frontend(monkeypatch, 1, "block")
+    fe.submit("c", 0)  # queue now full
+    blocked_done = threading.Event()
+
+    def blocked_submit():
+        fe.submit("c", 1)  # must wait for room, not raise
+        blocked_done.set()
+
+    t = threading.Thread(target=blocked_submit, daemon=True)
+    t.start()
+    time.sleep(0.05)
+    assert not blocked_done.is_set()  # genuinely blocked on the queue
+    monkeypatch.undo()  # un-park: the workers make room
+    fe.start()
+    try:
+        assert blocked_done.wait(timeout=30.0)
+        t.join(timeout=10.0)
+        assert fe.drain(timeout=30.0)
+        assert fe.metrics["shed"] == 0 and fe.metrics["served"] == 2
+    finally:
+        fe.close()
+
+
+# ---------------------------------------------------------------- refusals
+def test_budget_refusal_resolves_future_with_permission_error():
+    # sparse, not chor: chor spends (0, 0) so its budget never exhausts
+    store = make_synthetic_store(128, 16, seed=8)
+    sch = make_scheme("sparse", d=4, d_a=2, theta=0.25)
+    pipe = ServingPipeline(
+        store, sch,
+        scheduler=BatchScheduler(
+            max_batch=16, max_wait_s=0.02, target_latency_s=10.0
+        ),
+        default_budget=lambda: PrivacyBudget(
+            epsilon_limit=1.5 * sch.epsilon(store.n)
+        ),
+    )
+    with AsyncFrontend(pipe, ingest_workers=1) as fe:
+        ok, refused = fe.submit("c", 5), fe.submit("c", 6)
+        assert fe.drain(timeout=30.0)
+        np.testing.assert_array_equal(ok.result(), store.record_bytes(5))
+        with pytest.raises(PermissionError):
+            refused.result()
+        # an unrelated client is unaffected
+        np.testing.assert_array_equal(
+            fe.submit("d", 6).result(timeout=30.0), store.record_bytes(6)
+        )
+    assert pipe.metrics["refused"] == 1
+
+
+def test_serve_error_fails_batch_but_front_survives(monkeypatch):
+    pipe = make_pipe(max_wait_s=0.02)
+    boom = {"armed": True}
+    orig = pipe.serve_requests
+
+    def flaky(batch):
+        if boom["armed"]:
+            boom["armed"] = False
+            raise RuntimeError("replica fire")
+        return orig(batch)
+
+    monkeypatch.setattr(pipe, "serve_requests", flaky)
+    with AsyncFrontend(pipe, ingest_workers=1) as fe:
+        bad = fe.submit("c", 1)
+        assert fe.drain(timeout=30.0)
+        with pytest.raises(RuntimeError, match="replica fire"):
+            bad.result()
+        good = fe.submit("c", 2)
+        np.testing.assert_array_equal(
+            good.result(timeout=30.0), pipe.store.record_bytes(2)
+        )
+    assert fe.metrics["failed"] == 1 and fe.metrics["served"] == 1
+
+
+# ------------------------------------------------------------------- close
+def test_close_without_drain_cancels_unserved(monkeypatch):
+    fe = _parked_frontend(monkeypatch, 8, "reject")
+    stranded = [fe.submit("c", i) for i in (1, 2, 3)]
+    monkeypatch.undo()
+    fe.close(drain=False)
+    for f in stranded:
+        assert f.done()
+        with pytest.raises(CancelledError):
+            f.result()
+    with pytest.raises(RuntimeError, match="closed"):
+        fe.submit("c", 4)
+
+
+def test_context_manager_drains_on_clean_exit():
+    pipe = make_pipe()
+    with AsyncFrontend(pipe, ingest_workers=2) as fe:
+        futs = [fe.submit(f"c{i}", i) for i in range(7)]
+    # __exit__ drained: every accepted future is resolved, exactly
+    for i, f in enumerate(futs):
+        np.testing.assert_array_equal(f.result(), pipe.store.record_bytes(i))
+
+
+# ----------------------------------------------------------------- asyncio
+def test_asubmit_from_event_loop():
+    pipe = make_pipe(max_wait_s=0.02)
+
+    async def drive(fe):
+        answers = await asyncio.gather(
+            *(fe.asubmit(f"c{i % 3}", i * 5) for i in range(6))
+        )
+        return answers
+
+    with AsyncFrontend(pipe, ingest_workers=2) as fe:
+        answers = asyncio.run(drive(fe))
+    for i, a in enumerate(answers):
+        np.testing.assert_array_equal(a, pipe.store.record_bytes(i * 5))

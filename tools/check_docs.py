@@ -1,0 +1,128 @@
+#!/usr/bin/env python
+"""Doc-integrity checker (CI step): the docs layer must never dangle.
+
+Three passes over the repo:
+
+1. **Doc references from code** — every ``*.md`` path mentioned in a
+   Python file under src/, tests/, benchmarks/, examples/ must exist
+   (resolved against the repo root, then the referencing file's
+   directory). Paths of *generated* artifacts are allowlisted.
+2. **Section citations** — the adjacent-citation form
+   ``FILE.md §Anchor`` (also chained: ``FILE.md §A/§B``) must resolve:
+   the cited file must contain a heading whose text contains the
+   anchor token. ``DESIGN.md §Hardware adaptation`` passes because
+   DESIGN.md has ``## §3 · Hardware adaptation``.
+3. **Markdown links** — every intra-repo ``[text](target)`` link in
+   every ``*.md`` file must point at an existing file or directory
+   (external http(s)/mailto links and pure #fragments are skipped).
+
+Exit status 0 iff all passes are clean; failures are printed one per
+line. Run: ``python tools/check_docs.py``.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+from typing import Dict, List
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+CODE_DIRS = ("src", "tests", "benchmarks", "examples")
+SKIP_DIRS = {".git", ".github", "__pycache__", ".pytest_cache", "node_modules"}
+
+# md paths that code writes rather than reads — absence is not a dangle
+GENERATED_MD = {"results/roofline.md"}
+
+MD_REF = re.compile(r"[\w][\w./-]*\.md\b")
+# FILE.md §Tok [/ §Tok ...] — the citation form docstrings use
+_TOK = r"[\w](?:[\w.-]*[\w])?"  # no trailing punctuation
+SECTION_REF = re.compile(
+    rf"([\w][\w./-]*\.md)\s*§({_TOK})((?:\s*/\s*§{_TOK})*)"
+)
+SECTION_TAIL = re.compile(rf"§({_TOK})")
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def iter_files(suffix: str):
+    roots = [ROOT / d for d in CODE_DIRS] if suffix == ".py" else [ROOT]
+    for root in roots:
+        if not root.is_dir():
+            continue
+        for path in sorted(root.rglob(f"*{suffix}")):
+            if not SKIP_DIRS.intersection(p.name for p in path.parents):
+                yield path
+
+
+def resolve(ref: str, from_file: pathlib.Path) -> bool:
+    ref = ref.rstrip("/")
+    return (ROOT / ref).exists() or (from_file.parent / ref).exists()
+
+
+def headings_of(md_rel: str, cache: Dict[str, List[str]]) -> List[str]:
+    if md_rel not in cache:
+        path = ROOT / md_rel
+        cache[md_rel] = (
+            HEADING.findall(path.read_text(encoding="utf-8"))
+            if path.is_file() else []
+        )
+    return cache[md_rel]
+
+
+def check_code_references() -> List[str]:
+    errors = []
+    heading_cache: Dict[str, List[str]] = {}
+    for path in iter_files(".py"):
+        text = path.read_text(encoding="utf-8")
+        rel = path.relative_to(ROOT)
+        for lineno, line in enumerate(text.splitlines(), 1):
+            for ref in MD_REF.findall(line):
+                if ref in GENERATED_MD or resolve(ref, path):
+                    continue
+                errors.append(f"{rel}:{lineno}: references missing doc {ref!r}")
+            for m in SECTION_REF.finditer(line):
+                md, first, tail = m.group(1), m.group(2), m.group(3)
+                md_rel = md if (ROOT / md).is_file() else None
+                if md_rel is None:
+                    continue  # missing file already reported above
+                heads = headings_of(md_rel, heading_cache)
+                for tok in [first] + SECTION_TAIL.findall(tail):
+                    if not any(tok.lower() in h.lower() for h in heads):
+                        errors.append(
+                            f"{rel}:{lineno}: cites {md} §{tok} but no "
+                            f"heading of {md} contains {tok!r}"
+                        )
+    return errors
+
+
+def check_markdown_links() -> List[str]:
+    errors = []
+    for path in iter_files(".md"):
+        rel = path.relative_to(ROOT)
+        for lineno, line in enumerate(
+            path.read_text(encoding="utf-8").splitlines(), 1
+        ):
+            for target in MD_LINK.findall(line):
+                if target.startswith(("http://", "https://", "mailto:", "#")):
+                    continue
+                target = target.split("#", 1)[0]
+                if target and not resolve(target, path):
+                    errors.append(f"{rel}:{lineno}: dead link ({target})")
+    return errors
+
+
+def main() -> int:
+    errors = check_code_references() + check_markdown_links()
+    for err in errors:
+        print(err)
+    print(
+        f"check_docs: {'FAIL' if errors else 'ok'} "
+        f"({len(errors)} dangling reference(s))"
+    )
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
