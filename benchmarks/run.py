@@ -29,7 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import accounting as acc
-from repro.core import chor, make_scheme, sparse
+from repro.core import make_scheme
 from repro.db import make_synthetic_store
 from repro.kernels import ref
 from repro.serve import AsyncFrontend, BatchScheduler, QueryCache, ServingPipeline
@@ -184,15 +184,15 @@ def table1() -> List[Row]:
     rows = []
     out: List[Row] = []
 
-    for name, kw, theta in (
-        ("chor", {}, None),
-        ("sparse", dict(theta=0.25), 0.25),
+    for name, kw in (
+        ("chor", {}),
+        ("sparse", dict(theta=0.25)),
     ):
         sch = make_scheme(name, d=d, d_a=d_a, **kw)
-        if name == "chor":
-            masks = chor.query_masks(chor.gen_queries(key, n, d, q), n)
-        else:
-            masks = sparse.gen_query_matrix(key, n, d, theta, q)
+        # the staged protocol's query stage (DESIGN.md §Scheme protocol):
+        # the payload is exactly the [d, B, n] masks the servers see
+        staged = sch.staged
+        masks = staged.query(staged.precompute(key, n, len(q)), q).payload
         touched = float(jnp.sum(masks)) / len(q)
         analytic = sch.costs(n)["C_p"] / 2.0  # records touched (c_acc+c_prc=2)
         us = _time_us(

@@ -11,7 +11,7 @@ scenario (§1), end to end through the serving engine:
 
 import numpy as np
 
-from repro.core import make_scheme
+from repro.core import SparseScheme, SubsetScheme
 from repro.core.accounting import PrivacyBudget, theta_for_epsilon
 from repro.db.store import RecordStore
 from repro.serve import PIRServingEngine
@@ -27,8 +27,8 @@ store = RecordStore.from_bytes(certs)
 eps_target = 0.5
 theta = theta_for_epsilon(eps_target, D, D_A)
 print(f"target eps={eps_target} with d={D}, d_a={D_A}  ->  theta={theta:.4f}")
-scheme = make_scheme("sparse", d=D, d_a=D_A, theta=max(theta, 0.05))
-print(f"operating point: theta={scheme.theta}, eps={scheme.epsilon(N):.3f}, "
+scheme = SparseScheme(d=D, d_a=D_A, theta=max(theta, 0.05))
+print(f"operating point: theta={scheme.theta}, eps={scheme.privacy(N)[0]:.3f}, "
       f"records touched/query/server ≈ {scheme.theta * N:.0f} of {N}")
 
 engine = PIRServingEngine(
@@ -54,7 +54,7 @@ print(f"\nmallory admitted for {greedy} queries, then refused "
       f"(budget {engine.budget('mallory').epsilon_limit:.2f} exhausted)")
 
 # ---- straggler mitigation = Subset-PIR (paper §5.1) -----------------------
-sub = make_scheme("subset", d=D, d_a=D_A, t=4)
+sub = SubsetScheme(d=D, d_a=D_A, t=4)
 lat = {i: (0.050 if i in (2, 7) else 0.002) for i in range(D)}  # two stragglers
 eng2 = PIRServingEngine(store, sub, simulate_latency=lambda s: lat[s])
 for r in range(3):
@@ -63,5 +63,5 @@ for r in range(3):
 assert (out["dave"] == certs[99]).all()
 fastest = eng2.fastest_servers(4)
 print(f"\nsubset-PIR contacted the 4 fastest of {D} replicas: {fastest} "
-      f"(stragglers 2,7 avoided), privacy price delta={sub.delta(N):.3g}")
+      f"(stragglers 2,7 avoided), privacy price delta={sub.privacy(N)[1]:.3g}")
 print(f"engine metrics: {eng2.metrics}")

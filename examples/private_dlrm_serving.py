@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
-from repro.core import make_scheme
+from repro.core import SparseScheme
 from repro.core.accounting import PrivacyBudget
 from repro.data import pipeline as pipe
 from repro.db.store import RecordStore
@@ -36,8 +36,10 @@ batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
 plain_scores = R.dlrm_score(params, cfg, batch)
 
 # ---- PIR-backed lookup through the async serving front --------------------
+# the staged registry class directly (DESIGN.md §Scheme protocol); the
+# serving pipeline drives its precompute/query/answer/reconstruct stages
 D, D_A, THETA = 4, 2, 0.25
-scheme = make_scheme("sparse", d=D, d_a=D_A, theta=THETA)
+scheme = SparseScheme(d=D, d_a=D_A, theta=THETA)
 budget = PrivacyBudget(epsilon_limit=1e6)
 # one persistent pipeline (and cross-batch cache) per embedding table, so
 # a later pass over the same requests can hit the per-(client, index) memo
@@ -82,14 +84,15 @@ assert total_hits == lookups_per_pass, (total_hits, lookups_per_pass)
 
 exact = bool((np.asarray(pir_scores) == np.asarray(plain_scores)).all())
 vocab = cfg.n_sparse * cfg.vocab_per_field
-eps_q = scheme.epsilon(vocab) * cfg.n_sparse  # 26 lookups per request
+eps_lookup = scheme.privacy(vocab)[0]
+eps_q = eps_lookup * cfg.n_sparse  # 26 lookups per request
 print(f"DLRM (reduced {cfg.n_sparse} tables × {cfg.vocab_per_field} rows)")
 print(f"plain  scores: {np.asarray(plain_scores)[:4].round(4)}")
 print(f"PIR    scores: {np.asarray(pir_scores)[:4].round(4)}")
 print(f"bit-exact: {exact}")
 assert exact
 print(f"\nscheme: Sparse-PIR theta={THETA}, d={D}, d_a={D_A}")
-print(f"eps per lookup  : {scheme.epsilon(vocab):.4f}")
+print(f"eps per lookup  : {eps_lookup:.4f}")
 print(f"eps per request : {eps_q:.4f} ({cfg.n_sparse} field lookups)")
 print(f"records touched per server per lookup: {THETA * vocab:.0f} "
       f"(Sparse-PIR) vs {vocab / 2:.0f} expected (Chor) of {vocab}")

@@ -38,19 +38,25 @@ def reduced() -> PIRConfig:
 
 
 def scheme_from_config(cfg: PIRConfig = CONFIG):
-    """PIRConfig -> repro.core Scheme (only the fields the scheme needs)."""
+    """PIRConfig -> scheme (back-compat facade over the staged registry).
+
+    Config parsing is the only place scheme strings are interpreted
+    outside the registry (DESIGN.md §Scheme protocol). The whole
+    PIRConfig parameter union (θ/p/t/u) is forwarded and the registry
+    drops what the named scheme does not declare; a scheme introducing
+    a *new* parameter name needs a PIRConfig field (and facade field)
+    to carry it."""
     from repro.core import make_scheme
 
-    kw = {}
-    if cfg.scheme in ("sparse", "as-sparse"):
-        kw["theta"] = cfg.theta
-    if cfg.scheme in ("direct", "as-direct"):
-        kw["p"] = cfg.p or cfg.d
-    if cfg.scheme == "subset":
-        kw["t"] = cfg.t
-    if cfg.scheme.startswith("as-"):
-        kw["u"] = cfg.u
-    return make_scheme(cfg.scheme, d=cfg.d, d_a=cfg.d_a, **kw)
+    return make_scheme(
+        cfg.scheme,
+        d=cfg.d,
+        d_a=cfg.d_a,
+        theta=cfg.theta,
+        p=cfg.p or cfg.d,  # default: one request slot per database
+        t=cfg.t or None,
+        u=cfg.u,
+    )
 
 
 def make_serving_pipeline(cfg: PIRConfig = CONFIG, store=None, **kw):

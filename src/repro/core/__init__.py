@@ -1,8 +1,17 @@
-"""repro.core — the paper's contribution: ε-private PIR schemes, the
+"""repro.core — the paper's contribution: ε-private PIR schemes behind
+the staged SchemeProtocol registry (DESIGN.md §Scheme protocol), the
 privacy-accounting calculus, the adversary distinguishability game, and
-the PrivateEmbedding integration point for the model zoo."""
+the PrivateEmbedding integration point for the model zoo.
 
-from repro.core import accounting, adversary, anonymity, chor, direct, sparse, subset
+The per-scheme wire modules (chor/sparse/direct/subset) are internals of
+this package; everything outside repro.core goes through the protocol
+(``build_scheme``/``Anonymized``/...) or the ``Scheme`` facade —
+``tools/check_api.py`` enforces the boundary in CI."""
+
+# chor/direct/sparse/subset load as submodule attributes (the conformance
+# and wire-level test suites pin them) but are NOT in __all__: outside
+# repro.core they are fenced behind the protocol (tools/check_api.py)
+from repro.core import accounting, adversary, anonymity, chor, direct, protocol, sparse, subset
 from repro.core.accounting import (
     PrivacyBudget,
     compose_with_anonymity,
@@ -13,25 +22,52 @@ from repro.core.accounting import (
     epsilon_sparse,
 )
 from repro.core.private_embedding import PrivateEmbedding
+from repro.core.protocol import (
+    Anonymized,
+    Answers,
+    ChorScheme,
+    DirectScheme,
+    Queries,
+    SchemeProtocol,
+    SparseScheme,
+    SubsetScheme,
+    as_protocol,
+    build_scheme,
+    register_scheme,
+    registered_schemes,
+    scheme_param_names,
+    staged_retrieve,
+)
 from repro.core.schemes import SCHEMES, Scheme, make_scheme
 
 __all__ = [
+    "Anonymized",
+    "Answers",
+    "ChorScheme",
+    "DirectScheme",
     "PrivacyBudget",
     "PrivateEmbedding",
+    "Queries",
     "SCHEMES",
     "Scheme",
+    "SchemeProtocol",
+    "SparseScheme",
+    "SubsetScheme",
     "accounting",
     "adversary",
     "anonymity",
-    "chor",
+    "as_protocol",
+    "build_scheme",
     "compose_with_anonymity",
     "delta_subset",
-    "direct",
     "epsilon_as_direct",
     "epsilon_as_sparse",
     "epsilon_direct",
     "epsilon_sparse",
     "make_scheme",
-    "sparse",
-    "subset",
+    "protocol",
+    "register_scheme",
+    "registered_schemes",
+    "scheme_param_names",
+    "staged_retrieve",
 ]

@@ -16,13 +16,14 @@ configs (`private_vocab_lookup`), and the GNN minibatch feature fetch
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.accounting import PrivacyBudget
-from repro.core.schemes import Scheme, make_scheme
+from repro.core.protocol import as_protocol, staged_retrieve
+from repro.core.schemes import make_scheme
 from repro.db.store import RecordStore
 
 __all__ = ["PrivateEmbedding"]
@@ -32,31 +33,40 @@ __all__ = ["PrivateEmbedding"]
 class PrivateEmbedding:
     """A [vocab, dim] float32 table with ε-private lookups.
 
-    mode "plain" bypasses PIR (baseline); any scheme name from
-    repro.core.schemes routes lookups through that scheme.
+    mode "plain" bypasses PIR (baseline); ``scheme`` may be a staged
+    :class:`~repro.core.protocol.SchemeProtocol` instance (incl.
+    ``Anonymized`` wrappers) or the back-compat ``Scheme`` facade —
+    lookups run the staged ``precompute → query → answer → reconstruct``
+    path either way (DESIGN.md §Scheme protocol).
     """
 
     table: jnp.ndarray
-    scheme: Optional[Scheme] = None
+    scheme: Optional[Any] = None
     budget: Optional[PrivacyBudget] = None
 
     def __post_init__(self):
         if self.table.ndim != 2 or self.table.dtype != jnp.float32:
             raise ValueError("PrivateEmbedding expects a [vocab, dim] f32 table")
         self._store = RecordStore.from_float_table(self.table)
+        self._staged = None if self.scheme is None else as_protocol(self.scheme)
 
     # ------------------------------------------------------------ factory
     @classmethod
     def create(
         cls,
         table: jnp.ndarray,
-        scheme: str = "plain",
+        scheme: Any = "plain",
         d: int = 2,
         d_a: int = 1,
         budget: Optional[PrivacyBudget] = None,
         **scheme_kw,
     ) -> "PrivateEmbedding":
-        sch = None if scheme == "plain" else make_scheme(scheme, d, d_a, **scheme_kw)
+        if isinstance(scheme, str):
+            sch = None if scheme == "plain" else make_scheme(
+                scheme, d, d_a, **scheme_kw
+            )
+        else:  # an already-built scheme object (facade or protocol)
+            sch = scheme
         return cls(table=table, scheme=sch, budget=budget)
 
     # ------------------------------------------------------------- lookup
@@ -69,21 +79,20 @@ class PrivateEmbedding:
         return self.table.shape[1]
 
     def epsilon_per_lookup(self) -> float:
-        return 0.0 if self.scheme is None else self.scheme.epsilon(self.vocab)
+        return 0.0 if self._staged is None else self._staged.privacy(self.vocab)[0]
 
     def delta_per_lookup(self) -> float:
-        return 0.0 if self.scheme is None else self.scheme.delta(self.vocab)
+        return 0.0 if self._staged is None else self._staged.privacy(self.vocab)[1]
 
     def lookup(self, key: jax.Array, idx: jnp.ndarray) -> jnp.ndarray:
         """[B] int indices -> [B, dim] float32 rows (bit-exact)."""
-        if self.scheme is None:
+        if self._staged is None:
             return jnp.take(self.table, idx, axis=0)
         if self.budget is not None:
             b = int(idx.shape[0])
-            self.budget.spend(
-                b * self.epsilon_per_lookup(), b * self.delta_per_lookup()
-            )
-        packed = self.scheme.retrieve(key, self._store, idx.reshape(-1))
+            eps, delta = self._staged.privacy(self.vocab)
+            self.budget.spend(b * eps, b * delta)
+        packed = staged_retrieve(self._staged, key, self._store, idx.reshape(-1))
         rows = jax.lax.bitcast_convert_type(packed, jnp.float32)
         return rows.reshape(*idx.shape, self.dim)
 
@@ -112,6 +121,6 @@ class PrivateEmbedding:
 
     # --------------------------------------------------------------- cost
     def server_cost(self) -> dict:
-        if self.scheme is None:
+        if self._staged is None:
             return {"C_m": 1.0, "C_p": 1.0}
-        return self.scheme.costs(self.vocab)
+        return self._staged.costs(self.vocab)

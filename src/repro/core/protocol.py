@@ -1,0 +1,583 @@
+"""Staged scheme protocol: one client/server-split template for every scheme.
+
+The paper's schemes differ only in how queries are *sampled and accounted*
+— the serving shape is one template (DESIGN.md §Scheme protocol):
+
+    client                          wire                    servers
+    ──────                          ────                    ───────
+    precompute(key, n, b) ─► Plan
+    query(plan, q_idx) ──────────► Queries ──────────────► answer(store, queries)
+                                                                │
+    reconstruct(answers) ◄───────  Answers  ◄───────────────────┘
+    privacy(n) -> (ε, δ)   costs(n) -> Table-1 columns      (accounting, host-side)
+
+:class:`Queries`/:class:`Answers` are the explicit wire boundary: a
+``Queries``' ``kind``/``payload``/``servers`` are exactly the bits the
+servers — and therefore the adversary — see (its ``q_idx`` field is
+client-side reconstruction state that rides along and must never cross
+the wire); everything before it is client-private randomness,
+everything after it is reconstruction from server responses. The
+``precompute``/``query`` split is the query-independent half of planning
+(banked by the cross-batch cache, DESIGN.md §Cross-batch cache):
+``query(precompute(key, n, b), q_idx)`` is bit-identical to inline
+planning by construction.
+
+Each paper scheme is a frozen dataclass registered under its config name
+via :func:`register_scheme` (chor, sparse, direct, subset). The old
+``as-*`` string variants are the :class:`Anonymized` combinator instead:
+it wraps *any* registered scheme and rewrites only the accounting — the
+anonymity system changes who the adversary can attribute messages to,
+not the bits on the wire (paper §4.2/§4.4) — so new leakage-tunable
+variants plug in as wrappers or registry entries, never as new ``elif``
+arms. ``repro.core.schemes.Scheme`` remains the thin back-compat facade.
+
+The per-scheme wire modules (``repro.core.chor``/``sparse``/``direct``/
+``subset``) are implementation details behind this registry; modules
+outside ``repro.core`` must not import them directly — ``tools/
+check_api.py`` (CI) enforces the boundary.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import (
+    Any,
+    Callable,
+    Dict,
+    Optional,
+    Protocol,
+    Sequence,
+    Tuple,
+    Type,
+    runtime_checkable,
+)
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import accounting, chor, direct, sparse, subset
+from repro.db.store import RecordStore
+
+__all__ = [
+    "Queries",
+    "Answers",
+    "Plan",
+    "SchemeProtocol",
+    "register_scheme",
+    "get_scheme",
+    "registered_schemes",
+    "scheme_param_names",
+    "build_scheme",
+    "as_protocol",
+    "staged_retrieve",
+    "ChorScheme",
+    "SparseScheme",
+    "DirectScheme",
+    "SubsetScheme",
+    "DirectPlan",
+    "SubsetPlan",
+    "Anonymized",
+]
+
+
+# --------------------------------------------------------------------------
+# Wire-boundary types
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class Queries:
+    """One batch's per-server wire payload — everything the servers see.
+
+    kind "mask" : payload [d_eff, B, n] {0,1} uint8 request masks
+    kind "index": payload [d_eff, B, p/d] int32 record indices
+    ``servers`` are the replica ids contacted (len d_eff ≤ scheme.d);
+    ``theta`` is set for the sparse family so the execution backend can
+    pick the gather path. ``q_idx`` never crosses the wire — it stays on
+    the client for :meth:`SchemeProtocol.reconstruct`.
+    """
+
+    kind: str
+    payload: jnp.ndarray
+    servers: Tuple[int, ...]
+    q_idx: jnp.ndarray
+    theta: Optional[float] = None
+
+
+@dataclasses.dataclass
+class Answers:
+    """Per-server responses paired with the queries that produced them.
+
+    mask kind : responses [d_eff, B, W] packed partial XOR folds.
+    index kind: responses [d, B, p/d, W] gathered records (reconstruction
+    needs ``queries`` to find the slot holding the real query).
+    """
+
+    queries: Queries
+    responses: jnp.ndarray
+
+
+class Plan(Protocol):
+    """What :meth:`SchemeProtocol.precompute` returns: the (possibly
+    trivial) query-independent half of a batch plan. Only the common
+    fields are specified — ``n`` (store size the plan was built for) and
+    ``batch`` (batch size) — everything else is scheme-private. Plans are
+    **single-use** by contract: feeding one plan to two ``query()`` calls
+    would correlate the adversary's views across those batches
+    (DESIGN.md §Cross-batch cache)."""
+
+    n: int
+    batch: int
+
+
+@runtime_checkable
+class SchemeProtocol(Protocol):
+    """The staged scheme interface (DESIGN.md §Scheme protocol).
+
+    ``precompute → query`` runs on the client (key stream in, wire bits
+    out), ``answer`` on each server (or server shard — the production
+    sharded path is :class:`repro.serve.sharded.ShardedBackend`, which
+    runs the answer stage per record shard and XOR-combines before
+    ``reconstruct``), ``reconstruct`` back on the client. ``privacy`` and
+    ``costs`` are host-side accounting, never inside a jitted step.
+    """
+
+    d: int
+    d_a: int
+    has_precompute: bool
+
+    def precompute(self, key: jax.Array, n: int, b: int) -> Plan: ...
+
+    def query(
+        self,
+        plan: Plan,
+        q_idx: jnp.ndarray,
+        *,
+        pick_servers: Optional[Callable[[int], Sequence[int]]] = None,
+    ) -> Queries: ...
+
+    def answer(self, store: RecordStore, queries: Queries) -> Answers: ...
+
+    def reconstruct(self, answers: Answers) -> jnp.ndarray: ...
+
+    def privacy(self, n: int) -> Tuple[float, float]: ...
+
+    def costs(self, n: int) -> Dict[str, float]: ...
+
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+_REGISTRY: Dict[str, type] = {}
+
+
+def register_scheme(name: str) -> Callable[[type], type]:
+    """Class decorator: register a staged scheme under its config name.
+    The name becomes the class's ``name`` attribute (and the string that
+    config parsing maps to the class — the only place scheme strings are
+    interpreted)."""
+
+    def deco(cls: type) -> type:
+        key = name.lower()
+        if key in _REGISTRY:
+            raise ValueError(f"scheme {key!r} already registered")
+        cls.name = key
+        _REGISTRY[key] = cls
+        return cls
+
+    return deco
+
+
+def get_scheme(name: str) -> type:
+    """Look up a registered scheme class by name."""
+    try:
+        return _REGISTRY[name.lower()]
+    except KeyError:
+        raise ValueError(
+            f"unknown scheme {name!r}; registered: {registered_schemes()}"
+        ) from None
+
+
+def registered_schemes() -> Tuple[str, ...]:
+    """Names of every registered base scheme (no ``as-`` variants — those
+    are the :class:`Anonymized` combinator, not registry entries)."""
+    return tuple(sorted(_REGISTRY))
+
+
+def scheme_param_names(name: str) -> Tuple[str, ...]:
+    """The scheme-specific parameter fields of a registered scheme (its
+    dataclass fields beyond the universal ``d``/``d_a``) — what config
+    parsing needs to forward, discovered instead of hard-coded."""
+    return tuple(
+        f.name
+        for f in dataclasses.fields(get_scheme(name))
+        if f.name not in ("d", "d_a")
+    )
+
+
+def build_scheme(name: str, d: int, d_a: int, **params: Any) -> "SchemeProtocol":
+    """Instantiate a staged scheme from its config name.
+
+    ``as-<base>`` names build the base scheme and wrap it in
+    :class:`Anonymized` (requires ``u``). Parameters the scheme class
+    does not declare are ignored (the back-compat facade carries all of
+    theta/p/t/u regardless of scheme); missing required parameters raise
+    ``ValueError`` from the class's own validation.
+    """
+    name = name.lower()
+    if name.startswith("as-"):
+        u = params.pop("u", None)
+        if not (u and u >= 1):
+            raise ValueError(f"{name} needs anonymity-set size u >= 1")
+        return Anonymized(build_scheme(name[3:], d, d_a, **params), u=int(u))
+    cls = get_scheme(name)
+    allowed = {f.name for f in dataclasses.fields(cls)}
+    kw = {k: v for k, v in params.items() if k in allowed and v is not None}
+    return cls(d=d, d_a=d_a, **kw)
+
+
+def as_protocol(scheme: Any) -> "SchemeProtocol":
+    """Normalize to a staged scheme: protocol instances pass through,
+    back-compat :class:`repro.core.schemes.Scheme` facades are rebuilt
+    from the registry (same name, same params ⇒ same wire bits)."""
+    if isinstance(scheme, SchemeProtocol):
+        return scheme
+    name = getattr(scheme, "name", None)
+    if name is None:
+        raise TypeError(f"not a scheme: {scheme!r}")
+    params = {
+        k: getattr(scheme, k, None) for k in ("theta", "p", "t", "u")
+    }
+    return build_scheme(
+        name,
+        d=scheme.d,
+        d_a=scheme.d_a,
+        **{k: v for k, v in params.items() if v is not None},
+    )
+
+
+def staged_retrieve(
+    scheme: "SchemeProtocol", key: jax.Array, store: RecordStore, q_idx: jnp.ndarray
+) -> jnp.ndarray:
+    """Reference end-to-end path: run all four stages against one store.
+
+    [B] indices -> [B, W] packed records. Bit-identical to the pre-protocol
+    per-module ``retrieve`` functions for the same key (asserted for every
+    registered scheme in tests/test_scheme_protocol.py); the production
+    batched/sharded path drives the same stages through
+    :class:`repro.serve.router.SchemeRouter`.
+    """
+    plan = scheme.precompute(key, store.n, int(q_idx.shape[0]))
+    queries = scheme.query(plan, q_idx)
+    answers = scheme.answer(store, queries)
+    return scheme.reconstruct(answers)
+
+
+# --------------------------------------------------------------------------
+# Shared pieces
+# --------------------------------------------------------------------------
+def _validate_servers(d: int, d_a: int) -> None:
+    if d < 2:
+        raise ValueError(f"need d >= 2 databases, got d={d}")
+    if not (0 <= d_a < d):
+        raise ValueError(f"need 0 <= d_a < d, got d={d}, d_a={d_a}")
+
+
+class _MaskFamily:
+    """Shared server algebra of the XOR mask family (chor/sparse/subset):
+    servers XOR-fold the records their mask selects; the client XORs the
+    per-server folds. The reference ``answer`` here is the single-store
+    path; the sharded production path is ``repro.serve.sharded``."""
+
+    def answer(self, store: RecordStore, queries: Queries) -> Answers:
+        responses = jax.vmap(
+            lambda m: chor.server_answer(store.packed, m)
+        )(queries.payload)
+        return Answers(queries=queries, responses=responses)
+
+    def reconstruct(self, answers: Answers) -> jnp.ndarray:
+        return chor.reconstruct(answers.responses)
+
+    @property
+    def signature(self) -> Tuple:
+        return _signature(self)
+
+
+def _signature(scheme: Any) -> Tuple:
+    params = tuple(
+        (f.name, getattr(scheme, f.name))
+        for f in dataclasses.fields(scheme)
+        if f.name not in ("d", "d_a")
+    )
+    return (scheme.name, scheme.d, scheme.d_a) + params
+
+
+# --------------------------------------------------------------------------
+# The paper's schemes as registry entries
+# --------------------------------------------------------------------------
+@register_scheme("chor")
+@dataclasses.dataclass(frozen=True)
+class ChorScheme(_MaskFamily):
+    """Chor et al. (1995) IT-PIR — the perfectly-private baseline.
+    privacy is (0, 0): the d request vectors are iid uniform to any
+    d_a < d colluding servers."""
+
+    d: int
+    d_a: int
+
+    has_precompute = True
+
+    def __post_init__(self):
+        _validate_servers(self.d, self.d_a)
+
+    def privacy(self, n: int) -> Tuple[float, float]:
+        return 0.0, 0.0
+
+    def costs(self, n: int) -> Dict[str, float]:
+        return accounting.scheme_costs("chor", n=n, d=self.d)
+
+    def precompute(self, key: jax.Array, n: int, b: int) -> chor.ChorPre:
+        return chor.precompute_queries(key, n, self.d, b)
+
+    def query(self, plan, q_idx, *, pick_servers=None) -> Queries:
+        packed = chor.assemble_queries(plan, q_idx)
+        return Queries(
+            "mask", chor.query_masks(packed, plan.n), tuple(range(self.d)), q_idx
+        )
+
+
+@register_scheme("sparse")
+@dataclasses.dataclass(frozen=True)
+class SparseScheme(_MaskFamily):
+    """Sparse-PIR (paper §4.3): Bernoulli(θ)-sparse Chor vectors.
+    ε = 4·arctanh((1−2θ)^(d−d_a)) (Security Thm 3, tight)."""
+
+    d: int
+    d_a: int
+    theta: Optional[float] = None
+
+    has_precompute = True
+
+    def __post_init__(self):
+        _validate_servers(self.d, self.d_a)
+        if not (self.theta and 0 < self.theta <= 0.5):
+            raise ValueError(
+                f"sparse needs 0 < theta <= 0.5, got {self.theta}"
+            )
+
+    def privacy(self, n: int) -> Tuple[float, float]:
+        return accounting.epsilon_sparse(self.theta, self.d, self.d_a), 0.0
+
+    def costs(self, n: int) -> Dict[str, float]:
+        return accounting.scheme_costs(
+            "sparse", n=n, d=self.d, theta=self.theta
+        )
+
+    def precompute(self, key: jax.Array, n: int, b: int) -> sparse.SparsePre:
+        return sparse.precompute_query_randomness(key, n, self.d, self.theta, b)
+
+    def query(self, plan, q_idx, *, pick_servers=None) -> Queries:
+        masks = sparse.assemble_query_matrix(plan, q_idx)
+        return Queries(
+            "mask", masks, tuple(range(self.d)), q_idx, theta=self.theta
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class DirectPlan:
+    """The direct family's plan is just the key: the p−1 dummy draws
+    depend on the queried index (they must avoid it), so there is no
+    query-independent half to bank — ``has_precompute`` is False and the
+    cross-batch cache never pools these."""
+
+    key: jax.Array
+    n: int
+    batch: int
+
+
+@register_scheme("direct")
+@dataclasses.dataclass(frozen=True)
+class DirectScheme:
+    """Direct Requests (paper §4.1): the real query hidden among p−1
+    distinct dummies, split evenly over the d databases.
+    ε = ln((d·(n−1)/(p−1) − d_a)/(d − d_a)) (Security Thm 1)."""
+
+    d: int
+    d_a: int
+    p: Optional[int] = None
+
+    has_precompute = False
+
+    def __post_init__(self):
+        _validate_servers(self.d, self.d_a)
+        if not self.p or self.p % self.d:
+            raise ValueError("direct needs p as a positive multiple of d")
+
+    def privacy(self, n: int) -> Tuple[float, float]:
+        return accounting.epsilon_direct(n, self.d, self.d_a, self.p), 0.0
+
+    def costs(self, n: int) -> Dict[str, float]:
+        return accounting.scheme_costs("direct", n=n, d=self.d, p=self.p)
+
+    def precompute(self, key: jax.Array, n: int, b: int) -> DirectPlan:
+        return DirectPlan(key=key, n=n, batch=b)
+
+    def query(self, plan, q_idx, *, pick_servers=None) -> Queries:
+        reqs = direct.gen_queries(plan.key, plan.n, self.d, self.p, q_idx)
+        return Queries("index", reqs, tuple(range(self.d)), q_idx)
+
+    def answer(self, store: RecordStore, queries: Queries) -> Answers:
+        responses = jax.vmap(
+            lambda i: direct.server_answer(store.packed, i)
+        )(queries.payload)
+        return Answers(queries=queries, responses=responses)
+
+    def reconstruct(self, answers: Answers) -> jnp.ndarray:
+        return direct.select_response(
+            answers.queries.payload, answers.responses, answers.queries.q_idx
+        )
+
+    @property
+    def signature(self) -> Tuple:
+        return _signature(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class SubsetPlan:
+    """Subset-PIR plan half: the replica-choice key plus the Chor
+    randomness for the t contacted servers."""
+
+    k_srv: jax.Array
+    chor_pre: chor.ChorPre
+
+    @property
+    def n(self) -> int:
+        return self.chor_pre.n
+
+    @property
+    def batch(self) -> int:
+        return self.chor_pre.batch
+
+
+@register_scheme("subset")
+@dataclasses.dataclass(frozen=True)
+class SubsetScheme(_MaskFamily):
+    """Subset-PIR (paper §5.1): Chor among a random t of the d servers.
+
+    ``query`` takes the straggler policy through ``pick_servers`` — the
+    serving pipeline passes its fastest-t-by-latency-EMA ranking; the
+    default is the paper's uniform random subset (Algorithm 5.1).
+    """
+
+    d: int
+    d_a: int
+    t: Optional[int] = None
+
+    has_precompute = True
+
+    def __post_init__(self):
+        _validate_servers(self.d, self.d_a)
+        if not (self.t and 2 <= self.t <= self.d):
+            raise ValueError("subset needs 2 <= t <= d")
+
+    def privacy(self, n: int) -> Tuple[float, float]:
+        """(0, δ) with δ = Π_{i<t} (d_a−i)/(d−i) (Security Thm 5): the
+        probability every contacted server is corrupt. t ≤ d_a is legal
+        by design — an all-corrupt contact set is then *possible*, and it
+        is priced here by δ > 0 rather than rejected at construction; for
+        t > d_a the product hits a zero factor and privacy is
+        unconditional."""
+        return 0.0, accounting.delta_subset(self.d, self.d_a, self.t)
+
+    def costs(self, n: int) -> Dict[str, float]:
+        return accounting.scheme_costs("subset", n=n, d=self.d, t=self.t)
+
+    def precompute(self, key: jax.Array, n: int, b: int) -> SubsetPlan:
+        k_srv, k_q = jax.random.split(key)
+        return SubsetPlan(
+            k_srv=k_srv, chor_pre=chor.precompute_queries(k_q, n, self.t, b)
+        )
+
+    def query(self, plan, q_idx, *, pick_servers=None) -> Queries:
+        if pick_servers is not None:
+            servers = tuple(int(s) for s in pick_servers(self.t))
+        else:
+            servers = tuple(
+                int(s) for s in subset.choose_servers(plan.k_srv, self.d, self.t)
+            )
+        if len(servers) != self.t:
+            raise ValueError(f"subset needs t={self.t} servers, got {servers}")
+        packed = chor.assemble_queries(plan.chor_pre, q_idx)
+        return Queries("mask", chor.query_masks(packed, plan.n), servers, q_idx)
+
+
+# --------------------------------------------------------------------------
+# The anonymity-system combinator
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Anonymized:
+    """Route any scheme through an anonymity set of u users (paper
+    §4.2/§4.4) — the combinator replacing the old ``as-*`` string
+    variants.
+
+    The AS is a perfectly secret permutation over user messages
+    (``repro.core.anonymity``): it changes *attribution*, not bits on the
+    wire, so every wire stage delegates to the base scheme verbatim and
+    only the accounting is rewritten — ε composes via the Composition
+    Lemma, ε₂ = ln(e^{2ε₁} + u − 1) − ln u (Security Thms 2 and 4 are
+    exactly this lemma applied to Direct Requests and Sparse-PIR), and δ
+    is untouched. Wrapping is composable: any registered scheme — or
+    another wrapper — is a legal base, which is what makes future
+    leakage-tunable variants plug-ins rather than new dispatch arms.
+    """
+
+    base: Any
+    u: int
+
+    def __post_init__(self):
+        if not isinstance(self.base, SchemeProtocol):
+            raise TypeError(
+                f"Anonymized needs a staged scheme, got {type(self.base).__name__}"
+            )
+        if self.u < 1:
+            raise ValueError(f"{self.name} needs anonymity-set size u >= 1")
+
+    # ------------------------------------------------------------- identity
+    @property
+    def name(self) -> str:
+        return f"as-{self.base.name}"
+
+    @property
+    def d(self) -> int:
+        return self.base.d
+
+    @property
+    def d_a(self) -> int:
+        return self.base.d_a
+
+    @property
+    def has_precompute(self) -> bool:
+        return self.base.has_precompute
+
+    @property
+    def signature(self) -> Tuple:
+        return ("as", self.u) + tuple(self.base.signature)
+
+    # ---------------------------------------------------- accounting (only)
+    def privacy(self, n: int) -> Tuple[float, float]:
+        eps, delta = self.base.privacy(n)
+        return accounting.compose_with_anonymity(eps, self.u), delta
+
+    def costs(self, n: int) -> Dict[str, float]:
+        return self.base.costs(n)
+
+    # ------------------------------------------- wire stages: pure delegation
+    def precompute(self, key: jax.Array, n: int, b: int) -> Plan:
+        return self.base.precompute(key, n, b)
+
+    def query(self, plan, q_idx, *, pick_servers=None) -> Queries:
+        return self.base.query(plan, q_idx, pick_servers=pick_servers)
+
+    def answer(self, store: RecordStore, queries: Queries) -> Answers:
+        return self.base.answer(store, queries)
+
+    def reconstruct(self, answers: Answers) -> jnp.ndarray:
+        return self.base.reconstruct(answers)

@@ -1,31 +1,38 @@
-"""Scheme registry: one object tying together query generation, server
-answering, reconstruction, privacy accounting and the Table-1 cost model.
+"""Back-compat scheme facade over the staged registry.
 
-Everything downstream (the serving engine, PrivateEmbedding, benchmarks,
-configs) talks to a :class:`Scheme` instead of the per-module functions, so
-a config can switch `chor ↔ sparse ↔ direct ↔ subset` with one string.
+Everything downstream historically talked to a :class:`Scheme` — one
+frozen dataclass carrying a name string plus the union of all scheme
+parameters — so a config could switch `chor ↔ sparse ↔ direct ↔ subset`
+with one string. That surface is preserved verbatim, but it is now a
+thin facade over :mod:`repro.core.protocol`: ``make_scheme`` validates
+through the registry classes, ``Scheme.retrieve`` delegates to the
+staged ``precompute → query → answer → reconstruct`` path, and the
+``as-*`` names build the :class:`~repro.core.protocol.Anonymized`
+combinator over the base scheme (DESIGN.md §Scheme protocol). No method
+here dispatches on the name string — the registry does.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import accounting, chor, direct, sparse, subset
+from repro.core import protocol
 from repro.db.store import RecordStore
 
 __all__ = ["Scheme", "make_scheme", "SCHEMES"]
 
+# the legacy config-name surface; any "as-<registered base>" is also
+# accepted by make_scheme (the Anonymized combinator generalizes as-*)
 SCHEMES = ("chor", "sparse", "direct", "subset", "as-sparse", "as-direct")
 
 
 @dataclasses.dataclass(frozen=True)
 class Scheme:
-    """A fully-parameterised ε-private PIR scheme.
+    """A fully-parameterised ε-private PIR scheme (back-compat facade).
 
     d    : number of databases (replica groups)
     d_a  : assumed number of adversarial databases (accounting only)
@@ -33,6 +40,10 @@ class Scheme:
     p    : total requests incl. dummies (direct / as-direct)
     t    : servers contacted (subset)
     u    : anonymity-set size (as-* variants)
+
+    ``staged`` is the registry-built :class:`~repro.core.protocol.
+    SchemeProtocol` instance this facade fronts; every method below
+    delegates to it.
     """
 
     name: str
@@ -43,36 +54,25 @@ class Scheme:
     t: Optional[int] = None
     u: Optional[int] = None
 
+    @property
+    def staged(self) -> protocol.SchemeProtocol:
+        """The staged protocol object (registry class, Anonymized-wrapped
+        for as-* names). Rebuilt on demand — construction is host-side
+        float/param plumbing, no device work."""
+        return protocol.as_protocol(self)
+
     # ------------------------------------------------------------ privacy
+    def privacy(self, n: int) -> Tuple[float, float]:
+        return self.staged.privacy(n)
+
     def epsilon(self, n: int) -> float:
-        if self.name == "chor":
-            return 0.0
-        if self.name == "sparse":
-            return accounting.epsilon_sparse(self.theta, self.d, self.d_a)
-        if self.name == "as-sparse":
-            return accounting.epsilon_as_sparse(
-                self.theta, self.d, self.d_a, self.u
-            )
-        if self.name == "direct":
-            return accounting.epsilon_direct(n, self.d, self.d_a, self.p)
-        if self.name == "as-direct":
-            return accounting.epsilon_as_direct(
-                n, self.d, self.d_a, self.p, self.u
-            )
-        if self.name == "subset":
-            return 0.0
-        raise ValueError(self.name)
+        return self.privacy(n)[0]
 
     def delta(self, n: int) -> float:
-        if self.name == "subset":
-            return accounting.delta_subset(self.d, self.d_a, self.t)
-        return 0.0
+        return self.privacy(n)[1]
 
     def costs(self, n: int) -> dict:
-        return accounting.scheme_costs(
-            "as-sparse" if self.name == "as-sparse" else self.name,
-            n=n, d=self.d, p=self.p, theta=self.theta, t=self.t,
-        )
+        return self.staged.costs(n)
 
     # ------------------------------------------------------------ retrieval
     def retrieve(
@@ -80,40 +80,22 @@ class Scheme:
     ) -> jnp.ndarray:
         """[B] indices -> [B, W] packed records (reference path).
 
-        For the as-* variants retrieval is mechanically identical to the
-        base scheme — the anonymity system changes who the adversary can
-        attribute messages to, not the bits exchanged (paper §4.2/§4.4) —
-        so they share the base retrieve and differ only in accounting.
+        Runs the staged pipeline end to end. For the as-* variants the
+        wire stages are mechanically identical to the base scheme — the
+        anonymity system changes who the adversary can attribute messages
+        to, not the bits exchanged (paper §4.2/§4.4) — which is exactly
+        how :class:`~repro.core.protocol.Anonymized` delegates.
         """
-        if self.name in ("chor",):
-            return chor.retrieve(key, store, self.d, q_idx)
-        if self.name in ("sparse", "as-sparse"):
-            return sparse.retrieve(key, store, self.d, self.theta, q_idx)
-        if self.name in ("direct", "as-direct"):
-            return direct.retrieve(key, store, self.d, self.p, q_idx)
-        if self.name == "subset":
-            return subset.retrieve(key, store, self.d, self.t, q_idx)
-        raise ValueError(self.name)
+        return protocol.staged_retrieve(self.staged, key, store, q_idx)
 
 
 def make_scheme(name: str, d: int, d_a: int, **kw) -> Scheme:
     name = name.lower()
-    if name not in SCHEMES:
+    base = name[3:] if name.startswith("as-") else name
+    if base not in protocol.registered_schemes():
         raise ValueError(f"unknown scheme {name!r}; choose from {SCHEMES}")
     sch = Scheme(name=name, d=d, d_a=d_a, **kw)
-    # validate eagerly so configs fail fast
-    if name in ("sparse", "as-sparse") and not (
-        sch.theta and 0 < sch.theta <= 0.5
-    ):
-        raise ValueError(f"{name} needs 0 < theta <= 0.5, got {sch.theta}")
-    if name in ("direct", "as-direct"):
-        if not sch.p or sch.p % d:
-            raise ValueError(f"{name} needs p as a positive multiple of d")
-    if name == "subset" and not (sch.t and 2 <= sch.t <= d):
-        raise ValueError("subset needs 2 <= t <= d")
-    if name.startswith("as-") and not (sch.u and sch.u >= 1):
-        raise ValueError(f"{name} needs anonymity-set size u >= 1")
-    if name == "subset" and sch.t <= sch.d_a:
-        # legal but all-corrupt is possible; delta > 0 — warn via math.inf? No:
-        pass  # accounted by delta(); deliberately allowed
+    # build the staged object eagerly: the registry classes own validation
+    # (theta/p/t/u ranges, server counts), so configs fail fast here
+    sch.staged
     return sch

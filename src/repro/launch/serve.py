@@ -22,7 +22,7 @@ import time
 
 import numpy as np
 
-from repro.core import make_scheme
+from repro.core import SCHEMES, make_scheme
 from repro.core.accounting import PrivacyBudget
 from repro.db import make_synthetic_store
 from repro.serve import (
@@ -35,9 +35,7 @@ from repro.serve import (
 
 def build_args() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--scheme", default="sparse",
-                    choices=["chor", "sparse", "as-sparse", "direct",
-                             "as-direct", "subset"])
+    ap.add_argument("--scheme", default="sparse", choices=sorted(SCHEMES))
     ap.add_argument("--n", type=int, default=8192)
     ap.add_argument("--record-bytes", type=int, default=256)
     ap.add_argument("--d", type=int, default=10)
@@ -63,17 +61,17 @@ def build_args() -> argparse.ArgumentParser:
 
 
 def make_engine(args) -> ServingPipeline:
-    kw = {}
-    if args.scheme in ("sparse", "as-sparse"):
-        kw["theta"] = args.theta
-    if args.scheme in ("direct", "as-direct"):
-        kw["p"] = args.p - (args.p % args.d) or args.d
-    if args.scheme == "subset":
-        kw["t"] = args.t
-    if args.scheme.startswith("as-"):
-        kw["u"] = args.u
-
-    scheme = make_scheme(args.scheme, d=args.d, d_a=args.da, **kw)
+    # the whole flag union goes through; the registry drops what the
+    # chosen scheme does not declare (DESIGN.md §Scheme protocol)
+    scheme = make_scheme(
+        args.scheme,
+        d=args.d,
+        d_a=args.da,
+        theta=args.theta,
+        p=args.p - (args.p % args.d) or args.d,
+        t=args.t,
+        u=args.u,
+    )
     store = make_synthetic_store(args.n, args.record_bytes, seed=0)
     cache = (
         QueryCache(scheme, store.n, max_entries=args.cache_entries)
@@ -166,10 +164,10 @@ def main() -> None:
     engine = make_engine(args)
     scheme = engine.scheme
 
+    eps, delta = scheme.privacy(args.n)
     print(f"scheme={args.scheme} n={args.n} d={args.d} d_a={args.da} "
           f"frontend={args.frontend}")
-    print(f"eps/query={scheme.epsilon(args.n):.4g} "
-          f"delta/query={scheme.delta(args.n):.4g} "
+    print(f"eps/query={eps:.4g} delta/query={delta:.4g} "
           f"costs={scheme.costs(args.n)}")
 
     if args.frontend == "async":

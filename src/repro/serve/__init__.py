@@ -1,11 +1,14 @@
 """repro.serve — the batch-scheduled, sharded PIR serving subsystem.
 
 queue → router → backend: ``BatchScheduler`` decides when/how big batches
-are, ``SchemeRouter`` turns a batch into per-server payloads for the
-configured scheme, ``ShardedBackend`` answers them (single-host kernels
-off-mesh; record-sharded Pallas + GF(2) collectives under an active
-``repro.dist`` mesh). ``ServingPipeline`` composes the three and enforces
-per-client (ε, δ) budgets; ``PIRServingEngine`` is the back-compat facade.
+are, ``SchemeRouter`` drives the configured scheme's staged protocol
+(DESIGN.md §Scheme protocol) to turn a batch into per-server payloads,
+``ShardedBackend`` runs the answer stage (single-host kernels off-mesh;
+record-sharded Pallas + GF(2) collectives under an active ``repro.dist``
+mesh). ``ServingPipeline`` composes the three and enforces per-client
+(ε, δ) budgets; ``PIRServingEngine`` is the back-compat facade. Both
+accept staged scheme objects (incl. ``Anonymized`` wrappers) or the
+legacy ``Scheme`` facade.
 
 In front of and across the pipeline: ``AsyncFrontend`` is the thread-
 backed (asyncio-compatible) concurrent ingest stage with per-request

@@ -24,16 +24,32 @@ hit and a miss are indistinguishable to the accountant and exhausted
 clients are refused even when the answer sits in cache.
 
 **L2 — single-use precompute pool.** ``put_pre``/``take_pre`` hold
-pre-generated *query-independent* randomness for upcoming batches, keyed
-(scheme, params, bucket): :class:`repro.core.chor.ChorPre` /
-:class:`repro.core.sparse.SparsePre` objects the async frontend fills
-while the flush worker is idle. Entries are popped exactly once — a pre
-batch is fresh randomness that has never touched a wire, and using it for
-one batch is distributionally identical to generating it inline
-(bit-identical by construction: ``gen_queries = assemble ∘ precompute``).
-Reuse across batches is forbidden for the same reason L1 keys are
-structural: two batches sharing randomness would hand the adversary
-correlated views. ``take_pre`` removes the entry; there is no peek.
+pre-generated *query-independent* randomness for upcoming batches: the
+scheme-protocol ``Plan`` objects (DESIGN.md §Scheme protocol) that
+``SchemeRouter.precompute`` emits, keyed (scheme, params, bucket) with
+the bucket cross-checked against the plan's own batch size. The async
+frontend fills the pool while the flush worker is idle. Entries are
+popped exactly once — a pre batch is fresh randomness that has never
+touched a wire, and using it for one batch is distributionally identical
+to generating it inline (bit-identical by construction: every scheme's
+inline planning *is* ``query ∘ precompute``). Reuse across batches is
+forbidden for the same reason L1 keys are structural: two batches
+sharing randomness would hand the adversary correlated views.
+``take_pre`` removes the entry; there is no peek.
+
+**Refusal memo.** ``note_refusal``/``refused`` memoize per client that
+the budget refused, so repeated over-budget polls skip the accountant
+re-check — cheap today, measurable if budgets move to a remote store.
+The memo is pure-function memoization, keyed on a hashable snapshot of
+the budget state (limits + spend): ``can_spend`` is a pure function of
+that state and the per-query price, and the price is pinned by the
+cache's (scheme, n) signature, so a hit can never be stale — any budget
+mutation (a top-up, spend through a shared budget object, a fresh
+budget in a new pipeline reusing this cache) changes the token and
+misses. It can only ever short-circuit a check that would refuse
+anyway; it never touches the budget (refusals spend nothing —
+tests/test_serve_cache.py asserts), and ``invalidate`` clears it along
+with everything else.
 
 Memory: L1 is an LRU bounded by ``max_entries``; query columns larger
 than ``max_query_vector_bytes`` are dropped (the answer memo alone still
@@ -54,7 +70,7 @@ from typing import Any, Deque, Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.core.schemes import Scheme
+from repro.core.protocol import as_protocol
 
 __all__ = ["scheme_signature", "block_pre_ready", "CacheEntry", "QueryCache"]
 
@@ -74,13 +90,14 @@ def block_pre_ready(pre: Any) -> Any:
     return pre
 
 
-def scheme_signature(scheme: Scheme, n: int) -> Tuple:
+def scheme_signature(scheme: Any, n: int) -> Tuple:
     """Hashable identity of (scheme, params, store size) — the cache is
-    only valid for exactly this configuration."""
-    return (
-        scheme.name, scheme.d, scheme.d_a, scheme.theta, scheme.p,
-        scheme.t, scheme.u, int(n),
-    )
+    only valid for exactly this configuration. Accepts a staged
+    :class:`~repro.core.protocol.SchemeProtocol` instance or the
+    back-compat facade; both normalize through the registry, so a facade
+    ``make_scheme("as-sparse", ...)`` and the ``Anonymized(sparse, u)``
+    it fronts sign identically."""
+    return tuple(as_protocol(scheme).signature) + (int(n),)
 
 
 @dataclasses.dataclass
@@ -109,12 +126,13 @@ class QueryCache:
 
     def __init__(
         self,
-        scheme: Scheme,
+        scheme: Any,
         n: int,
         *,
         max_entries: int = 4096,
         max_pre_batches: int = 2,
         max_query_vector_bytes: int = 1 << 20,
+        max_refusal_entries: int = 4096,
     ):
         if max_entries < 0:
             raise ValueError(f"max_entries must be >= 0, got {max_entries}")
@@ -122,12 +140,15 @@ class QueryCache:
         self.max_entries = max_entries
         self.max_pre_batches = max_pre_batches
         self.max_query_vector_bytes = max_query_vector_bytes
+        self.max_refusal_entries = max_refusal_entries
         self._entries: "OrderedDict[Tuple[str, int], CacheEntry]" = OrderedDict()
         self._pre: Dict[int, Deque[Any]] = {}
+        # client -> the budget-state token its refusal was computed from
+        self._refused: "OrderedDict[str, Tuple]" = OrderedDict()
         self.metrics = {
             "hits": 0, "misses": 0, "insertions": 0, "evictions": 0,
             "pre_filled": 0, "pre_used": 0, "pre_dropped": 0,
-            "invalidations": 0,
+            "invalidations": 0, "refusals_noted": 0, "refusal_hits": 0,
         }
 
     def __len__(self) -> int:
@@ -172,10 +193,43 @@ class QueryCache:
             self._entries.popitem(last=False)
             self.metrics["evictions"] += 1
 
+    # ----------------------------------------------- negative-result memo
+    def note_refusal(self, client: str, token: Tuple) -> None:
+        """Record that ``client``'s budget refused this cache's fixed
+        (ε, δ) price, where ``token`` is the hashable budget-state
+        snapshot the decision was computed from (see
+        ``ServingPipeline._budget_token``). The refusal outcome is a
+        pure function of (token, price), so memoizing on the token is
+        exact: any budget mutation changes the token and the memo
+        misses. Advisory only: the memo never touches the budget."""
+        self._refused[client] = token
+        self._refused.move_to_end(client)
+        self.metrics["refusals_noted"] += 1
+        while len(self._refused) > self.max_refusal_entries:
+            self._refused.popitem(last=False)
+
+    def refused(self, client: str, token: Tuple) -> bool:
+        """True iff ``client`` is memoized as budget-exhausted for
+        exactly this budget state (a changed token — top-up, shared-
+        budget spend, fresh budget — is a miss, never a stale hit)."""
+        if self._refused.get(client) != token:
+            return False
+        self._refused.move_to_end(client)  # LRU touch
+        self.metrics["refusal_hits"] += 1
+        return True
+
     # --------------------------------------------- L2: single-use pre pool
     def put_pre(self, bucket: int, pre: Any) -> bool:
         """Bank precomputed batch randomness for ``bucket``; False when the
-        pool is full (the pre is dropped — never queued beyond the cap)."""
+        pool is full (the pre is dropped — never queued beyond the cap).
+        A protocol Plan's own batch size must match the bucket it is
+        banked under (opaque test doubles without a ``batch`` attribute
+        are accepted as-is)."""
+        batch = getattr(pre, "batch", None)
+        if batch is not None and int(batch) != int(bucket):
+            raise ValueError(
+                f"pre built for batch {batch}, banked under bucket {bucket}"
+            )
         q = self._pre.setdefault(int(bucket), deque())
         if len(q) >= self.max_pre_batches:
             self.metrics["pre_dropped"] += 1
@@ -198,7 +252,9 @@ class QueryCache:
 
     # ------------------------------------------------------------- control
     def invalidate(self) -> None:
-        """Drop everything (backing store changed or privacy review asked)."""
+        """Drop everything (backing store changed, budgets were reset, or
+        privacy review asked)."""
         self._entries.clear()
         self._pre.clear()
+        self._refused.clear()
         self.metrics["invalidations"] += 1

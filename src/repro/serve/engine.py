@@ -4,8 +4,9 @@ This is the production face of the paper: clients submit (client_id, index)
 requests; the :class:`~repro.serve.scheduler.BatchScheduler` batches them
 (batched queries are what make the MXU parity path profitable, DESIGN.md
 §Hardware adaptation) and pads to power-of-two buckets; the
-:class:`~repro.serve.router.SchemeRouter` turns each batch into per-server
-payloads for the configured scheme; the
+:class:`~repro.serve.router.SchemeRouter` drives the configured scheme's
+staged protocol (DESIGN.md §Scheme protocol) to turn each batch into
+per-server payloads; the
 :class:`~repro.serve.sharded.ShardedBackend` answers them — on the
 single-host kernels off-mesh, or with record stores partitioned across the
 active mesh (``repro.dist``) when one is in scope.
@@ -42,7 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.accounting import PrivacyBudget
-from repro.core.schemes import Scheme
+from repro.core.protocol import SchemeProtocol, as_protocol
 from repro.db import packing
 from repro.db.store import RecordStore
 from repro.serve.cache import QueryCache, block_pre_ready, scheme_signature
@@ -59,7 +60,7 @@ class ServingPipeline:
     def __init__(
         self,
         store: RecordStore,
-        scheme: Scheme,
+        scheme,
         *,
         scheduler: Optional[BatchScheduler] = None,
         backend: Optional[ShardedBackend] = None,
@@ -69,18 +70,22 @@ class ServingPipeline:
         seed: int = 0,
     ):
         self.store = store
+        # `scheme` may be a staged SchemeProtocol instance (incl. Anonymized
+        # wrappers) or the back-compat Scheme facade; `self.scheme` keeps
+        # whatever the caller handed over, `self.staged` is the normalized
+        # protocol object every stage below drives
         self.scheme = scheme
+        self.staged: SchemeProtocol = as_protocol(scheme)
         # explicit None checks: an empty BatchScheduler is falsy (__len__)
         self.scheduler = scheduler if scheduler is not None else BatchScheduler()
         self.backend = backend if backend is not None else ShardedBackend(
             store, simulate_latency=simulate_latency
         )
-        self.backend.ensure_replicas(scheme.d)
+        self.backend.ensure_replicas(self.staged.d)
+        # the straggler policy rides along unconditionally; only schemes
+        # whose query() consumes pick_servers (Subset-PIR) ever look at it
         self.router = SchemeRouter(
-            scheme,
-            pick_servers=(
-                self.backend.fastest if scheme.name == "subset" else None
-            ),
+            self.staged, pick_servers=self.backend.fastest
         )
         if cache is not None and cache.signature != scheme_signature(
             scheme, store.n
@@ -97,8 +102,9 @@ class ServingPipeline:
         self._key = jax.random.key(seed)
         # the per-query (ε, δ) price is constant for a pipeline (fixed
         # scheme, fixed n): compute once so admission is O(1) float math
-        self._eps_per_query = scheme.epsilon(store.n)
-        self._delta_per_query = scheme.delta(store.n)
+        self._eps_per_query, self._delta_per_query = self.staged.privacy(
+            store.n
+        )
         self.metrics = {
             "queries": 0, "batches": 0, "records_touched": 0.0,
             "blocks_sent": 0.0, "refused": 0, "padded": 0, "truncated": 0,
@@ -111,14 +117,33 @@ class ServingPipeline:
             self._budgets[client] = self._default_budget()
         return self._budgets[client]
 
+    def _budget_token(self, client: str) -> tuple:
+        """Hashable snapshot of the client's budget state. ``can_spend``
+        is a pure function of this state and the pipeline's fixed price,
+        so the cache's refusal memo keyed on it can never go stale."""
+        b = self.budget(client)
+        return (b.epsilon_limit, b.delta_limit, b.spent_epsilon, b.spent_delta)
+
     def submit_request(self, client: str, index: int) -> Optional[Request]:
         """Queue one query; None if the client's privacy budget refuses.
 
         Spending happens here, at admission — before the cache is ever
-        consulted — so a cache hit is priced exactly like a miss.
+        consulted — so a cache hit is priced exactly like a miss. The
+        cache's refusal memo short-circuits repeated over-budget polls:
+        it is keyed on the exact budget state the refusal was computed
+        from, so any budget change (top-up, shared-budget spend, a fresh
+        budget behind a reused cache) re-consults the accountant — and
+        (as always) a refusal spends nothing.
         """
+        if self.cache is not None and self.cache.refused(
+            client, self._budget_token(client)
+        ):
+            self.metrics["refused"] += 1
+            return None
         eps, delta = self._eps_per_query, self._delta_per_query
         if not self.budget(client).can_spend(eps, delta):
+            if self.cache is not None:
+                self.cache.note_refusal(client, self._budget_token(client))
             self.metrics["refused"] += 1
             return None
         self.budget(client).spend(eps, delta)
@@ -185,7 +210,7 @@ class ServingPipeline:
 
             self.metrics["batches"] += 1
             self.metrics["padded"] += padded - b
-            costs = self.scheme.costs(self.store.n)
+            costs = self.staged.costs(self.store.n)
             self.metrics["records_touched"] += costs["C_p"] / 2.0 * b
             self.metrics["blocks_sent"] += costs["C_m"] * b
 
@@ -271,7 +296,7 @@ class PIRServingEngine(ServingPipeline):
     def __init__(
         self,
         store: RecordStore,
-        scheme: Scheme,
+        scheme,
         *,
         max_batch: int = 1024,
         default_budget: Optional[Callable[[], PrivacyBudget]] = None,

@@ -2,27 +2,25 @@
 
 The router is the seam between the scheduler (which hands over a padded
 [B] index batch) and the execution backend (which answers per-server
-payloads). It owns exactly the scheme-shaped decisions:
+payloads). It is a thin driver of the staged
+:class:`~repro.core.protocol.SchemeProtocol` (DESIGN.md §Scheme
+protocol): it holds **no per-scheme branching** — which replicas to
+contact, what each receives, and how responses reconstruct are all the
+scheme object's stages, dispatched through the registry. The straggler
+policy (the serving pipeline's fastest-t-by-latency-EMA ranking) is
+forwarded to ``query()``, where only Subset-PIR consumes it.
 
-  * which replicas to contact (all d, or the straggler-policy's fastest t
-    for Subset-PIR),
-  * what each contacted server receives (query *masks* for the XOR
-    family chor/sparse/as-sparse/subset, plain *index requests* for
-    direct/as-direct),
-  * how the per-server responses reconstruct into records (XOR for the
-    mask family, response selection for direct).
-
-Query generation reuses the exact per-scheme functions the reference
-``Scheme.retrieve`` path uses, so for a given key the routed batch and the
-single-host reference produce identical wire bits — that is what makes the
-sharded-equals-single-host proofs (tests/_multidevice_checks.py) exact
-rather than statistical.
+Because the staged stages are the exact functions the reference
+``staged_retrieve`` path uses, for a given key the routed batch and the
+single-host reference produce identical wire bits — that is what makes
+the sharded-equals-single-host proofs (tests/_multidevice_checks.py)
+exact rather than statistical.
 
 For the cross-batch cache (DESIGN.md §Cross-batch cache) the router also
-splits planning in two: :meth:`SchemeRouter.precompute` generates the
-query-independent randomness of a whole batch ahead of time, and
-``plan(..., pre=...)`` finishes it for the actual indices. Because the
-underlying scheme functions are themselves ``assemble ∘ precompute``,
+exposes the protocol's planning split: :meth:`SchemeRouter.precompute`
+generates the query-independent randomness of a whole batch ahead of
+time, and ``plan(..., pre=...)`` finishes it for the actual indices.
+Because every scheme's ``query ∘ precompute`` *is* its inline planning,
 ``plan(key, n, q)`` and ``plan(key, n, q, pre=precompute(key, n, B))``
 produce bit-identical payloads (asserted in tests/test_serve_cache.py) —
 prefetching moves work off the flush path without changing a single wire
@@ -31,93 +29,62 @@ bit or the adversary's view.
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, Optional, Sequence, Tuple
+from typing import Any, Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import chor, direct, sparse, subset
-from repro.core.schemes import SCHEMES, Scheme
+from repro.core.protocol import (
+    Answers,
+    Queries,
+    SchemeProtocol,
+    SubsetPlan,
+    as_protocol,
+)
 
 __all__ = ["RoutedBatch", "SubsetPre", "SchemeRouter"]
 
-# schemes whose servers XOR-fold masked records ("mask" kind) vs. answer
-# plain index requests ("index" kind)
-MASK_SCHEMES = ("chor", "sparse", "as-sparse", "subset")
-INDEX_SCHEMES = ("direct", "as-direct")
-
-
-@dataclasses.dataclass
-class RoutedBatch:
-    """One batch's per-server execution plan.
-
-    kind "mask" : payload [d_eff, B, n] {0,1} uint8 request masks
-    kind "index": payload [d_eff, B, p/d] int32 record indices
-    ``servers`` are the replica ids contacted (len d_eff ≤ scheme.d);
-    ``theta`` is set for the sparse family so the backend can pick the
-    gather path.
-    """
-
-    kind: str
-    payload: jnp.ndarray
-    servers: Tuple[int, ...]
-    q_idx: jnp.ndarray
-    theta: Optional[float] = None
-
-
-@dataclasses.dataclass(frozen=True)
-class SubsetPre:
-    """Precomputed Subset-PIR plan half: the replica-choice key plus the
-    Chor randomness for the t contacted servers."""
-
-    k_srv: jax.Array
-    chor_pre: chor.ChorPre
+# back-compat aliases: the pre-protocol names for the wire-boundary types
+RoutedBatch = Queries
+SubsetPre = SubsetPlan
 
 
 class SchemeRouter:
-    """Dispatches chor/sparse/direct/subset/as-* batches.
+    """Drives any registered scheme's staged plan/answer/reconstruct.
+
+    Accepts a staged :class:`~repro.core.protocol.SchemeProtocol`
+    instance (including :class:`~repro.core.protocol.Anonymized`
+    wrappers) or a back-compat :class:`~repro.core.schemes.Scheme`
+    facade, which is normalized through the registry.
 
     ``pick_servers(t) -> Sequence[int]`` supplies Subset-PIR's replica
-    choice — the serving pipeline passes its straggler policy (fastest-t by
-    latency EMA); the default is the paper's uniform random subset.
+    choice — the serving pipeline passes its straggler policy (fastest-t
+    by latency EMA); the default is the paper's uniform random subset.
+    Schemes that contact all d replicas ignore it.
     """
 
     def __init__(
         self,
-        scheme: Scheme,
+        scheme: Any,
         *,
         pick_servers: Optional[Callable[[int], Sequence[int]]] = None,
     ):
-        if scheme.name not in SCHEMES:
-            raise ValueError(
-                f"unknown scheme {scheme.name!r}; choose from {SCHEMES}"
-            )
-        self.scheme = scheme
+        self.scheme: SchemeProtocol = as_protocol(scheme)
         self._pick_servers = pick_servers
 
     # ------------------------------------------------------------ planning
     def precompute(self, key: jax.Array, n: int, b: int) -> Optional[Any]:
         """Pre-generate the query-independent randomness of a [b]-batch.
 
-        Returns a scheme-specific opaque object for ``plan(..., pre=...)``,
-        or None where planning has no query-independent half (the direct
-        family's dummy draws depend on the queried index). The result is
-        **single-use**: feed it to exactly one plan() call.
+        Returns the scheme's Plan for ``plan(..., pre=...)``, or None
+        where planning has no query-independent half (the direct family's
+        dummy draws depend on the queried index — ``has_precompute`` is
+        False). The result is **single-use**: feed it to exactly one
+        plan() call.
         """
-        sch = self.scheme
-        if sch.name == "chor":
-            return chor.precompute_queries(key, n, sch.d, b)
-        if sch.name in ("sparse", "as-sparse"):
-            return sparse.precompute_query_randomness(
-                key, n, sch.d, sch.theta, b
-            )
-        if sch.name == "subset":
-            k_srv, k_q = jax.random.split(key)
-            return SubsetPre(
-                k_srv=k_srv, chor_pre=chor.precompute_queries(k_q, n, sch.t, b)
-            )
-        return None
+        if not self.scheme.has_precompute:
+            return None
+        return self.scheme.precompute(key, n, b)
 
     def plan(
         self,
@@ -126,78 +93,33 @@ class SchemeRouter:
         q_idx: jnp.ndarray,
         *,
         pre: Optional[Any] = None,
-    ) -> RoutedBatch:
+    ) -> Queries:
         """[B] indices -> per-server payloads for one batch.
 
         ``pre`` (from :meth:`precompute`) supplies pre-generated batch
         randomness; ``plan(key, n, q)`` ≡ ``plan(key, n, q,
         pre=precompute(key, n, B))`` bit-for-bit.
         """
-        sch = self.scheme
-        name = sch.name
         if pre is not None:
-            pre_n = pre.chor_pre.n if name == "subset" else getattr(pre, "n", n)
-            if pre_n != n:
-                raise ValueError(f"pre built for n={pre_n}, store has n={n}")
-
-        if name == "chor":
-            packed = (
-                chor.assemble_queries(pre, q_idx) if pre is not None
-                else chor.gen_queries(key, n, sch.d, q_idx)
-            )
-            return RoutedBatch(
-                "mask", chor.query_masks(packed, n), tuple(range(sch.d)), q_idx
-            )
-
-        if name in ("sparse", "as-sparse"):
-            masks = (
-                sparse.assemble_query_matrix(pre, q_idx) if pre is not None
-                else sparse.gen_query_matrix(key, n, sch.d, sch.theta, q_idx)
-            )
-            return RoutedBatch(
-                "mask", masks, tuple(range(sch.d)), q_idx, theta=sch.theta
-            )
-
-        if name == "subset":
-            if pre is not None:
-                k_srv, chor_pre = pre.k_srv, pre.chor_pre
-            else:
-                k_srv, k_q = jax.random.split(key)
-                chor_pre = None
-            if self._pick_servers is not None:
-                servers = tuple(int(s) for s in self._pick_servers(sch.t))
-            else:
-                servers = tuple(
-                    int(s) for s in subset.choose_servers(k_srv, sch.d, sch.t)
-                )
-            if len(servers) != sch.t:
+            if not self.scheme.has_precompute:
                 raise ValueError(
-                    f"subset needs t={sch.t} servers, got {servers}"
+                    f"{self.scheme.name} has no precompute half"
                 )
-            packed = (
-                chor.assemble_queries(chor_pre, q_idx) if chor_pre is not None
-                else chor.gen_queries(k_q, n, sch.t, q_idx)
-            )
-            return RoutedBatch("mask", chor.query_masks(packed, n), servers, q_idx)
-
-        if name in ("direct", "as-direct"):
-            if pre is not None:
-                raise ValueError("the direct family has no precompute half")
-            reqs = direct.gen_queries(key, n, sch.d, sch.p, q_idx)
-            return RoutedBatch("index", reqs, tuple(range(sch.d)), q_idx)
-
-        raise ValueError(name)
+            if pre.n != n:
+                raise ValueError(f"pre built for n={pre.n}, store has n={n}")
+            plan = pre
+        else:
+            plan = self.scheme.precompute(key, n, int(q_idx.shape[0]))
+        return self.scheme.query(plan, q_idx, pick_servers=self._pick_servers)
 
     # -------------------------------------------------------- reconstruction
-    def finalize(
-        self, routed: RoutedBatch, responses: jnp.ndarray
-    ) -> jnp.ndarray:
+    def finalize(self, routed: Queries, responses: jnp.ndarray) -> jnp.ndarray:
         """Per-server responses -> [B, W] packed records.
 
         mask kind : responses [d_eff, B, W] packed partial folds -> XOR.
-        index kind: responses [d, B, p/d, W] gathered records -> select the
-        slot holding the real query.
+        index kind: responses [d, B, p/d, W] gathered records -> select
+        the slot holding the real query.
         """
-        if routed.kind == "mask":
-            return chor.reconstruct(responses)
-        return direct.select_response(routed.payload, responses, routed.q_idx)
+        return self.scheme.reconstruct(
+            Answers(queries=routed, responses=responses)
+        )

@@ -1,6 +1,12 @@
 """Execution backends: where a routed batch actually touches records.
 
-``ShardedBackend`` answers per-server payloads against the record store.
+``ShardedBackend`` is the production *answer stage* of the staged
+scheme protocol (DESIGN.md §Scheme protocol): it consumes the wire-level
+:class:`~repro.core.protocol.Queries` a scheme's ``query()`` emitted and
+answers per-server payloads against the record store — dispatching on
+the wire *kind* (mask vs index) and θ, never on scheme names. The
+scheme's ``reconstruct`` then runs on the stacked responses
+(``SchemeRouter.finalize``).
 With no active mesh it is the single-host kernel path (exactly what the
 old one-file engine did). Under ``repro.dist.mesh_rules`` with a rule
 mapping the "records" logical axis, every server's database is partitioned
@@ -55,7 +61,7 @@ from repro.kernels import ops, ref
 from repro.kernels.gather_xor import gather_xor, indices_from_mask
 from repro.kernels.parity_matmul import parity_matmul
 from repro.kernels.xor_fold import xor_fold
-from repro.serve.router import RoutedBatch
+from repro.core.protocol import Queries
 
 __all__ = ["ServerStats", "ShardedBackend"]
 
@@ -303,7 +309,7 @@ class ShardedBackend:
             self._mesh_fns[key] = fn
         return fn(state["db"], reqs_s)
 
-    def answer_batch(self, routed: RoutedBatch) -> jnp.ndarray:
+    def answer_batch(self, routed: Queries) -> jnp.ndarray:
         """Answer every contacted server, tracking per-replica latency.
 
         Returns stacked responses: [d_eff, B, W] (mask) or

@@ -1,0 +1,246 @@
+"""Registry-parameterized conformance suite for the staged SchemeProtocol
+(DESIGN.md §Scheme protocol).
+
+For every registered scheme: the staged query→answer→reconstruct
+round-trip is bit-identical to the legacy per-module ``retrieve`` path
+(and to the back-compat ``Scheme.retrieve`` facade) for the same key; and
+``Anonymized(base, u)`` rewrites ``privacy()`` to the paper's composed
+bounds while leaving every wire bit unchanged — the anonymity system
+changes attribution, not bits (paper §4.2/§4.4)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import accounting as acc
+from repro.core import chor, direct, make_scheme, sparse, subset
+from repro.core.protocol import (
+    Anonymized,
+    Queries,
+    SchemeProtocol,
+    as_protocol,
+    build_scheme,
+    get_scheme,
+    register_scheme,
+    registered_schemes,
+    scheme_param_names,
+    staged_retrieve,
+)
+from repro.db import make_synthetic_store
+from repro.serve import SchemeRouter, ServingPipeline, scheme_signature
+
+D, D_A = 4, 2
+PARAMS = {
+    "chor": {},
+    "sparse": dict(theta=0.3),
+    "direct": dict(p=8),
+    "subset": dict(t=3),
+}
+# the pre-protocol per-module reference paths — the ground truth the
+# staged pipeline must reproduce bit for bit
+LEGACY_RETRIEVE = {
+    "chor": lambda key, store, s, q: chor.retrieve(key, store, s.d, q),
+    "sparse": lambda key, store, s, q: sparse.retrieve(
+        key, store, s.d, s.theta, q
+    ),
+    "direct": lambda key, store, s, q: direct.retrieve(
+        key, store, s.d, s.p, q
+    ),
+    "subset": lambda key, store, s, q: subset.retrieve(
+        key, store, s.d, s.t, q
+    ),
+}
+
+
+@pytest.fixture(scope="module")
+def store():
+    return make_synthetic_store(n=96, record_bytes=20, seed=13)
+
+
+def test_suite_covers_the_whole_registry():
+    """Registering a new scheme must force a conformance entry here."""
+    assert set(PARAMS) == set(registered_schemes())
+    assert set(LEGACY_RETRIEVE) == set(registered_schemes())
+
+
+# --------------------------------------------------------------------------
+# Staged round-trip ≡ legacy retrieve, for every registered scheme
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("name", sorted(PARAMS))
+def test_staged_roundtrip_bit_identical_to_legacy(store, name):
+    sch = build_scheme(name, d=D, d_a=D_A, **PARAMS[name])
+    key = jax.random.key(3)
+    q = jnp.array([0, 17, 95, 40])
+
+    plan = sch.precompute(key, store.n, 4)
+    assert plan.n == store.n and plan.batch == 4
+    queries = sch.query(plan, q)
+    assert isinstance(queries, Queries)
+    out = np.asarray(sch.reconstruct(sch.answer(store, queries)))
+
+    legacy = np.asarray(LEGACY_RETRIEVE[name](key, store, sch, q))
+    np.testing.assert_array_equal(out, legacy)
+    # correctness: the records themselves
+    np.testing.assert_array_equal(out, np.asarray(store.packed)[np.asarray(q)])
+    # the back-compat facade rides the exact same staged path
+    fac = make_scheme(name, d=D, d_a=D_A, **PARAMS[name])
+    np.testing.assert_array_equal(
+        np.asarray(fac.retrieve(key, store, q)), legacy
+    )
+    # and the helper wraps all four stages identically
+    np.testing.assert_array_equal(
+        np.asarray(staged_retrieve(sch, key, store, q)), legacy
+    )
+
+
+@pytest.mark.parametrize("name", sorted(PARAMS))
+def test_router_plan_matches_staged_query(store, name):
+    """The serving router is a thin driver: same key ⇒ same wire bits as
+    driving the stages by hand."""
+    sch = build_scheme(name, d=D, d_a=D_A, **PARAMS[name])
+    key = jax.random.key(8)
+    q = jnp.array([1, 50])
+    routed = SchemeRouter(sch).plan(key, store.n, q)
+    by_hand = sch.query(sch.precompute(key, store.n, 2), q)
+    np.testing.assert_array_equal(
+        np.asarray(routed.payload), np.asarray(by_hand.payload)
+    )
+    assert routed.servers == by_hand.servers and routed.kind == by_hand.kind
+
+
+# --------------------------------------------------------------------------
+# Anonymized: accounting changes, wire bits do not
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("name", sorted(PARAMS))
+def test_anonymized_changes_privacy_not_wire_bits(store, name):
+    base = build_scheme(name, d=D, d_a=D_A, **PARAMS[name])
+    anon = Anonymized(base, u=64)
+    key = jax.random.key(9)
+    q = jnp.array([5, 60])
+
+    qb = base.query(base.precompute(key, store.n, 2), q)
+    qa = anon.query(anon.precompute(key, store.n, 2), q)
+    np.testing.assert_array_equal(
+        np.asarray(qb.payload), np.asarray(qa.payload)
+    )
+    assert qb.servers == qa.servers and qb.kind == qa.kind
+
+    eps_b, delta_b = base.privacy(store.n)
+    eps_a, delta_a = anon.privacy(store.n)
+    assert delta_a == delta_b  # the AS composes ε only
+    if eps_b > 0:
+        assert 0 < eps_a < eps_b  # u=64 strictly shrinks a positive ε
+    else:
+        assert eps_a == 0.0  # perfect privacy stays perfect
+    assert anon.costs(store.n) == base.costs(store.n)
+
+    out = np.asarray(anon.reconstruct(anon.answer(store, qa)))
+    np.testing.assert_array_equal(out, np.asarray(store.packed)[np.asarray(q)])
+
+
+def test_anonymized_matches_paper_closed_forms(store):
+    """Security Thms 2 and 4 are the Composition Lemma applied to the base
+    bound — Anonymized must reproduce the paper's as-* formulas."""
+    n, u = store.n, 64
+    eps_s = Anonymized(
+        build_scheme("sparse", d=D, d_a=D_A, theta=0.3), u
+    ).privacy(n)[0]
+    assert eps_s == pytest.approx(acc.epsilon_as_sparse(0.3, D, D_A, u))
+    eps_d = Anonymized(
+        build_scheme("direct", d=D, d_a=D_A, p=8), u
+    ).privacy(n)[0]
+    assert eps_d == pytest.approx(acc.epsilon_as_direct(n, D, D_A, 8, u))
+
+
+def test_facade_as_names_build_the_combinator():
+    fac = make_scheme("as-sparse", d=D, d_a=D_A, theta=0.3, u=16)
+    staged = fac.staged
+    assert isinstance(staged, Anonymized) and staged.u == 16
+    assert staged.base == build_scheme("sparse", d=D, d_a=D_A, theta=0.3)
+    assert staged.name == "as-sparse" and staged.d == D and staged.d_a == D_A
+    # facade and combinator sign identically, so caches interoperate
+    assert scheme_signature(fac, 96) == scheme_signature(staged, 96)
+
+
+def test_anonymized_wrapper_serves_through_the_pipeline(store):
+    """An Anonymized wrapper standing in for as-sparse runs the whole
+    serving pipeline: correct records, the composed ε spent per query."""
+    sch = Anonymized(build_scheme("sparse", d=D, d_a=D_A, theta=0.3), u=64)
+    pipe = ServingPipeline(store, sch)
+    assert pipe.submit("c", 7) and pipe.submit("c", 60)
+    out = pipe.flush()
+    assert (out["c"] == store.record_bytes(60)).all()
+    assert pipe.budget("c").spent_epsilon == pytest.approx(
+        2 * sch.privacy(store.n)[0]
+    )
+
+
+def test_anonymized_is_composable_and_validated():
+    base = build_scheme("sparse", d=D, d_a=D_A, theta=0.3)
+    nested = Anonymized(Anonymized(base, u=4), u=4)  # wrappers compose
+    assert nested.name == "as-as-sparse"
+    assert nested.privacy(96)[0] < Anonymized(base, u=4).privacy(96)[0] * 2
+    with pytest.raises(ValueError, match="u >= 1"):
+        Anonymized(base, u=0)
+    with pytest.raises(TypeError, match="staged scheme"):
+        Anonymized("sparse", u=4)
+
+
+# --------------------------------------------------------------------------
+# Registry + validation behavior
+# --------------------------------------------------------------------------
+def test_registry_lookup_and_params():
+    assert get_scheme("sparse").name == "sparse"
+    assert scheme_param_names("sparse") == ("theta",)
+    assert scheme_param_names("direct") == ("p",)
+    assert scheme_param_names("subset") == ("t",)
+    assert scheme_param_names("chor") == ()
+    with pytest.raises(ValueError, match="unknown scheme"):
+        get_scheme("nope")
+    with pytest.raises(ValueError, match="already registered"):
+        register_scheme("chor")(type("Dup", (), {}))
+    assert isinstance(build_scheme("chor", d=2, d_a=1), SchemeProtocol)
+
+
+def test_build_scheme_validation_matches_legacy_make_scheme():
+    with pytest.raises(ValueError, match="theta"):
+        build_scheme("sparse", d=4, d_a=2)  # missing theta
+    with pytest.raises(ValueError, match="multiple of d"):
+        build_scheme("direct", d=4, d_a=2, p=10)
+    with pytest.raises(ValueError, match="2 <= t <= d"):
+        build_scheme("subset", d=4, d_a=2, t=9)
+    with pytest.raises(ValueError, match="u >= 1"):
+        build_scheme("as-sparse", d=4, d_a=2, theta=0.3)  # missing u
+    with pytest.raises(ValueError, match="d_a"):
+        build_scheme("chor", d=4, d_a=4)  # adversary can't hold every db
+
+
+def test_direct_family_has_no_query_independent_half():
+    sch = build_scheme("direct", d=4, d_a=2, p=8)
+    assert not sch.has_precompute
+    plan = sch.precompute(jax.random.key(0), 64, 4)
+    assert plan.n == 64 and plan.batch == 4  # the plan is just the key
+    assert SchemeRouter(sch).precompute(jax.random.key(0), 64, 4) is None
+
+
+def test_as_protocol_normalizes_and_passes_through():
+    proto = build_scheme("subset", d=5, d_a=2, t=3)
+    assert as_protocol(proto) is proto  # protocol instances pass through
+    fac = make_scheme("subset", d=5, d_a=2, t=3)
+    assert as_protocol(fac) == proto  # facades rebuild from the registry
+    with pytest.raises(TypeError, match="not a scheme"):
+        as_protocol(object())
+
+
+def test_scheme_classes_are_frozen_and_hashable():
+    """Plans and caches key on scheme identity: the registry classes must
+    stay frozen dataclasses."""
+    for name in registered_schemes():
+        sch = build_scheme(name, d=D, d_a=D_A, **PARAMS[name])
+        assert dataclasses.is_dataclass(sch)
+        hash(sch)  # frozen ⇒ hashable
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            sch.d = 99

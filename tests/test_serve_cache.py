@@ -204,6 +204,114 @@ def test_prefill_then_serve_consumes_pre_and_is_exact():
         np.testing.assert_array_equal(out[f"c{i}"], store.record_bytes(q))
 
 
+# ------------------------------------------- refusal memo (negative L1)
+def _counting_budget(budget):
+    """Wrap can_spend to count accountant consultations."""
+    calls = {"n": 0}
+    orig = budget.can_spend
+
+    def counted(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+
+    budget.can_spend = counted
+    return calls
+
+
+def test_refusal_memo_skips_accountant_and_never_spends():
+    """Once a client's budget refuses, repeated over-budget polls are
+    refused from the memo without re-consulting the accountant — and no
+    refusal, memoized or not, ever spends budget."""
+    store = make_synthetic_store(64, 8, seed=7)
+    sch = make_scheme("sparse", d=4, d_a=2, theta=0.25)
+    eps = sch.epsilon(store.n)
+    pipe = ServingPipeline(
+        store, sch, cache=QueryCache(sch, store.n),
+        default_budget=lambda: PrivacyBudget(epsilon_limit=1.5 * eps),
+    )
+    assert pipe.submit("c", 1)  # the one affordable query
+    calls = _counting_budget(pipe.budget("c"))
+
+    assert not pipe.submit("c", 2)  # consults the accountant, memoizes
+    assert calls["n"] == 1
+    for i in range(5):
+        assert not pipe.submit("c", 3 + i)  # memo: accountant untouched
+    assert calls["n"] == 1
+    assert pipe.metrics["refused"] == 6
+    assert pipe.cache.metrics["refusal_hits"] == 5
+    assert pipe.cache.metrics["refusals_noted"] == 1
+    # refusals — first or memoized — never spend budget
+    assert pipe.budget("c").spent_epsilon == pytest.approx(eps)
+    # the memo is per client
+    assert pipe.submit("other", 1)
+    # invalidate clears the memo: the accountant is consulted again (and
+    # still refuses — budgets are monotone)
+    pipe.cache.invalidate()
+    assert not pipe.submit("c", 9)
+    assert calls["n"] == 2
+    assert pipe.budget("c").spent_epsilon == pytest.approx(eps)
+
+
+def test_refusals_without_cache_recheck_every_time():
+    """No cache, no memo: the legacy behavior — every refused submit
+    re-consults the accountant (and still never spends)."""
+    store = make_synthetic_store(64, 8, seed=8)
+    sch = make_scheme("chor", d=2, d_a=1)
+    pipe = ServingPipeline(
+        store, sch,
+        default_budget=lambda: PrivacyBudget(
+            epsilon_limit=0.0, delta_limit=0.0
+        ),
+    )
+    # chor is free (ε=0, δ=0): force refusals with a spent-out budget
+    pipe.budget("c").spent_epsilon = 1.0
+    pipe._eps_per_query = 0.5
+    calls = _counting_budget(pipe.budget("c"))
+    for _ in range(3):
+        assert not pipe.submit("c", 1)
+    assert calls["n"] == 3
+    assert pipe.metrics["refused"] == 3
+
+
+def test_refusal_memo_bounded():
+    sch = make_scheme("chor", d=2, d_a=1)
+    cache = QueryCache(sch, 64, max_refusal_entries=2)
+    tok = (1.0, 0.0, 1.0, 0.0)
+    for c in ("a", "b", "c"):
+        cache.note_refusal(c, tok)
+    assert not cache.refused("a", tok)  # LRU-evicted, memo stays bounded
+    assert cache.refused("b", tok) and cache.refused("c", tok)
+    assert not cache.refused("b", (2.0, 0.0, 1.0, 0.0))  # changed state: miss
+
+
+def test_refusal_memo_never_stale_on_topup_or_cache_reuse():
+    """The memo is keyed on the budget-state token, so it cannot wrongly
+    refuse after the budget side changes: an in-place top-up re-consults
+    the accountant and admits, and a fresh pipeline reusing the same
+    cache never inherits another budget's refusals."""
+    store = make_synthetic_store(64, 8, seed=9)
+    sch = make_scheme("sparse", d=4, d_a=2, theta=0.25)
+    eps = sch.epsilon(store.n)
+    cache = QueryCache(sch, store.n)
+    pipe = ServingPipeline(
+        store, sch, cache=cache,
+        default_budget=lambda: PrivacyBudget(epsilon_limit=0.5 * eps),
+    )
+    assert not pipe.submit("c", 1)  # refused and memoized immediately
+    assert not pipe.submit("c", 1)
+    assert cache.metrics["refusal_hits"] == 1
+
+    # in-place top-up (PrivacyBudget is mutable): must admit, not memo-hit
+    pipe.budget("c").epsilon_limit = 1.5 * eps
+    assert pipe.submit("c", 1)
+    assert pipe.budget("c").spent_epsilon == pytest.approx(eps)
+
+    # a new pipeline reusing the cache: fresh budgets, no inherited refusals
+    pipe2 = ServingPipeline(store, sch, cache=cache)  # infinite default
+    assert not pipe.submit("c", 2)  # re-exhausted on pipe, memoized again
+    assert pipe2.submit("c", 2)  # same cache, fresh budget: admitted
+
+
 def test_prefill_respects_pool_cap_and_direct_fallback():
     store = make_synthetic_store(64, 8, seed=5)
     sch = make_scheme("chor", d=2, d_a=1)

@@ -1,0 +1,155 @@
+#!/usr/bin/env python
+"""API-boundary checker (CI step): the staged SchemeProtocol is the only
+door to the per-scheme wire internals.
+
+Two passes:
+
+1. **Protocol boundary** — no library module outside ``repro.core``
+   (i.e. under src/repro but not src/repro/core), and no benchmark or
+   example, may import the per-scheme wire modules
+   (``repro.core.chor`` / ``sparse`` / ``direct`` / ``subset``). Those
+   are implementation details behind the registry (DESIGN.md §Scheme
+   protocol); consumers go through ``repro.core.protocol``
+   (``build_scheme`` / ``Anonymized`` / the scheme classes) or the
+   back-compat ``Scheme`` facade. tests/ are exempt — the conformance
+   and wire-level unit suites deliberately pin the internals.
+2. **__all__ consistency** — every ``repro.*`` module that declares
+   ``__all__`` must actually define each listed name, with no
+   duplicates.
+
+Exit status 0 iff both passes are clean; failures print one per line.
+Run: ``python tools/check_api.py``.
+"""
+
+from __future__ import annotations
+
+import ast
+import importlib
+import pathlib
+import sys
+from typing import List
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SRC = ROOT / "src"
+sys.path.insert(0, str(SRC))
+
+# the per-scheme wire modules fenced behind the protocol registry
+INTERNAL = {"chor", "sparse", "direct", "subset"}
+INTERNAL_MODULES = {f"repro.core.{m}" for m in INTERNAL}
+
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache"}
+
+
+def iter_py(root: pathlib.Path):
+    for path in sorted(root.rglob("*.py")):
+        if not SKIP_DIRS.intersection(p.name for p in path.parents):
+            yield path
+
+
+def _violations_in(tree: ast.AST, package: str) -> List[str]:
+    """Names of fenced modules a parsed file imports.
+
+    ``package`` is the file's own package (e.g. "repro.serve"), used to
+    resolve relative imports — ``from ..core import chor`` inside
+    repro.serve is the same breach as the absolute spelling."""
+    bad = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name in INTERNAL_MODULES:
+                    bad.append(alias.name)
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if node.level:  # relative: resolve against the file's package
+                parts = package.split(".") if package else []
+                if node.level - 1 > len(parts):
+                    continue  # would not import at runtime either
+                base = parts[: len(parts) - (node.level - 1)]
+                mod = ".".join(base + ([mod] if mod else []))
+            if mod in INTERNAL_MODULES or any(
+                mod.startswith(m + ".") for m in INTERNAL_MODULES
+            ):
+                bad.append(mod)
+            elif mod == "repro.core":
+                bad.extend(
+                    f"repro.core.{a.name}"
+                    for a in node.names
+                    if a.name in INTERNAL
+                )
+    return bad
+
+
+def check_protocol_boundary() -> List[str]:
+    errors = []
+    scopes = [SRC / "repro", ROOT / "benchmarks", ROOT / "examples"]
+    fence_exempt = SRC / "repro" / "core"
+    for scope in scopes:
+        if not scope.is_dir():
+            continue
+        for path in iter_py(scope):
+            if fence_exempt in path.parents:
+                continue  # repro.core owns its internals
+            tree = ast.parse(path.read_text(encoding="utf-8"))
+            rel = path.relative_to(ROOT)
+            if scope == SRC / "repro":
+                # a plain module's package drops the module name; for an
+                # __init__.py dropping "__init__" leaves the package
+                # itself — both are parts[:-1]
+                parts = list(path.relative_to(SRC).with_suffix("").parts)
+                package = ".".join(parts[:-1])
+            else:  # benchmarks/examples are not packages
+                package = ""
+            for mod in _violations_in(tree, package):
+                errors.append(
+                    f"{rel}: imports per-scheme internal {mod!r} — use "
+                    f"repro.core.protocol (registry/Anonymized) or the "
+                    f"Scheme facade instead"
+                )
+    return errors
+
+
+def check_all_consistency() -> List[str]:
+    errors = []
+    for path in iter_py(SRC / "repro"):
+        rel = path.relative_to(SRC)
+        parts = list(rel.with_suffix("").parts)
+        if parts[-1] == "__init__":
+            parts = parts[:-1]
+        mod_name = ".".join(parts)
+        try:
+            module = importlib.import_module(mod_name)
+        except Exception as exc:  # a broken module is an API failure too
+            errors.append(f"{path.relative_to(ROOT)}: import failed ({exc})")
+            continue
+        declared = getattr(module, "__all__", None)
+        if declared is None:
+            continue
+        if len(set(declared)) != len(declared):
+            dupes = sorted(
+                {n for n in declared if declared.count(n) > 1}
+            )
+            errors.append(
+                f"{path.relative_to(ROOT)}: __all__ has duplicates {dupes}"
+            )
+        for name in declared:
+            if not hasattr(module, name):
+                errors.append(
+                    f"{path.relative_to(ROOT)}: __all__ exports "
+                    f"{name!r} but the module does not define it"
+                )
+    return errors
+
+
+def main() -> int:
+    errors = check_protocol_boundary() + check_all_consistency()
+    for err in errors:
+        print(err)
+    print(
+        f"check_api: {'FAIL' if errors else 'ok'} "
+        f"({len(errors)} violation(s))"
+    )
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
