@@ -19,10 +19,11 @@ from __future__ import annotations
 
 import argparse
 import csv
+import json
 import math
 import os
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -39,10 +40,26 @@ from repro.serve import AsyncFrontend, BatchScheduler, QueryCache, ServingPipeli
 OUT_DIR = os.path.abspath(
     os.path.join(os.path.dirname(__file__), "..", "results", "benchmarks")
 )
+# the cross-PR perf trajectory file (schema: row -> {batch, wall_s,
+# speedup}), written at the repo root by every harness run
+BENCH_JSON = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "BENCH_PR5.json")
+)
 
 SMOKE = False  # set by main(); system rows shrink to tiny shapes, 1 rep
 
 Row = Tuple[str, float, str]
+
+# rows the run registers for BENCH_PR5.json (machine-readable trajectory)
+BENCH: Dict[str, Dict[str, float]] = {}
+
+
+def _bench(name: str, batch: int, wall_s: float, speedup: float) -> None:
+    BENCH[name] = {
+        "batch": int(batch),
+        "wall_s": float(wall_s),
+        "speedup": float(speedup),
+    }
 
 
 def _reps(full: int) -> int:
@@ -245,13 +262,58 @@ def server_paths() -> List[Row]:
     gf = 2.0 * qn * n * rb * 8 / (us * 1e-6) / 1e9
     out.append(("server_parity_matmul", us, f"GFLOPs={gf:.1f}"))
 
-    from repro.kernels.gather_xor import indices_from_mask
+    from repro.kernels import indices_from_mask
 
     idx = indices_from_mask(masks, 192 if SMOKE else 3072)
     gat = jax.jit(lambda i: ref.gather_xor_ref(store.packed, i))
     us = _time_us(gat, idx)
     out.append(("server_gather_xor", us,
                 f"touched/q={float((idx >= 0).sum()) / qn:.0f}"))
+    return out
+
+
+# -------------------------------------------- execution-backend matrix
+def exec_backend_matrix() -> List[Row]:
+    """The execution-backend layer's decision matrix (EXPERIMENTS.md
+    §Autotune): for each registered backend × scheme family × bucket,
+    what the planner chose (path/impl/source) and what one server answer
+    costs. Fresh isolated autotune tables per backend, so the decisions
+    shown are exactly what a cold process would make."""
+    from repro.kernels import AutotuneTable, KernelPlanner, registered_backends
+    from repro.serve import SchemeRouter
+
+    n, rb = (256, 16) if SMOKE else (2048, 32)
+    buckets = (8, 64) if SMOKE else (8, 256)
+    store = make_synthetic_store(n, rb, seed=6)
+    key = jax.random.key(0)
+
+    timings: Dict[Tuple[str, int, str], Tuple[float, object]] = {}
+    rows, out = [], []
+    for backend in registered_backends():
+        planner = KernelPlanner(store, backend=backend, table=AutotuneTable())
+        for name, kw in (("chor", {}), ("sparse", dict(theta=0.25))):
+            sch = make_scheme(name, d=2, d_a=1, **kw).staged
+            router = SchemeRouter(sch)
+            for b in buckets:
+                routed = router.plan(key, n, jnp.arange(b) % n)
+                plan = planner.plan(routed, b, None, scheme=sch)
+                us = _time_us(plan, routed.payload[0], reps=3)
+                timings[(name, b, backend)] = (us, plan)
+                rows.append((backend, name, b, plan.path, plan.impl,
+                             plan.source, us))
+    for (name, b, backend), (us, plan) in timings.items():
+        ref_us = timings[(name, b, "ref")][0]
+        _bench(f"exec_{backend}_{name}_b{b}", b, us * 1e-6, ref_us / us)
+        out.append((
+            f"exec_{backend}_{name}_b{b}", us,
+            f"path={plan.path};impl={plan.impl};source={plan.source};"
+            f"vs_ref={ref_us / us:.2f}x",
+        ))
+    _write_csv(
+        "exec_backend_matrix",
+        ["backend", "scheme", "bucket", "path", "impl", "source", "us"],
+        rows,
+    )
     return out
 
 
@@ -324,6 +386,7 @@ def serve_batched_vs_loop() -> List[Row]:
         ["mode", "batch", "qps"],
         [("batched", b, qps_batched), ("loop", 1, qps_loop)],
     )
+    _bench("serve_batched_vs_loop", b, dt_batched, speedup)
     return [(
         f"serve_batched_b{b}", dt_batched * 1e6 / b,
         f"batched_qps={qps_batched:.0f};loop_qps={qps_loop:.0f};"
@@ -340,7 +403,15 @@ def serve_async_vs_sync() -> List[Row]:
     front overlaps admission with serving, banks precomputed query
     randomness while idle, and answers per-(client, index) repeats from
     the memo — every hit still spends ε, but steady-state batches shrink
-    to the next pow2 bucket down, halving the per-server record touches."""
+    to the next pow2 bucket down, halving the per-server record touches.
+
+    Also measures the **double-buffered flush** (plan batch k+1 while
+    batch k's ExecutionPlan runs, DESIGN.md §Execution backends) against
+    the single-threaded flush worker it replaces, on a cache-free
+    back-to-back-batch stream at bucket 256 — the steady-state regime
+    the overlap targets (one big batch at a time leaves nothing to
+    overlap; the planner's query generation amortizes across the
+    stream). Same frontend, ``double_buffer`` flipped."""
     n, b, batches = (1024, 256, 2) if SMOKE else (4096, 1024, 3)
     total = b * batches
     store = make_synthetic_store(n=n, record_bytes=64, seed=5)
@@ -416,34 +487,76 @@ def serve_async_vs_sync() -> List[Row]:
             m = fe.metrics
             return dt, m["prefilled"], m["cache_hits"]
 
-    # interleave the modes, best-of-2 each: the pair samples the same
-    # noise window, so the ratio is stable even on a shared host
-    dt_sync = dt_async = math.inf
+    # the flush-path comparison: bucket-256 back-to-back batches, no
+    # cache, only double_buffer flipped — isolates plan/execute overlap
+    db_b = 256
+    db_batches = 3 if SMOKE else 8
+    db_total = db_b * db_batches
+
+    def run_flush(double_buffer: bool) -> float:
+        pipe = ServingPipeline(
+            store, sch,
+            scheduler=BatchScheduler(max_batch=db_b, target_latency_s=10.0),
+        )
+        for i in range(db_b):
+            pipe.submit("w", (i * 5) % n)
+        pipe.flush()  # pays jit for the [db_b, n] shapes
+        with AsyncFrontend(
+            pipe, ingest_workers=2, queue_limit=db_total,
+            shed_policy="block", double_buffer=double_buffer,
+        ) as fe:
+            t0 = time.perf_counter()
+            futs = [
+                fe.submit(client(i), (i * 7) % n) for i in range(db_total)
+            ]
+            fe.drain()
+            dt = time.perf_counter() - t0
+            assert all(f.done() for f in futs)
+        return dt
+
+    # interleave the modes, best-of-2 each: the set samples the same
+    # noise window, so the ratios are stable even on a shared host
+    dt_sync = dt_async = dt_single = dt_dbuf = math.inf
     prefilled = hits = 0
     for _ in range(2):
         dt_sync = min(dt_sync, run_sync())
         dt, pf, h = run_async()
         dt_async, prefilled, hits = min(dt_async, dt), max(prefilled, pf), h
+        dt_single = min(dt_single, run_flush(double_buffer=False))
+        dt_dbuf = min(dt_dbuf, run_flush(double_buffer=True))
     qps_sync = total / dt_sync
     qps_async = total / dt_async
+    qps_single = db_total / dt_single
+    qps_dbuf = db_total / dt_dbuf
 
     ratio = qps_async / qps_sync
+    dbuf_ratio = qps_dbuf / qps_single
     _write_csv(
         "serve_async_vs_sync",
         ["mode", "batch", "qps"],
-        [("async", b, qps_async), ("sync", b, qps_sync)],
+        [("async", b, qps_async), ("sync", b, qps_sync),
+         ("dbuf", db_b, qps_dbuf), ("single_flush", db_b, qps_single)],
     )
-    return [(
-        f"serve_async_vs_sync_b{b}", dt_async * 1e6 / total,
-        f"async_qps={qps_async:.0f};sync_qps={qps_sync:.0f};"
-        f"ratio={ratio:.2f}x;hits={hits};prefilled={prefilled}",
-    )]
+    _bench("serve_async_vs_sync", b, dt_async, ratio)
+    _bench("serve_dbuf_vs_single_flush", db_b, dt_dbuf, dbuf_ratio)
+    return [
+        (
+            f"serve_async_vs_sync_b{b}", dt_async * 1e6 / total,
+            f"async_qps={qps_async:.0f};sync_qps={qps_sync:.0f};"
+            f"ratio={ratio:.2f}x;hits={hits};prefilled={prefilled}",
+        ),
+        (
+            f"serve_dbuf_vs_single_b{db_b}", dt_dbuf * 1e6 / db_total,
+            f"dbuf_qps={qps_dbuf:.0f};single_flush_qps={qps_single:.0f};"
+            f"ratio={dbuf_ratio:.2f}x",
+        ),
+    ]
 
 
 ALL = [
     fig1_direct, fig2_as_direct, fig3_sparse, fig4_as_sparse, fig5_subset,
-    fig6_frontier, table1, server_paths, engine_throughput,
-    serve_batched_vs_loop, serve_async_vs_sync,
+    fig6_frontier, table1, server_paths, exec_backend_matrix,
+    engine_throughput, serve_batched_vs_loop, serve_async_vs_sync,
 ]
 
 
@@ -469,6 +582,24 @@ def main(argv=None) -> None:
     for fn in fns:
         for name, us, derived in fn():
             print(f"{name},{us:.2f},{derived}")
+    # machine-readable perf trajectory (schema: row -> {batch, wall_s,
+    # speedup}); every row in it is a FULL-scale measurement. Partial
+    # (--only) runs MERGE into the existing artifact; smoke runs never
+    # write — their tiny-shape 1-rep numbers are not comparable and
+    # would be indistinguishable from real rows.
+    if SMOKE:
+        print(f"# smoke run: {BENCH_JSON} not written "
+              f"(smoke rows are not trajectory-comparable)")
+    else:
+        merged = {}
+        if os.path.exists(BENCH_JSON):
+            with open(BENCH_JSON) as f:
+                merged = json.load(f)
+        merged.update(BENCH)
+        with open(BENCH_JSON, "w") as f:
+            json.dump(merged, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {BENCH_JSON} ({len(merged)} rows)")
 
 
 if __name__ == "__main__":

@@ -159,3 +159,7 @@ class PIRConfig:
     queue_limit: int = 8192           # bounded ingest queue (backpressure)
     # cross-batch cache (repro.serve.cache, DESIGN.md §Cross-batch cache)
     cache_entries: int = 4096         # per-(client, index) memo slots; 0 = off
+    # execution-backend layer (repro.kernels.backend, DESIGN.md
+    # §Execution backends)
+    backend: str = "auto"             # registered backend: auto|pallas|ref
+    autotune_file: str = ""           # JSON autotune table to load; "" = cold

@@ -62,15 +62,30 @@ def scheme_from_config(cfg: PIRConfig = CONFIG):
 def make_serving_pipeline(cfg: PIRConfig = CONFIG, store=None, **kw):
     """PIRConfig -> repro.serve.ServingPipeline (synthetic store unless one
     is passed). ``kw`` forwards to the pipeline (budgets, backend, seed).
-    ``cfg.cache_entries > 0`` attaches the cross-batch QueryCache."""
+    ``cfg.cache_entries > 0`` attaches the cross-batch QueryCache;
+    ``cfg.backend`` / ``cfg.autotune_file`` configure the execution-
+    backend layer (DESIGN.md §Execution backends) unless a ready
+    ``backend=`` instance is passed in ``kw``."""
     from repro.db import make_synthetic_store
-    from repro.serve import BatchScheduler, QueryCache, ServingPipeline
+    from repro.serve import (
+        BatchScheduler,
+        QueryCache,
+        ServingPipeline,
+        ShardedBackend,
+    )
 
     if store is None:
         store = make_synthetic_store(cfg.n_records, cfg.record_bytes, seed=0)
     scheme = scheme_from_config(cfg)
     if cfg.cache_entries > 0 and "cache" not in kw:
         kw["cache"] = QueryCache(scheme, store.n, max_entries=cfg.cache_entries)
+    if "backend" not in kw:
+        kw["backend"] = ShardedBackend(
+            store,
+            simulate_latency=kw.pop("simulate_latency", None),
+            backend=cfg.backend,
+            autotune_file=cfg.autotune_file or None,
+        )
     return ServingPipeline(
         store,
         scheme,

@@ -1,19 +1,49 @@
 """Pallas TPU kernels for the PIR server hot paths (the compute the paper
 optimizes): xor_fold (VPU), parity_matmul (MXU), gather_xor (Sparse-PIR
-θ·n streaming). ops.py holds the jit'd wrappers, ref.py the jnp oracles."""
+θ·n streaming) and fused (one-kernel gather→xor→fold). ops.py holds the
+jit'd wrappers, ref.py the jnp oracles, and backend.py the execution-
+backend layer (DESIGN.md §Execution backends) — the registry + autotune
+planner every consumer outside this package goes through: the raw kernel
+modules are fenced (tools/check_api.py) so kernel choice can never leak
+back into the serve layer."""
 
-from repro.kernels import ops, ref
+from repro.kernels import backend, ops, ref
+from repro.kernels.backend import (
+    AutotuneTable,
+    ExecutionPlan,
+    KernelPlanner,
+    autotune_table,
+    dump_autotune,
+    get_backend,
+    load_autotune,
+    register_backend,
+    registered_backends,
+)
 from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.fused import fused_block_w, fused_gather_fold
 from repro.kernels.gather_xor import gather_xor, indices_from_mask
 from repro.kernels.parity_matmul import parity_matmul
 from repro.kernels.xor_fold import xor_fold
 
+# gather_xor / xor_fold / parity_matmul / fused_gather_fold are importable
+# here for the test suites (which pin the kernels directly and are exempt
+# from the fence) but deliberately NOT in __all__: outside the package the
+# advertised surface is the planner (backend), ops, the oracles, and the
+# sizing helpers — exactly what tools/check_api.py's kernel fence enforces.
 __all__ = [
+    "AutotuneTable",
+    "ExecutionPlan",
+    "KernelPlanner",
+    "autotune_table",
+    "backend",
+    "dump_autotune",
     "flash_attention_fwd",
-    "gather_xor",
+    "fused_block_w",
+    "get_backend",
     "indices_from_mask",
+    "load_autotune",
     "ops",
-    "parity_matmul",
     "ref",
-    "xor_fold",
+    "register_backend",
+    "registered_backends",
 ]

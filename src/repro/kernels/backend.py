@@ -1,0 +1,686 @@
+"""The execution-backend layer: every kernel decision, in one place.
+
+Before this layer existed, "which kernel answers this batch" was smeared
+across the stack: ``kernel_impl="auto|pallas|ref"`` strings in the serve
+backend, ``on_cpu()`` checks and a hardcoded parity-crossover constant in
+``kernels/ops.py``, and per-scheme cost formulas that nothing downstream
+read. Now the serve layer asks this module to **plan** and then executes
+the returned :class:`ExecutionPlan` — it never names a kernel again
+(DESIGN.md §Execution backends has the plan lifecycle).
+
+Three pieces:
+
+* **Backend registry** (:func:`register_backend`): ``pallas`` (the TPU
+  kernels, interpret mode off-TPU), ``ref`` (the pure-jnp oracles —
+  bit-identical, and the faster choice in a CPU serving hot path), and
+  ``auto`` (kernels on accelerators, oracles on CPU hosts). A backend
+  resolves to a concrete *impl* and the planner builds executors from it.
+* **Autotune table** (:class:`AutotuneTable`): a process-local memo of
+  one-shot *measured* microbenchmarks, keyed ``(scheme, bucket,
+  backend)``. Where the old static ``parity_crossover_batch`` constant
+  guessed the VPU-fold / MXU-parity crossover from a napkin roofline,
+  the planner now measures both paths once at the actual (bucket, n, W)
+  shape — inside the uncertainty band around the model's crossover —
+  and remembers the winner. The table dumps/loads as JSON
+  (:func:`dump_autotune` / :func:`load_autotune`; format in DESIGN.md
+  §Execution backends) so a deployment can ship warmed decisions.
+  EXPERIMENTS.md §Autotune describes the methodology.
+* **Planner** (:class:`KernelPlanner`): ``plan(scheme_plan, bucket,
+  mesh_state)`` maps one batch's wire plan (the scheme's
+  :class:`~repro.core.protocol.Queries` — its ``kind`` and θ are the
+  only scheme-side facts execution needs) to an :class:`ExecutionPlan`
+  carrying the chosen path, impl, block sizes, sparse index budget and
+  (single-host) a ready jitted executor. ``SchemeProtocol.costs(n)``
+  feeds the decision as the analytic prior; the microbenchmark settles
+  what the prior cannot. For Sparse-PIR on the pallas impl the planner
+  prefers the **fused gather→xor→fold kernel**
+  (``repro.kernels.fused``) whenever the db word-block fits VMEM,
+  falling back to the ``indices_from_mask`` + ``gather_xor`` streaming
+  pair when it does not.
+
+The serve layer's ``parity_min_batch`` knob survives as a *forced*
+decision (``ExecutionPlan.source == "forced"``) — useful in tests and
+benchmarks — but the default is measured-or-model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.db import packing
+from repro.db.store import RecordStore
+from repro.kernels import ops, ref
+from repro.kernels.fused import fused_block_w, fused_gather_fold
+from repro.kernels.gather_xor import gather_xor, indices_from_mask
+from repro.kernels.parity_matmul import parity_matmul
+from repro.kernels.xor_fold import xor_fold
+
+__all__ = [
+    "ExecutionPlan",
+    "ExecutionBackend",
+    "register_backend",
+    "get_backend",
+    "registered_backends",
+    "resolve_kernel_impl_alias",
+    "AutotuneTable",
+    "autotune_table",
+    "load_autotune",
+    "dump_autotune",
+    "KernelPlanner",
+    "shard_answer_fn",
+]
+
+
+# --------------------------------------------------------------------------
+# The plan
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """One batch's resolved execution decision (DESIGN.md §Execution
+    backends: the plan lifecycle).
+
+    ``path`` is the physical kernel form (``fold`` / ``parity`` /
+    ``sparse_fused`` / ``sparse_pair`` / ``sparse_ref`` / ``direct``),
+    ``impl`` the resolved backend (never "auto"), ``blocks`` the chosen
+    kernel block sizes, ``m_budget`` the sparse index budget (None off
+    the sparse family), and ``source`` where the decision came from:
+    ``measured`` (autotune microbenchmark), ``model`` (analytic
+    cost-model prior), ``forced`` (caller override) or ``only`` (single
+    candidate). ``run`` is the jitted single-host executor (payload ->
+    [B, W]); it is None for decision-only plans — mesh plans, where the
+    sharded serve layer builds the shard_map executor *from the plan's
+    decision fields*, and the direct family, whose gather the serve
+    layer's index path owns — the decision itself still lives here.
+    """
+
+    path: str
+    impl: str
+    bucket: int
+    n: int
+    blocks: Tuple[Tuple[str, int], ...] = ()
+    m_budget: Optional[int] = None
+    theta: Optional[float] = None
+    interpret: bool = False
+    source: str = "only"
+    run: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = dataclasses.field(
+        default=None, compare=False, repr=False
+    )
+
+    @property
+    def family(self) -> str:
+        """The coarse path family (the serve layer's path_counts key)."""
+        if self.path.startswith("sparse"):
+            return "sparse"
+        return self.path
+
+    def __call__(self, payload: jnp.ndarray) -> jnp.ndarray:
+        if self.run is None:
+            raise RuntimeError(
+                "this ExecutionPlan carries the decision only (mesh plans "
+                "and the direct family); the sharded serve layer owns the "
+                "executor"
+            )
+        return self.run(payload)
+
+    def describe(self) -> str:
+        return (
+            f"{self.path}/{self.impl} b={self.bucket} n={self.n} "
+            f"source={self.source}"
+        )
+
+
+# --------------------------------------------------------------------------
+# Backend registry
+# --------------------------------------------------------------------------
+_BACKENDS: Dict[str, "ExecutionBackend"] = {}
+
+
+def register_backend(name: str) -> Callable[[type], type]:
+    """Class decorator: register an execution backend under its config
+    name (the string ``backend=`` flags and configs carry)."""
+
+    def deco(cls: type) -> type:
+        key = name.lower()
+        if key in _BACKENDS:
+            raise ValueError(f"backend {key!r} already registered")
+        cls.name = key
+        _BACKENDS[key] = cls()
+        return cls
+
+    return deco
+
+
+def get_backend(name: str) -> "ExecutionBackend":
+    try:
+        return _BACKENDS[name.lower()]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; registered: {registered_backends()}"
+        ) from None
+
+
+def registered_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_BACKENDS))
+
+
+def resolve_kernel_impl_alias(
+    kernel_impl: Optional[str], backend: str
+) -> str:
+    """Map the deprecated ``kernel_impl="auto|pallas|ref"`` knob onto the
+    backend registry (README §Execution backends has the migration
+    table). ``kernel_impl`` strings were exactly the registered backend
+    names, so the alias is the identity — this helper exists so callers
+    keep one validated seam instead of string-matching."""
+    if kernel_impl is None:
+        return backend
+    get_backend(kernel_impl)  # same validation the old constructor did
+    return kernel_impl
+
+
+class ExecutionBackend:
+    """One registered execution backend; ``resolve()`` returns the
+    concrete impl ("pallas" or "ref") the planner builds executors for."""
+
+    name = "?"
+
+    def resolve(self) -> str:
+        return self.name
+
+
+@register_backend("pallas")
+class PallasBackend(ExecutionBackend):
+    """The TPU kernels (Mosaic on TPU, interpret mode elsewhere)."""
+
+
+@register_backend("ref")
+class RefBackend(ExecutionBackend):
+    """The pure-jnp oracles — bit-identical to the kernels by the
+    tests/test_kernels.py equality sweeps, and the faster choice on CPU
+    hosts (emulating a TPU interpreter in a serving hot path costs ~50×
+    for identical bits)."""
+
+
+@register_backend("auto")
+class AutoBackend(ExecutionBackend):
+    """Kernels on accelerators, oracles on CPU hosts."""
+
+    def resolve(self) -> str:
+        return "ref" if ops.on_cpu() else "pallas"
+
+
+# --------------------------------------------------------------------------
+# Autotune table
+# --------------------------------------------------------------------------
+# (scheme, bucket, backend-impl, n, words, family): the conceptual key
+# is (scheme, bucket, backend); n/words qualify it so two stores of
+# different shape never share a measurement, and family ("mask" or
+# "sparse@<theta>") keeps the dense fold/parity decision and the sparse
+# fused/pair decision — which have disjoint candidate sets — from ever
+# colliding under one key (a sparse scheme can take either route
+# depending on whether gathering pays)
+Key = Tuple[str, int, str, int, int, str]
+
+
+def _family(theta: Optional[float]) -> str:
+    return "mask" if theta is None else f"sparse@{float(theta):g}"
+
+
+class AutotuneTable:
+    """Process-local memo of one-shot path microbenchmarks.
+
+    Entry: ``(scheme, bucket, backend, n, words, family) -> {"path",
+    "source", "us"}`` where ``us`` maps each measured candidate path to
+    its microbenchmark microseconds (empty for model/forced decisions).
+    JSON round-trip via :meth:`to_json` / :meth:`from_json`; the on-disk
+    format is the documented autotune-file format (DESIGN.md §Execution
+    backends)."""
+
+    VERSION = 1
+
+    def __init__(self) -> None:
+        self._entries: Dict[Key, Dict[str, Any]] = {}
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, key: Key) -> Optional[Dict[str, Any]]:
+        return self._entries.get(key)
+
+    def put(self, key: Key, path: str, *, source: str,
+            us: Optional[Dict[str, float]] = None) -> None:
+        self._entries[key] = {
+            "path": path, "source": source, "us": dict(us or {}),
+        }
+
+    def items(self):
+        return self._entries.items()
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+    # ------------------------------------------------------------ JSON io
+    def to_json(self) -> str:
+        entries = [
+            {
+                "scheme": k[0], "bucket": k[1], "backend": k[2],
+                "n": k[3], "words": k[4], "family": k[5], **v,
+            }
+            for k, v in sorted(self._entries.items())
+        ]
+        return json.dumps(
+            {"version": self.VERSION, "entries": entries}, indent=2
+        )
+
+    @classmethod
+    def from_json(cls, text: str) -> "AutotuneTable":
+        blob = json.loads(text)
+        if blob.get("version") != cls.VERSION:
+            raise ValueError(
+                f"autotune table version {blob.get('version')!r} != "
+                f"{cls.VERSION}"
+            )
+        table = cls()
+        for e in blob["entries"]:
+            table.put(
+                (
+                    str(e["scheme"]), int(e["bucket"]), str(e["backend"]),
+                    int(e["n"]), int(e["words"]), str(e["family"]),
+                ),
+                str(e["path"]), source=str(e["source"]),
+                us={k: float(v) for k, v in e.get("us", {}).items()},
+            )
+        return table
+
+    def dump(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+
+    @classmethod
+    def load(cls, path: str) -> "AutotuneTable":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    def update(self, other: "AutotuneTable") -> None:
+        self._entries.update(other._entries)
+
+
+_PROCESS_TABLE = AutotuneTable()
+
+
+def autotune_table() -> AutotuneTable:
+    """The process-local autotune table every default planner shares."""
+    return _PROCESS_TABLE
+
+
+def load_autotune(path: str, table: Optional[AutotuneTable] = None) -> AutotuneTable:
+    """Merge a dumped JSON table into ``table`` (default: the process
+    table); returns the merged table."""
+    table = table if table is not None else _PROCESS_TABLE
+    table.update(AutotuneTable.load(path))
+    return table
+
+
+def dump_autotune(path: str, table: Optional[AutotuneTable] = None) -> None:
+    (table if table is not None else _PROCESS_TABLE).dump(path)
+
+
+# --------------------------------------------------------------------------
+# Planner
+# --------------------------------------------------------------------------
+def _bench_mask(key: jax.Array, bucket: int, n: int, p: float) -> jnp.ndarray:
+    """[bucket, n] {0,1} uint8 mask of density ≈ p for the microbench.
+    Built from uint8 draws so the transient stays bucket·n bytes — a
+    float32 uniform would be 4× that, mid-serving, at CT scale."""
+    draws = jax.random.randint(key, (bucket, n), 0, 256, dtype=jnp.uint8)
+    return (draws < max(1, round(p * 256))).astype(jnp.uint8)
+
+
+def _measure_us(fn: Callable, *args, reps: int = 3) -> float:
+    """One-shot microbenchmark: one warmup call (pays jit), then
+    best-of-``reps`` — the min is the right statistic for an ordering
+    decision (a stall inflates a sample, nothing deflates one)."""
+    jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+class KernelPlanner:
+    """Maps (wire plan, bucket, mesh residency) -> :class:`ExecutionPlan`.
+
+    Owns the decisions the serve layer used to hardcode: which backend
+    impl runs (registry), fold vs parity (autotune table seeded by the
+    cost-model prior), fused vs streaming sparse (VMEM fit + one-shot
+    measurement), interpret mode, block sizes and the sparse index
+    budget. Plans are cached per (scheme, kind, θ, bucket, mesh), so the
+    microbenchmark for a key runs at most once per process — and the
+    serve pipeline plans batch k+1 while batch k executes, so even that
+    one shot hides in the double-buffer overlap (DESIGN.md §Execution
+    backends).
+    """
+
+    # measure only inside the uncertainty band around the model crossover;
+    # outside it the analytic prior is overwhelming and timing both paths
+    # (two jit compiles) would buy nothing
+    MEASURE_BAND = (0.25, 4.0)
+
+    # the sparse gather forms only pay while the index budget stays
+    # meaningfully below the record count; at θ·n ≈ n streaming the whole
+    # store (fold/parity) beats chasing nearly-all of it record by record
+    GATHER_DENSE_CUTOFF = 0.75
+
+    def __init__(
+        self,
+        store: RecordStore,
+        *,
+        backend: str = "auto",
+        table: Optional[AutotuneTable] = None,
+        parity_min_batch: Optional[int] = None,
+    ):
+        self.backend = get_backend(backend)
+        self.store = store
+        self.table = table if table is not None else autotune_table()
+        self._parity_min_batch = parity_min_batch
+        self._planes: Optional[jnp.ndarray] = None
+        self._plans: Dict[Tuple, ExecutionPlan] = {}
+
+    # ------------------------------------------------------------- helpers
+    @property
+    def backend_name(self) -> str:
+        return self.backend.name
+
+    def planes(self) -> jnp.ndarray:
+        if self._planes is None:
+            self._planes = self.store.bitplanes()
+        return self._planes
+
+    def _table_key(
+        self, scheme_name: str, bucket: int, impl: str,
+        theta: Optional[float] = None,
+    ) -> Key:
+        return (
+            scheme_name, int(bucket), impl, self.store.n, self.store.words,
+            _family(theta),
+        )
+
+    def _model_crossover(self) -> int:
+        """The analytic fold/parity crossover batch (the prior the
+        measurement refines; the constant that used to *be* the
+        decision)."""
+        return ops.parity_crossover_batch(
+            self.store.n, self.store.record_bits
+        )
+
+    # ------------------------------------------------------------ executors
+    def _build_run(
+        self, path: str, impl: str, m_budget: Optional[int],
+        interpret: bool, blocks: Dict[str, int],
+    ) -> Callable[[jnp.ndarray], jnp.ndarray]:
+        """Single-host executor for a resolved (path, impl): the shared
+        path→kernel dispatch with this store's operand bound in."""
+        fn = _path_answer_fn(path, impl, m_budget, interpret, blocks)
+        operand = self.planes() if path == "parity" else self.store.packed
+        return lambda payload: fn(operand, payload)
+
+    # ------------------------------------------------------------ decisions
+    def _decide_mask_path(
+        self, scheme_name: str, bucket: int, impl: str, on_mesh: bool,
+        costs: Optional[Dict[str, float]],
+    ) -> Tuple[str, str]:
+        """fold vs parity for dense-mask batches: forced override, then
+        the autotune table, then measure-or-model."""
+        if self._parity_min_batch is not None:
+            path = "parity" if bucket >= self._parity_min_batch else "fold"
+            return path, "forced"
+
+        key = self._table_key(scheme_name, bucket, impl)
+        hit = self.table.get(key)
+        if hit is not None and hit["path"] in ("fold", "parity"):
+            return hit["path"], hit["source"]
+
+        qstar = self._model_crossover()
+        # the cost model's prior: C_p says every record is touched either
+        # way (dense masks), so the crossover is purely a hardware-form
+        # question — bucket vs the roofline crossover batch
+        del costs
+        lo, hi = self.MEASURE_BAND
+        if on_mesh or not (lo * qstar <= bucket <= hi * qstar):
+            path = "parity" if bucket >= qstar else "fold"
+            self.table.put(key, path, source="model")
+            return path, "model"
+
+        # one-shot measured microbenchmark at the true (bucket, n, W)
+        mask = _bench_mask(jax.random.key(0), int(bucket), self.store.n, 0.5)
+        us = {
+            "fold": _measure_us(
+                jax.jit(self._build_run("fold", impl, None, ops.on_cpu(), {})),
+                mask,
+            ),
+            "parity": _measure_us(
+                jax.jit(
+                    self._build_run("parity", impl, None, ops.on_cpu(), {})
+                ),
+                mask,
+            ),
+        }
+        path = min(us, key=us.get)
+        self.table.put(key, path, source="measured", us=us)
+        return path, "measured"
+
+    def _gather_pays(
+        self, theta: float, costs: Optional[Dict[str, float]], scheme: Any
+    ) -> bool:
+        """Whether the sparse gather forms beat the dense mask forms at
+        all — the scheme's own cost model decides. ``costs(n)`` prices
+        C_p = θ·d·n·(c_acc + c_prc) (Table 1), so C_p/(2d) is the
+        records a query touches per server; the static gather budget
+        adds the 6σ Chernoff slack on top. Once that budget stops being
+        meaningfully below the record count (θ·n ≈ n, or tiny stores
+        where the slack dominates), streaming the whole store wins and
+        the dense fold/parity decision takes over — Sparse-PIR's
+        *privacy* accounting is untouched; only the physical form
+        changes, bit-identically."""
+        n = self.store.n
+        d = getattr(scheme, "d", 0)
+        touched = (
+            costs["C_p"] / (2.0 * d)
+            if costs is not None and d and "C_p" in costs
+            else theta * n
+        )
+        budget = ops.sparse_index_budget(n, min(max(touched / n, 1e-9), 0.5))
+        return budget < self.GATHER_DENSE_CUTOFF * n
+
+    def _decide_sparse_path(
+        self, scheme_name: str, bucket: int, impl: str, on_mesh: bool,
+        n_eff: int, m_budget: int, theta: float,
+    ) -> Tuple[str, str, Dict[str, int]]:
+        """Sparse family: ref oracle on the ref impl; fused kernel vs the
+        streaming pair on pallas (VMEM fit gates, the one-shot
+        microbenchmark settles)."""
+        if impl == "ref":
+            return "sparse_ref", "only", {}
+        bw = fused_block_w(n_eff, self.store.words)
+        if bw == 0:
+            return "sparse_pair", "model", {}
+        blocks = {"block_w": bw}
+        if on_mesh:
+            # no shard_map microbench: VMEM fit is the decision
+            return "sparse_fused", "model", blocks
+        key = self._table_key(scheme_name, bucket, impl, theta)
+        hit = self.table.get(key)
+        if hit is not None and hit["path"].startswith("sparse"):
+            return hit["path"], hit["source"], blocks
+        mask = _bench_mask(
+            jax.random.key(1), int(bucket), self.store.n,
+            min(0.5, max(0.01, m_budget / max(n_eff, 1))),
+        )
+        interp = ops.on_cpu()
+        us = {
+            "sparse_fused": _measure_us(
+                jax.jit(self._build_run(
+                    "sparse_fused", impl, m_budget, interp, blocks
+                )),
+                mask,
+            ),
+            "sparse_pair": _measure_us(
+                jax.jit(
+                    self._build_run("sparse_pair", impl, m_budget, interp, {})
+                ),
+                mask,
+            ),
+        }
+        path = min(us, key=us.get)
+        self.table.put(key, path, source="measured", us=us)
+        return path, "measured", blocks
+
+    # ---------------------------------------------------------------- plan
+    def plan(
+        self,
+        scheme_plan: Any,
+        bucket: int,
+        mesh_state: Optional[dict] = None,
+        *,
+        scheme: Any = None,
+    ) -> ExecutionPlan:
+        """One batch's wire plan -> its execution decision.
+
+        ``scheme_plan`` is the scheme's wire-level
+        :class:`~repro.core.protocol.Queries` (its ``kind`` and ``theta``
+        are the scheme-side facts execution depends on); ``bucket`` the
+        padded batch size; ``mesh_state`` the serve layer's mesh
+        residency dict (None off-mesh). ``scheme`` (a staged
+        SchemeProtocol) keys the autotune table and supplies ``costs(n)``
+        as the analytic prior; without it the plan keys on the wire kind
+        alone.
+        """
+        kind = scheme_plan.kind
+        theta = getattr(scheme_plan, "theta", None)
+        scheme_name = getattr(scheme, "name", None) or f"kind:{kind}"
+        costs = scheme.costs(self.store.n) if scheme is not None else None
+        on_mesh = mesh_state is not None
+        mesh_key = (
+            (id(mesh_state["mesh"]), mesh_state["raxes"]) if on_mesh else None
+        )
+        impl = self.backend.resolve()
+        interpret = ops.on_cpu()
+
+        cache_key = (scheme_name, kind, theta, int(bucket), impl, mesh_key)
+        cached = self._plans.get(cache_key)
+        if cached is not None:
+            return cached
+
+        n_eff = (
+            mesh_state["n_pad"] // mesh_state["rshards"]
+            if on_mesh else self.store.n
+        )
+        blocks: Dict[str, int] = {}
+        m_budget = None
+        if kind == "index":
+            path, source = "direct", "only"
+        elif theta is not None and theta < 0.5 and self._gather_pays(
+            theta, costs, scheme
+        ):
+            m_budget = ops.sparse_index_budget(n_eff, theta)
+            path, source, blocks = self._decide_sparse_path(
+                scheme_name, bucket, impl, on_mesh, n_eff, m_budget, theta
+            )
+        else:
+            path, source = self._decide_mask_path(
+                scheme_name, bucket, impl, on_mesh, costs
+            )
+
+        # the direct family's lookup has exactly one physical form per
+        # residency (a gather, owned by the serve layer's index path) —
+        # its plan is decision-only, like every mesh plan
+        run = None
+        if not on_mesh and path != "direct":
+            run = jax.jit(
+                self._build_run(path, impl, m_budget, interpret, blocks)
+            )
+        plan = ExecutionPlan(
+            path=path,
+            impl=impl,
+            bucket=int(bucket),
+            n=n_eff,
+            blocks=tuple(sorted(blocks.items())),
+            m_budget=m_budget,
+            theta=theta,
+            interpret=interpret,
+            source=source,
+            run=run,
+        )
+        self._plans[cache_key] = plan
+        return plan
+
+    def invalidate(self) -> None:
+        """Drop cached plans (mesh changed or store swapped); the
+        autotune table survives — measurements key on shapes, not
+        residency."""
+        self._plans.clear()
+
+
+def _path_answer_fn(
+    path: str, impl: str, m_budget: Optional[int], interp: bool,
+    blocks: Dict[str, int],
+) -> Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]:
+    """THE path→kernel dispatch: ``(operand, payload) -> [B, W]`` where
+    ``operand`` is the packed db ([n, W] uint32) — or the bitplanes for
+    the parity path. Single source of truth for both executor shapes:
+    the planner binds the operand for single-host ``run`` closures, and
+    :func:`shard_answer_fn` hands the same function to ``shard_map``
+    with the local shard as operand. The ``ref`` impl routes to the jnp
+    oracles — bit-identical to the kernels, asserted exactly in
+    tests/test_kernels.py."""
+    if path == "fold":
+        if impl == "ref":
+            return ref.xor_fold_ref
+        return lambda db, m: xor_fold(db, m, interpret=interp)
+    if path == "parity":
+        if impl == "ref":
+            return lambda planes, m: packing.pack_bits(
+                ref.parity_matmul_ref(m, planes)
+            )
+        return lambda planes, m: packing.pack_bits(
+            parity_matmul(m, planes, interpret=interp)
+        )
+    if path == "sparse_ref":
+        return lambda db, m: ref.gather_xor_ref(
+            db, indices_from_mask(m, m_budget)
+        )
+    if path == "sparse_pair":
+        return lambda db, m: gather_xor(
+            db, indices_from_mask(m, m_budget), interpret=interp
+        )
+    if path == "sparse_fused":
+        bw = blocks["block_w"]
+        return lambda db, m: fused_gather_fold(
+            db, indices_from_mask(m, m_budget),
+            block_w=bw, interpret=interp,
+        )
+    raise ValueError(f"no kernel form for path {path!r}")
+
+
+def shard_answer_fn(
+    plan: ExecutionPlan,
+) -> Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]:
+    """Per-shard answer function for a mesh :class:`ExecutionPlan`.
+
+    Returns ``(operand_loc, payload_loc) -> partial answer [B, W]`` where
+    ``operand_loc`` is the local db shard ([n_loc, W] packed words) — or
+    the local bitplane shard for the parity path. The sharded serve layer
+    wraps this in ``shard_map`` and XOR-combines the partials; the kernel
+    choice stays here, behind the ``repro.kernels`` fence (the serve
+    layer never imports a kernel module)."""
+    return _path_answer_fn(
+        plan.path, plan.impl, plan.m_budget, plan.interpret,
+        dict(plan.blocks),
+    )

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: fused gather→xor→fold — Sparse-PIR's answer in ONE kernel.
+
+The unfused Sparse-PIR server path is a *pair* of kernel-shaped steps:
+``indices_from_mask`` ranks the selected record ids, then ``gather_xor``
+streams one selected record per innermost grid step, XOR-accumulating the
+output block across m grid iterations (m = index budget). That pair costs
+one grid *step* per selected record: every step re-enters the kernel body
+and re-touches the output block, and the accumulator state lives across
+grid steps (DESIGN.md §Execution backends has the fusion diagram).
+
+This kernel fuses the gather, the XOR, and the fold into a single grid
+step per (query, word-block): the whole record axis of one word-block is
+made VMEM-resident, and a ``fori_loop`` *inside* the kernel body walks the
+scalar-prefetched indices, dynamic-slicing selected rows out of VMEM and
+folding them into a register accumulator. One kernel launch, one output
+write, no cross-step accumulator — the gather→xor→fold chain the unfused
+pair spreads over m grid steps collapses into in-kernel control flow.
+
+The price is VMEM residency: the db word-block is [n, BW] uint32, so the
+kernel only applies when ``n·BW·4`` fits the VMEM budget —
+:func:`fused_block_w` picks the widest power-of-two BW that fits and
+returns 0 when none does, which is exactly the signal the execution
+planner (``repro.kernels.backend``) uses to fall back to the unfused
+pair. At CT scale (n = 10⁶) the fused form only applies per record
+*shard*; single-host million-record stores take the streaming pair.
+
+Bit-identity: fused(db, idx) == gather_xor(db, idx) == xor_fold(db, mask)
+== the jnp oracle, proven exactly in tests/test_kernels.py and swept by
+hypothesis in tests/test_kernel_properties.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["fused_gather_fold", "fused_block_w", "FUSED_VMEM_BUDGET_BYTES"]
+
+DEFAULT_BLOCK_W = 128
+
+# VMEM the fused db word-block may occupy (half of a v5e core's 16 MiB,
+# leaving room for the output block, the loop state and double buffering)
+FUSED_VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+def fused_block_w(n: int, w: int, *, block_w: int = DEFAULT_BLOCK_W,
+                  budget_bytes: int = FUSED_VMEM_BUDGET_BYTES) -> int:
+    """Widest power-of-two word-block ≤ min(block_w, W) whose [n, BW]
+    uint32 db slab fits the VMEM budget; 0 when nothing ≥ min(8, W)
+    words fits (caller must fall back to the unfused streaming pair — a
+    lane-starved sliver block would waste the VPU even if it technically
+    fit)."""
+    cap = max(1, min(block_w, w))
+    bw = 1 << (cap.bit_length() - 1)  # round down to a power of two
+    floor = min(8, bw)
+    while bw > floor and n * bw * 4 > budget_bytes:
+        bw //= 2
+    return bw if n * bw * 4 <= budget_bytes else 0
+
+
+def _kernel(idx_ref, db_ref, out_ref):
+    b = pl.program_id(0)
+    m = idx_ref.shape[1]
+    bw = out_ref.shape[1]
+
+    def body(i, acc):
+        j = idx_ref[b, i]
+        # gather: one dynamic row out of the VMEM-resident word-block;
+        # padded (-1) slots clamp to row 0 and are masked out of the fold
+        row = db_ref[pl.ds(jnp.maximum(j, 0), 1), :]
+        return acc ^ jnp.where(j >= 0, row, jnp.uint32(0))
+
+    # xor+fold: register accumulator across the in-kernel index walk —
+    # the single output write below is the whole answer for this block
+    out_ref[...] = jax.lax.fori_loop(
+        0, m, body, jnp.zeros((1, bw), jnp.uint32)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
+def fused_gather_fold(
+    db: jnp.ndarray,
+    idx: jnp.ndarray,
+    *,
+    block_w: int = DEFAULT_BLOCK_W,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """db: [n, W] uint32; idx: [q, m] int32 (−1 = padding) -> [q, W].
+
+    Semantics identical to ``gather_xor(db, idx)``; see the module
+    docstring for when the planner picks which.
+    """
+    n, w = db.shape
+    q, m = idx.shape
+
+    bw = min(block_w, w)
+    wp = -w % bw
+    db_p = jnp.pad(db, ((0, 0), (0, wp)))
+
+    grid = (q, (w + wp) // bw)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            # the whole record axis of one word-block, VMEM-resident for
+            # the duration of the in-kernel index walk
+            pl.BlockSpec((n, bw), lambda b, j, idx_ref: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bw), lambda b, j, idx_ref: (b, j)),
+    )
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((q, w + wp), jnp.uint32),
+        interpret=interpret,
+    )(idx, db_p)
+    return out[:, :w]

@@ -1,9 +1,13 @@
 """jit'd public wrappers around the Pallas kernels.
 
-``server_answer_*`` are the production PIR server paths. On CPU (this
-container, and unit tests) the kernels run in interpret mode; on TPU they
-compile to Mosaic. ``auto`` picks the path the roofline says is faster for
-the given batch size (see EXPERIMENTS.md §Perf for the crossover model).
+``server_answer_*`` are standalone server paths (examples, tests,
+benchmarks). On CPU (this container, and unit tests) the kernels run in
+interpret mode; on TPU they compile to Mosaic. ``auto`` picks the path
+the roofline says is faster for the given batch size (EXPERIMENTS.md
+§Perf) — the *serving* pipeline goes further and measures the choice per
+shape through the execution-backend planner (``repro.kernels.backend``,
+DESIGN.md §Execution backends), for which :func:`parity_crossover_batch`
+is only the analytic prior.
 """
 
 from __future__ import annotations
@@ -68,7 +72,10 @@ def sparse_index_budget(n: int, theta: float, slack_sigmas: float = 6.0) -> int:
 
 
 def parity_crossover_batch(n: int, record_bits: int) -> int:
-    """Batch size above which the MXU parity path beats the VPU fold.
+    """MODEL batch size above which the MXU parity path beats the VPU
+    fold — the analytic prior of the execution planner's autotune
+    decision (repro.kernels.backend decides by measurement inside the
+    uncertainty band around this value; EXPERIMENTS.md §Autotune).
 
     Napkin roofline (v5e): fold moves n·W·4 bytes per *query block* of 8 →
     time ≈ n·record_bits/8 · ceil(q/8) / 819e9. Parity does 2·q·n·bits

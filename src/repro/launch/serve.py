@@ -25,11 +25,13 @@ import numpy as np
 from repro.core import SCHEMES, make_scheme
 from repro.core.accounting import PrivacyBudget
 from repro.db import make_synthetic_store
+from repro.kernels import registered_backends
 from repro.serve import (
     AsyncFrontend,
     BatchScheduler,
     QueryCache,
     ServingPipeline,
+    ShardedBackend,
 )
 
 
@@ -57,6 +59,14 @@ def build_args() -> argparse.ArgumentParser:
                     help="concurrent submitter threads (async frontend)")
     ap.add_argument("--cache-entries", type=int, default=0,
                     help="cross-batch cache slots; 0 disables the cache")
+    ap.add_argument("--backend", default="auto",
+                    choices=sorted(registered_backends()),
+                    help="execution backend (repro.kernels.backend "
+                         "registry; DESIGN.md §Execution backends)")
+    ap.add_argument("--autotune-file", default="",
+                    help="JSON autotune table: loaded at startup when it "
+                         "exists, written back (with this run's one-shot "
+                         "measurements) at exit")
     return ap
 
 
@@ -83,6 +93,11 @@ def make_engine(args) -> ServingPipeline:
             max_batch=args.batch, max_wait_s=args.max_wait_ms / 1e3
         ),
         cache=cache,
+        backend=ShardedBackend(
+            store,
+            backend=args.backend,
+            autotune_file=args.autotune_file or None,
+        ),
         default_budget=lambda: PrivacyBudget(
             epsilon_limit=args.eps_budget, delta_limit=1.0
         ),
@@ -175,7 +190,11 @@ def main() -> None:
     else:
         run_sync(args, engine)
     print(f"scheduler target batch: {engine.scheduler.target_batch}; "
-          f"backend paths: {engine.backend.path_counts}")
+          f"backend={engine.backend.backend_name} "
+          f"paths: {engine.backend.path_counts}")
+    if args.autotune_file:
+        print(f"autotune table -> {engine.backend.save_autotune()} "
+              f"({len(engine.backend.planner.table)} entries)")
 
 
 if __name__ == "__main__":

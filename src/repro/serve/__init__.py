@@ -20,7 +20,7 @@ cache).
 """
 
 from repro.serve.cache import CacheEntry, QueryCache, scheme_signature
-from repro.serve.engine import PIRServingEngine, ServingPipeline
+from repro.serve.engine import PIRServingEngine, PlannedBatch, ServingPipeline
 from repro.serve.frontend import AsyncFrontend, BackpressureError
 from repro.serve.router import RoutedBatch, SchemeRouter, SubsetPre
 from repro.serve.scheduler import BatchScheduler, Request, bucket_size
@@ -32,6 +32,7 @@ __all__ = [
     "BatchScheduler",
     "CacheEntry",
     "PIRServingEngine",
+    "PlannedBatch",
     "QueryCache",
     "Request",
     "RoutedBatch",

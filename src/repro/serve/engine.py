@@ -35,6 +35,8 @@ the pre-refactor one-file engine's constructor and methods, unchanged.
 
 from __future__ import annotations
 
+import dataclasses
+import threading
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -43,15 +45,34 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.accounting import PrivacyBudget
-from repro.core.protocol import SchemeProtocol, as_protocol
+from repro.core.protocol import Queries, SchemeProtocol, as_protocol
 from repro.db import packing
 from repro.db.store import RecordStore
+from repro.kernels.backend import ExecutionPlan
 from repro.serve.cache import QueryCache, block_pre_ready, scheme_signature
 from repro.serve.router import SchemeRouter
 from repro.serve.scheduler import BatchScheduler, Request
 from repro.serve.sharded import ServerStats, ShardedBackend
 
-__all__ = ["ServerStats", "ServingPipeline", "PIRServingEngine"]
+__all__ = ["ServerStats", "PlannedBatch", "ServingPipeline", "PIRServingEngine"]
+
+
+@dataclasses.dataclass
+class PlannedBatch:
+    """One cut batch, planned but not yet executed (the unit the
+    double-buffered flush worker overlaps, DESIGN.md §Execution
+    backends): cache hits already resolved into ``results``, misses
+    routed into wire-level ``routed`` payloads with the batch's
+    :class:`~repro.kernels.backend.ExecutionPlan` pre-resolved."""
+
+    batch: List[Request]
+    results: List[Optional[Tuple[Request, np.ndarray]]]
+    misses: List[Request]
+    miss_pos: List[int]
+    padded: int
+    routed: Optional[Queries]
+    exec_plan: Optional[ExecutionPlan]
+    plan_s: float  # wall time the plan phase itself took
 
 
 class ServingPipeline:
@@ -100,6 +121,12 @@ class ServingPipeline:
             lambda: PrivacyBudget(epsilon_limit=float("inf"), delta_limit=1.0)
         )
         self._key = jax.random.key(seed)
+        # guards cache/metrics/scheduler-feedback mutations so the
+        # frontend may run plan_requests(batch k+1) concurrently with
+        # execute_planned(batch k) — the double-buffered flush. The heavy
+        # device work in execute runs outside the lock; the sync path
+        # takes it uncontended.
+        self._phase_lock = threading.Lock()
         # the per-query (ε, δ) price is constant for a pipeline (fixed
         # scheme, fixed n): compute once so admission is O(1) float math
         self._eps_per_query, self._delta_per_query = self.staged.privacy(
@@ -161,58 +188,83 @@ class ServingPipeline:
     def stats(self) -> Dict[int, ServerStats]:
         return self.backend.stats
 
-    def serve_requests(
-        self, batch: List[Request]
-    ) -> List[Tuple[Request, np.ndarray]]:
-        """Serve one cut batch, per request: [(Request, record bytes)].
-
-        Cache hits are answered from the per-client memo without touching
-        any server (their budget was already spent at admission); misses
-        are routed as one padded batch — consuming banked precomputed
-        randomness for that bucket when available — and memoized on the
-        way out.
+    def plan_requests(self, batch: List[Request]) -> Optional[PlannedBatch]:
+        """Plan one cut batch without executing it: resolve cache hits,
+        route the misses into per-server wire payloads (consuming banked
+        precomputed randomness for the bucket when available) and
+        pre-resolve the batch's :class:`~repro.kernels.backend.
+        ExecutionPlan`. Client/planning work only — the server compute
+        happens in :meth:`execute_planned`. The async frontend's
+        double-buffered flush runs this for batch k+1 while batch k
+        executes; `serve_requests` composes the two phases inline.
         """
         if not batch:
-            return []
+            return None
         results: List[Optional[Tuple[Request, np.ndarray]]] = [None] * len(batch)
-        if self.cache is not None:
-            misses, miss_pos = [], []
-            for i, r in enumerate(batch):
-                entry = self.cache.lookup(r.client, r.index)
-                if entry is not None:
-                    results[i] = (r, entry.answer)
-                else:
-                    misses.append(r)
-                    miss_pos.append(i)
-        else:
-            misses, miss_pos = list(batch), list(range(len(batch)))
+        with self._phase_lock:
+            if self.cache is not None:
+                misses, miss_pos = [], []
+                for i, r in enumerate(batch):
+                    entry = self.cache.lookup(r.client, r.index)
+                    if entry is not None:
+                        results[i] = (r, entry.answer)
+                    else:
+                        misses.append(r)
+                        miss_pos.append(i)
+            else:
+                misses, miss_pos = list(batch), list(range(len(batch)))
+            self.metrics["queries"] += len(batch)
+            self.metrics["cache_hits"] += len(batch) - len(misses)
 
-        self.metrics["queries"] += len(batch)
-        self.metrics["cache_hits"] += len(batch) - len(misses)
-
+        routed = exec_plan = None
+        padded = 0
+        t0 = time.perf_counter()
         if misses:
             b = len(misses)
             padded = self.scheduler.padded_size(b)
             q_idx = jnp.asarray(
                 [r.index for r in misses] + [0] * (padded - b), jnp.int32
             )
-            self._key, sub = jax.random.split(self._key)
-            pre = (
-                self.cache.take_pre(padded) if self.cache is not None else None
-            )
-
-            t0 = time.perf_counter()
+            with self._phase_lock:
+                self._key, sub = jax.random.split(self._key)
+                pre = (
+                    self.cache.take_pre(padded)
+                    if self.cache is not None else None
+                )
             routed = self.router.plan(sub, self.store.n, q_idx, pre=pre)
-            responses = self.backend.answer_batch(routed)
+            exec_plan = self.backend.prepare(routed, scheme=self.staged)
+        return PlannedBatch(
+            batch=list(batch), results=results, misses=misses,
+            miss_pos=miss_pos, padded=padded, routed=routed,
+            exec_plan=exec_plan, plan_s=time.perf_counter() - t0,
+        )
+
+    def execute_planned(
+        self, planned: Optional[PlannedBatch]
+    ) -> List[Tuple[Request, np.ndarray]]:
+        """Execute a planned batch's misses on the backend and finalize:
+        [(Request, record bytes)] in the planned batch's order. The
+        device compute runs outside the pipeline's phase lock so a
+        concurrent :meth:`plan_requests` never waits on it."""
+        if planned is None:
+            return []
+        results = planned.results
+        if planned.routed is not None:
+            misses, miss_pos = planned.misses, planned.miss_pos
+            b = len(misses)
+            routed = planned.routed
+            # service time = this batch's own plan + execute wall time;
+            # timing from execute's start (not the plan's t0) keeps the
+            # scheduler's EMA honest when the double buffer queues this
+            # execute behind the previous batch's — queue wait is not
+            # per-batch cost and would otherwise shrink the target
+            t1 = time.perf_counter()
+            responses = self.backend.answer_batch(
+                routed, plan=planned.exec_plan, scheme=self.staged
+            )
             out = self.router.finalize(routed, responses)
             out.block_until_ready()
-            self.scheduler.observe_service(padded, time.perf_counter() - t0)
-
-            self.metrics["batches"] += 1
-            self.metrics["padded"] += padded - b
-            costs = self.staged.costs(self.store.n)
-            self.metrics["records_touched"] += costs["C_p"] / 2.0 * b
-            self.metrics["blocks_sent"] += costs["C_m"] * b
+            dt = planned.plan_s + (time.perf_counter() - t1)
 
             nbytes = -(-self.store.record_bits // 8)
             raw = packing.unpack_bytes_np(np.asarray(out[:b]), nbytes)
@@ -225,15 +277,36 @@ class ServingPipeline:
                 )
                 if col_bytes <= self.cache.max_query_vector_bytes:
                     cols = np.asarray(routed.payload[:, :b])
-            for j, r in enumerate(misses):
-                answer = np.array(raw[j])
-                results[miss_pos[j]] = (r, answer)
-                if self.cache is not None:
-                    self.cache.insert(
-                        r.client, r.index, answer=answer,
-                        query_cols=None if cols is None else cols[:, j],
-                    )
+
+            with self._phase_lock:
+                self.scheduler.observe_service(planned.padded, dt)
+                self.metrics["batches"] += 1
+                self.metrics["padded"] += planned.padded - b
+                costs = self.staged.costs(self.store.n)
+                self.metrics["records_touched"] += costs["C_p"] / 2.0 * b
+                self.metrics["blocks_sent"] += costs["C_m"] * b
+                for j, r in enumerate(misses):
+                    answer = np.array(raw[j])
+                    results[miss_pos[j]] = (r, answer)
+                    if self.cache is not None:
+                        self.cache.insert(
+                            r.client, r.index, answer=answer,
+                            query_cols=None if cols is None else cols[:, j],
+                        )
         return results  # type: ignore[return-value]
+
+    def serve_requests(
+        self, batch: List[Request]
+    ) -> List[Tuple[Request, np.ndarray]]:
+        """Serve one cut batch, per request: [(Request, record bytes)].
+
+        Cache hits are answered from the per-client memo without touching
+        any server (their budget was already spent at admission); misses
+        are routed as one padded batch and memoized on the way out.
+        ``serve_requests = execute_planned ∘ plan_requests`` — the async
+        frontend drives the phases separately to double-buffer flushes.
+        """
+        return self.execute_planned(self.plan_requests(batch))
 
     def take_batch(self) -> List[Request]:
         """Pop the next batch off the scheduler (≤ max_batch; truncation
@@ -262,7 +335,8 @@ class ServingPipeline:
             return 0
         if self.cache.pre_depth(bucket) >= self.cache.max_pre_batches:
             return 0
-        self._key, sub = jax.random.split(self._key)
+        with self._phase_lock:
+            self._key, sub = jax.random.split(self._key)
         pre = self.router.precompute(sub, self.store.n, bucket)
         if pre is None:  # scheme has no query-independent half
             return 0

@@ -29,6 +29,22 @@ front of it (DESIGN.md §Async front):
 * **Deadline timers**: the flush worker sleeps exactly until the oldest
   queued request hits the scheduler's ``max_wait_s`` deadline, so partial
   batches cut on time without busy-polling.
+* **Double-buffered flush** (default; ``double_buffer=False`` restores
+  the single-threaded flush): the flush worker *plans* batch k+1 —
+  cache lookups, query generation, the batch's
+  :class:`~repro.kernels.backend.ExecutionPlan` (including any one-shot
+  autotune microbenchmark) — while batch k's plan executes on a
+  one-slot executor thread, then resolves batch k's futures before
+  dispatching k+1 (DESIGN.md §Execution backends). Exactly one batch is
+  ever in flight and one being planned, so the pipeline's phase lock is
+  the only synchronization the overlap needs; answers stay bit-identical
+  to the sequential flush (the planner's key stream is consumed in plan
+  order, which the single flush worker serializes). One deliberate
+  tradeoff of the overlap: batch k+1 is planned before batch k's cache
+  inserts land, so a (client, index) repeat in the *immediately*
+  following batch can miss the memo and go out as a fresh (fully
+  priced, fresh-randomness) query — answers and (ε, δ) accounting are
+  unaffected, the hit just materializes one batch later.
 * **Idle prefill**: between flushes the worker banks precomputed batch
   randomness into the cross-batch cache
   (:meth:`~repro.serve.engine.ServingPipeline.prefill_cache`), moving
@@ -44,12 +60,12 @@ from __future__ import annotations
 import queue
 import threading
 import time
-from concurrent.futures import Future
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.serve.engine import ServingPipeline
+from repro.serve.engine import PlannedBatch, ServingPipeline
 from repro.serve.scheduler import Request
 
 __all__ = ["BackpressureError", "AsyncFrontend"]
@@ -74,6 +90,7 @@ class AsyncFrontend:
         shed_policy: str = "reject",
         idle_tick_s: float = 0.005,
         prefill: bool = True,
+        double_buffer: bool = True,
     ):
         if ingest_workers < 1:
             raise ValueError(f"need ingest_workers >= 1, got {ingest_workers}")
@@ -86,6 +103,8 @@ class AsyncFrontend:
         self.shed_policy = shed_policy
         self.idle_tick_s = idle_tick_s
         self.prefill = prefill
+        self.double_buffer = double_buffer
+        self._executor: Optional[ThreadPoolExecutor] = None
 
         self._ingest: "queue.Queue" = queue.Queue(maxsize=queue_limit)
         self._lock = threading.Lock()
@@ -106,6 +125,12 @@ class AsyncFrontend:
             return self
         if self._closed:
             raise RuntimeError("frontend is closed")
+        if self.double_buffer and self._executor is None:
+            # the one-slot execute stage of the double-buffered flush:
+            # exactly one batch in flight while the flush worker plans
+            self._executor = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="pir-exec"
+            )
         for i in range(self.ingest_workers):
             t = threading.Thread(
                 target=self._ingest_loop, name=f"pir-ingest-{i}", daemon=True
@@ -213,6 +238,11 @@ class AsyncFrontend:
         for t in self._threads:
             t.join(timeout=5.0)
         self._threads = []
+        if self._executor is not None:
+            # the flush worker settles its in-flight batch before exiting,
+            # so this never abandons work
+            self._executor.shutdown(wait=True)
+            self._executor = None
         # cancel anything that never got served (drain=False path); rescan
         # until in-flight block-policy submitters have either enqueued
         # (each scan frees queue slots) or noticed the close and backed out
@@ -352,16 +382,53 @@ class AsyncFrontend:
         )
 
     def _flush_loop(self) -> None:
+        # double-buffer state: the one batch whose execute stage is in
+        # flight on the executor thread, with its original requests
+        inflight: Optional[Tuple[List[Request], Future]] = None
         while True:
             with self._cv:
                 if self._stop:
-                    return
+                    break
                 cut = self._should_cut()
                 batch = self.pipeline.take_batch() if cut else []
                 timeout = None if cut else self._flush_wait_s()
                 idle = not len(self.pipeline.scheduler) and not self._unadmitted
             if batch:
-                self._serve(batch)
+                # local ref: a concurrent close() that gave up joining
+                # this thread may shut down and clear self._executor —
+                # the local keeps the dispatch race-free and the except
+                # below turns a post-shutdown submit into a failed batch
+                # instead of a dead flush worker with hung futures
+                executor = self._executor
+                if executor is None:
+                    self._serve(batch)
+                    continue
+                # plan batch k+1 while batch k's ExecutionPlan runs
+                try:
+                    planned = self.pipeline.plan_requests(batch)
+                except Exception as exc:
+                    if inflight is not None:
+                        self._finish(*inflight)
+                        inflight = None
+                    self._fail(batch, exc)
+                    continue
+                if inflight is not None:
+                    self._finish(*inflight)
+                    inflight = None
+                try:
+                    inflight = (
+                        batch,
+                        executor.submit(
+                            self.pipeline.execute_planned, planned
+                        ),
+                    )
+                except RuntimeError as exc:  # executor already shut down
+                    self._fail(batch, exc)
+                continue
+            # no fresh cut: settle the in-flight batch before anything else
+            if inflight is not None:
+                self._finish(*inflight)
+                inflight = None
                 continue
             # truly idle (nothing queued, nothing being admitted): bank
             # precomputed randomness, then sleep until the deadline or the
@@ -375,25 +442,46 @@ class AsyncFrontend:
                     continue
             with self._cv:
                 if self._stop:
-                    return
+                    break
                 if not self._should_cut():
                     self._cv.wait(timeout)
+        if inflight is not None:  # stop requested with a batch in flight
+            self._finish(*inflight)
 
     def _serve(self, batch: List[Request]) -> None:
+        """Single-threaded flush: plan + execute + resolve inline."""
         try:
             results = self.pipeline.serve_requests(batch)
         except Exception as exc:  # fail the whole batch, keep serving
-            with self._cv:
-                futs = [self._pending.pop(r.seq, None) for r in batch]
-                self._counters["failed"] += len(batch)
-                self._resolving += len(batch)
-            for fut in futs:
-                if fut is not None and not fut.done():
-                    fut.set_exception(exc)
-            with self._cv:
-                self._resolving -= len(batch)
-                self._cv.notify_all()
+            self._fail(batch, exc)
             return
+        self._resolve(results)
+
+    def _finish(self, batch: List[Request], fut: Future) -> None:
+        """Settle one double-buffered batch: wait for its execute stage
+        and resolve (or fail) its futures."""
+        try:
+            results = fut.result()
+        except Exception as exc:
+            self._fail(batch, exc)
+            return
+        self._resolve(results)
+
+    def _fail(self, batch: List[Request], exc: BaseException) -> None:
+        with self._cv:
+            futs = [self._pending.pop(r.seq, None) for r in batch]
+            self._counters["failed"] += len(batch)
+            self._resolving += len(batch)
+        for fut in futs:
+            if fut is not None and not fut.done():
+                fut.set_exception(exc)
+        with self._cv:
+            self._resolving -= len(batch)
+            self._cv.notify_all()
+
+    def _resolve(
+        self, results: List[Tuple[Request, np.ndarray]]
+    ) -> None:
         with self._cv:
             paired: List[Tuple[Optional[Future], np.ndarray]] = [
                 (self._pending.pop(r.seq, None), answer)

@@ -7,18 +7,35 @@ answers per-server payloads against the record store — dispatching on
 the wire *kind* (mask vs index) and θ, never on scheme names. The
 scheme's ``reconstruct`` then runs on the stacked responses
 (``SchemeRouter.finalize``).
-With no active mesh it is the single-host kernel path (exactly what the
-old one-file engine did). Under ``repro.dist.mesh_rules`` with a rule
-mapping the "records" logical axis, every server's database is partitioned
-across the mesh and each device answers only its record shard:
 
-  * XOR-family batches run the Pallas kernels *per shard* —
-    ``xor_fold`` (VPU), ``parity_matmul`` (MXU, batch ≥ crossover) or
-    ``gather_xor`` (Sparse-PIR, only θ·n records touched) — and the
-    partial answers combine with :func:`repro.dist.collectives.xor_psum`
-    (GF(2) butterfly; XOR is the reduction the PIR algebra wants, and both
-    the fold and the mod-2 parity are XOR-additive across record shards,
-    so the result is bit-exact vs the single-host path).
+Every implementation decision — which kernel, which backend impl, fused
+vs streaming sparse, fold vs parity, block sizes, index budgets — flows
+through the execution-backend layer (``repro.kernels.backend``, DESIGN.md
+§Execution backends): :meth:`ShardedBackend.prepare` asks the
+:class:`~repro.kernels.backend.KernelPlanner` for an
+:class:`~repro.kernels.backend.ExecutionPlan` and
+:meth:`ShardedBackend.answer_batch` executes it. This module holds **no
+kernel choice of its own** — no impl strings, no crossover constants —
+and imports no kernel module (``tools/check_api.py`` fences the kernel
+internals behind ``repro.kernels``). The serving pipeline calls
+``prepare`` for batch k+1 while batch k's plan is still executing, so
+even the planner's one-shot autotune microbenchmarks hide in the
+double-buffer overlap.
+
+With no active mesh, the plan carries a ready jitted executor (exactly
+what the old one-file engine did, with the kernel choice now measured
+instead of hardcoded). Under ``repro.dist.mesh_rules`` with a rule
+mapping the "records" logical axis, every server's database is
+partitioned across the mesh and each device answers only its record
+shard:
+
+  * XOR-family batches run the plan's per-shard answer function
+    (``repro.kernels.backend.shard_answer_fn``) under ``shard_map`` and
+    the partial answers combine with
+    :func:`repro.dist.collectives.xor_psum` (GF(2) butterfly; XOR is the
+    reduction the PIR algebra wants, and fold, parity and sparse gather
+    are all XOR-additive across record shards, so the result is
+    bit-exact vs the single-host path).
   * Direct-Requests batches gather through
     :func:`repro.dist.collectives.sharded_record_lookup`.
 
@@ -26,18 +43,23 @@ Records are zero-padded up to the shard product — zero records are
 XOR-neutral and query masks never select them, so padding cannot change
 any answer.
 
-``kernel_impl`` picks the per-shard implementation: "pallas" runs the TPU
-kernels (interpret mode off-TPU), "ref" the pure-jnp oracles from
-``repro.kernels.ref``, and the default "auto" uses the kernels on
-accelerators but the oracles on CPU hosts — emulating a TPU interpreter
-in a CPU serving hot path costs ~50× for identical bits
-(tests/test_kernels.py proves kernel == oracle exactly; the multidevice
-checks additionally pin the Pallas-in-shard_map path).
+``backend=`` names a registered execution backend ("pallas" | "ref" |
+"auto"); the old ``kernel_impl=`` keyword survives as a deprecated alias
+onto the same registry (README §Execution backends has the migration
+table). ``autotune_file=`` loads a dumped autotune table at construction
+(missing file = cold start) and :meth:`save_autotune` writes the
+process-local measurements back out.
 
 The backend also owns **straggler tracking**: a latency EMA per database
 replica (the paper's d databases stay *logical* replicas — sharding is
-within one replica's answer), which the pipeline's Subset-PIR policy reads
-to contact only the fastest t replicas (paper §5.1, priced at δ).
+within one replica's answer). Observation is **scheme-agnostic**: every
+server answered by :meth:`answer_batch` feeds its replica's EMA,
+whatever the scheme — so the ranking is warm before any subset traffic
+arrives. The *consumer* is subset-only by design: only Subset-PIR's
+``query()`` takes a ``pick_servers`` policy, so only it ever reads
+:meth:`fastest` (paper §5.1, priced at δ); other schemes contact all d
+replicas regardless of the EMAs. tests/test_serving_pipeline.py pins
+both halves of this contract.
 """
 
 from __future__ import annotations
@@ -45,6 +67,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
+import warnings
 from functools import partial
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -53,30 +76,20 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.db import packing
 from repro.db.store import RecordStore
 from repro.dist.collectives import sharded_record_lookup, xor_psum
 from repro.dist.sharding import current_mesh, mesh_axis_names
-from repro.kernels import ops, ref
-from repro.kernels.gather_xor import gather_xor, indices_from_mask
-from repro.kernels.parity_matmul import parity_matmul
-from repro.kernels.xor_fold import xor_fold
+from repro.kernels.backend import (
+    AutotuneTable,
+    ExecutionPlan,
+    KernelPlanner,
+    dump_autotune,
+    resolve_kernel_impl_alias,
+    shard_answer_fn,
+)
 from repro.core.protocol import Queries
 
 __all__ = ["ServerStats", "ShardedBackend"]
-
-
-# jitted single-host oracle paths (bit-identical to the Pallas kernels,
-# asserted exactly in tests/test_kernels.py)
-_ref_fold = jax.jit(ref.xor_fold_ref)
-_ref_parity = jax.jit(
-    lambda planes, mask: packing.pack_bits(ref.parity_matmul_ref(mask, planes))
-)
-
-
-@partial(jax.jit, static_argnames=("m",))
-def _ref_sparse(db: jnp.ndarray, mask: jnp.ndarray, m: int) -> jnp.ndarray:
-    return ref.gather_xor_ref(db, indices_from_mask(mask, m))
 
 
 @dataclasses.dataclass
@@ -99,21 +112,59 @@ class ShardedBackend:
         store: RecordStore,
         *,
         simulate_latency: Optional[Callable[[int], float]] = None,
+        backend: str = "auto",
+        autotune: Optional[AutotuneTable] = None,
+        autotune_file: Optional[str] = None,
         parity_min_batch: Optional[int] = None,
-        kernel_impl: str = "auto",
+        kernel_impl: Optional[str] = None,
     ):
-        if kernel_impl not in ("auto", "pallas", "ref"):
-            raise ValueError(f"kernel_impl must be auto|pallas|ref, got {kernel_impl!r}")
-        self.kernel_impl = kernel_impl
+        if kernel_impl is not None:
+            warnings.warn(
+                "kernel_impl= is deprecated; use backend= (the execution-"
+                "backend registry, README §Execution backends)",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            backend = resolve_kernel_impl_alias(kernel_impl, backend)
         self.store = store
+        self.planner = KernelPlanner(
+            store,
+            backend=backend,
+            table=autotune,
+            parity_min_batch=parity_min_batch,
+        )
+        self.autotune_file = autotune_file
+        if autotune_file is not None:
+            try:
+                self.planner.table.update(AutotuneTable.load(autotune_file))
+            except FileNotFoundError:
+                pass  # cold start; save_autotune() creates it
         self.stats: Dict[int, ServerStats] = {}
         self._sim = simulate_latency
-        self._planes = None  # lazy bitplanes for the parity path
-        self._parity_min_batch = parity_min_batch
         # per-mesh sharded copies of the db/planes + jitted shard_map fns
         self._mesh_db: Dict[int, dict] = {}
         self._mesh_fns: Dict[tuple, Callable] = {}
         self.path_counts = {"fold": 0, "parity": 0, "sparse": 0, "direct": 0}
+
+    @property
+    def backend_name(self) -> str:
+        """The registered execution backend this instance plans with."""
+        return self.planner.backend_name
+
+    @property
+    def kernel_impl(self) -> str:
+        """Deprecated alias for :attr:`backend_name` (old introspection
+        surface; the constructor keyword maps the same way)."""
+        return self.planner.backend_name
+
+    def save_autotune(self, path: Optional[str] = None) -> str:
+        """Dump the planner's autotune table as JSON (default: the
+        ``autotune_file`` this backend was constructed with)."""
+        path = path or self.autotune_file
+        if path is None:
+            raise ValueError("no autotune_file configured and no path given")
+        dump_autotune(path, self.planner.table)
+        return path
 
     # ------------------------------------------------------------ stragglers
     def ensure_replicas(self, d: int) -> None:
@@ -130,22 +181,6 @@ class ShardedBackend:
             key=lambda i: (self.stats[i].n > 0, self.stats[i].ema_s),
         )
         return order[:t]
-
-    # -------------------------------------------------------------- helpers
-    def _use_ref(self) -> bool:
-        return self.kernel_impl == "ref" or (
-            self.kernel_impl == "auto" and ops.on_cpu()
-        )
-
-    def _parity_crossover(self) -> int:
-        if self._parity_min_batch is not None:
-            return self._parity_min_batch
-        return ops.parity_crossover_batch(self.store.n, self.store.record_bits)
-
-    def planes(self) -> jnp.ndarray:
-        if self._planes is None:
-            self._planes = self.store.bitplanes()
-        return self._planes
 
     # ------------------------------------------------------- mesh residency
     def _mesh_state(self) -> Optional[dict]:
@@ -166,6 +201,7 @@ class ShardedBackend:
             # instead of pinning one sharded copy per mesh generation
             self._mesh_db.clear()
             self._mesh_fns.clear()
+            self.planner.invalidate()
             n = self.store.n
             n_pad = -(-n // rshards) * rshards
             db = jnp.pad(self.store.packed, ((0, n_pad - n), (0, 0)))
@@ -183,7 +219,7 @@ class ShardedBackend:
     def _mesh_planes(self, state: dict) -> jnp.ndarray:
         if state["planes"] is None:
             planes = jnp.pad(
-                self.planes(),
+                self.planner.planes(),
                 ((0, state["n_pad"] - self.store.n), (0, 0)),
             )
             state["planes"] = jax.device_put(
@@ -203,21 +239,20 @@ class ShardedBackend:
         return qaxes if qshards > 1 and b % qshards == 0 else ()
 
     def _mask_fn(
-        self, state: dict, qaxes: Tuple[str, ...], path: str,
-        theta: Optional[float],
+        self, state: dict, qaxes: Tuple[str, ...], plan: ExecutionPlan
     ) -> Callable:
-        """Build (and cache) the shard_map'd per-server answer function."""
-        key = (id(state["mesh"]), state["raxes"], qaxes, path, theta)
+        """Build (and cache) the shard_map'd per-server answer function
+        from a mesh plan's decision fields."""
+        key = (
+            id(state["mesh"]), state["raxes"], qaxes,
+            plan.path, plan.impl, plan.m_budget, plan.blocks,
+        )
         fn = self._mesh_fns.get(key)
         if fn is not None:
             return fn
 
         mesh, raxes = state["mesh"], state["raxes"]
-        n_loc = state["n_pad"] // state["rshards"]
-        interp = ops.on_cpu()
-        use_ref = self._use_ref()
-        if path == "sparse":
-            m_budget = ops.sparse_index_budget(n_loc, theta)
+        answer_shard = shard_answer_fn(plan)
 
         @partial(
             shard_map,
@@ -226,69 +261,78 @@ class ShardedBackend:
             out_specs=P(qaxes or None, None),
             check_rep=False,
         )
-        def _answer(db_loc, m_loc):
-            if path == "sparse":
-                idx = indices_from_mask(m_loc, m_budget)
-                r = (ref.gather_xor_ref(db_loc, idx) if use_ref
-                     else gather_xor(db_loc, idx, interpret=interp))
-            elif path == "parity":
-                bits = (ref.parity_matmul_ref(m_loc, db_loc) if use_ref
-                        else parity_matmul(m_loc, db_loc, interpret=interp))
-                r = packing.pack_bits(bits)
-            else:  # fold
-                r = (ref.xor_fold_ref(db_loc, m_loc) if use_ref
-                     else xor_fold(db_loc, m_loc, interpret=interp))
-            return xor_psum(r, raxes)
+        def _answer(operand_loc, m_loc):
+            return xor_psum(answer_shard(operand_loc, m_loc), raxes)
 
         fn = jax.jit(_answer)
         self._mesh_fns[key] = fn
         return fn
 
+    # ------------------------------------------------------------- planning
+    def prepare(
+        self, routed: Queries, *, scheme: Optional[object] = None
+    ) -> ExecutionPlan:
+        """Resolve one batch's :class:`ExecutionPlan` (cached in the
+        planner). The serving pipeline calls this for batch k+1 while
+        batch k executes; calling it is optional — :meth:`answer_batch`
+        plans on demand when no plan is handed in."""
+        bucket = int(routed.payload.shape[1])
+        if routed.kind != "mask":
+            return self.planner.plan(
+                routed, bucket, None, scheme=scheme
+            )
+        return self.planner.plan(
+            routed, bucket, self._mesh_state(), scheme=scheme
+        )
+
+    def _plan_matches(
+        self,
+        plan: Optional[ExecutionPlan],
+        state: Optional[dict],
+        routed: Queries,
+    ) -> bool:
+        """A handed-in plan is only reusable if the mesh residency it was
+        built for still holds (plans carry no executor on-mesh) AND it
+        was planned for this batch's wire parameters — a sparse plan's
+        index budget is sized from θ, so executing it against a
+        different-θ batch would truncate indices and corrupt bits."""
+        if plan is None:
+            return False
+        on_mesh = state is not None
+        if (plan.run is None) != on_mesh:
+            return False
+        if plan.theta != getattr(routed, "theta", None):
+            return False
+        n_eff = state["n_pad"] // state["rshards"] if on_mesh else self.store.n
+        return plan.n == n_eff
+
     # ------------------------------------------------------------ execution
     def _answer_mask_server(
-        self, masks_s: jnp.ndarray, theta: Optional[float]
-    ) -> jnp.ndarray:
+        self,
+        masks_s: jnp.ndarray,
+        routed: Queries,
+        plan: Optional[ExecutionPlan],
+        scheme: Optional[object],
+    ) -> Tuple[jnp.ndarray, ExecutionPlan]:
         """One server's [B, n] masks -> [B, W] packed partial answer."""
-        b = masks_s.shape[0]
-        sparse_path = theta is not None and theta < 0.5
-        parity_path = not sparse_path and b >= self._parity_crossover()
-
         state = self._mesh_state()
-        if state is None:  # single host
-            use_ref = self._use_ref()
-            if sparse_path:
-                self.path_counts["sparse"] += 1
-                if use_ref:
-                    m = ops.sparse_index_budget(self.store.n, theta)
-                    return _ref_sparse(self.store.packed, masks_s, m)
-                return ops.server_answer_sparse(
-                    self.store.packed, masks_s, theta
-                )
-            if parity_path:
-                self.path_counts["parity"] += 1
-                if use_ref:
-                    return _ref_parity(self.planes(), masks_s)
-                return ops.server_answer_parity(self.planes(), masks_s)
-            self.path_counts["fold"] += 1
-            if use_ref:
-                return _ref_fold(self.store.packed, masks_s)
-            return ops.server_answer_fold(self.store.packed, masks_s)
+        if not self._plan_matches(plan, state, routed):
+            plan = self.planner.plan(
+                routed, int(masks_s.shape[0]), state, scheme=scheme
+            )
+        self.path_counts[plan.family] += 1
+
+        if state is None:  # single host: the plan carries the executor
+            return plan(masks_s), plan
 
         pad = state["n_pad"] - self.store.n
         if pad:
             masks_s = jnp.pad(masks_s, ((0, 0), (0, pad)))
-        qaxes = self._query_axes(state, b)
-        if sparse_path:
-            self.path_counts["sparse"] += 1
-            fn = self._mask_fn(state, qaxes, "sparse", theta)
-            return fn(state["db"], masks_s)
-        if parity_path:
-            self.path_counts["parity"] += 1
-            fn = self._mask_fn(state, qaxes, "parity", None)
-            return fn(self._mesh_planes(state), masks_s)
-        self.path_counts["fold"] += 1
-        fn = self._mask_fn(state, qaxes, "fold", None)
-        return fn(state["db"], masks_s)
+        qaxes = self._query_axes(state, masks_s.shape[0])
+        operand = (
+            self._mesh_planes(state) if plan.path == "parity" else state["db"]
+        )
+        return self._mask_fn(state, qaxes, plan)(operand, masks_s), plan
 
     def _answer_index_server(self, reqs_s: jnp.ndarray) -> jnp.ndarray:
         """One server's [B, k] index requests -> [B, k, W] records."""
@@ -309,8 +353,20 @@ class ShardedBackend:
             self._mesh_fns[key] = fn
         return fn(state["db"], reqs_s)
 
-    def answer_batch(self, routed: Queries) -> jnp.ndarray:
+    def answer_batch(
+        self,
+        routed: Queries,
+        *,
+        plan: Optional[ExecutionPlan] = None,
+        scheme: Optional[object] = None,
+    ) -> jnp.ndarray:
         """Answer every contacted server, tracking per-replica latency.
+
+        ``plan`` (from :meth:`prepare`) skips planning on the hot path —
+        the double-buffered pipeline prepares batch k+1 while batch k
+        runs here. The latency EMA is fed for **every** scheme's servers
+        (see the module docstring: observation is scheme-agnostic, only
+        Subset-PIR consumes the ranking).
 
         Returns stacked responses: [d_eff, B, W] (mask) or
         [d_eff, B, k, W] (index), ordered like ``routed.servers``.
@@ -319,8 +375,8 @@ class ShardedBackend:
         for pos, sid in enumerate(routed.servers):
             t0 = time.perf_counter()
             if routed.kind == "mask":
-                r = self._answer_mask_server(
-                    routed.payload[pos], routed.theta
+                r, plan = self._answer_mask_server(
+                    routed.payload[pos], routed, plan, scheme
                 )
             else:
                 r = self._answer_index_server(routed.payload[pos])

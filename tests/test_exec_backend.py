@@ -1,0 +1,282 @@
+"""The execution-backend layer (repro.kernels.backend, DESIGN.md
+§Execution backends): registry contents, the deprecated kernel_impl
+alias, autotune-table decisions + JSON round-trip, ExecutionPlan
+resolution (sparse family, VMEM gate, forced crossover), and — the
+acceptance bar — registry-parameterized bit-identity: every backend's
+planned execution answers every wire kind exactly like the jnp oracle."""
+
+import json
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_scheme
+from repro.db import make_synthetic_store
+from repro.kernels import ref
+from repro.kernels.backend import (
+    AutotuneTable,
+    ExecutionPlan,
+    KernelPlanner,
+    get_backend,
+    register_backend,
+    registered_backends,
+    resolve_kernel_impl_alias,
+)
+from repro.serve import SchemeRouter, ShardedBackend
+
+
+# ---------------------------------------------------------------- registry
+def test_registry_contents_and_resolution():
+    assert set(registered_backends()) >= {"auto", "pallas", "ref"}
+    assert get_backend("pallas").resolve() == "pallas"
+    assert get_backend("ref").resolve() == "ref"
+    # this container is a CPU host: auto resolves to the oracle impl
+    assert get_backend("auto").resolve() == "ref"
+    with pytest.raises(ValueError, match="unknown backend"):
+        get_backend("mosaic")
+
+
+def test_registry_rejects_duplicates():
+    with pytest.raises(ValueError, match="already registered"):
+        register_backend("ref")(type("Dup", (), {}))
+
+
+def test_kernel_impl_alias_maps_and_validates():
+    assert resolve_kernel_impl_alias(None, "auto") == "auto"
+    assert resolve_kernel_impl_alias("pallas", "auto") == "pallas"
+    with pytest.raises(ValueError, match="unknown backend"):
+        resolve_kernel_impl_alias("jnp", "auto")
+
+
+def test_sharded_backend_kernel_impl_deprecated_alias():
+    store = make_synthetic_store(64, 8, seed=0)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        backend = ShardedBackend(store, kernel_impl="pallas")
+    assert any(
+        issubclass(w.category, DeprecationWarning) for w in caught
+    )
+    assert backend.backend_name == "pallas"
+    assert backend.kernel_impl == "pallas"  # old introspection surface
+    with pytest.raises(ValueError, match="unknown backend"):
+        ShardedBackend(store, kernel_impl="jnp")
+
+
+# ----------------------------------------------------------- autotune table
+def test_autotune_table_json_roundtrip(tmp_path):
+    table = AutotuneTable()
+    table.put(("chor", 64, "ref", 512, 6, "mask"), "parity",
+              source="measured", us={"fold": 10.5, "parity": 3.25})
+    table.put(("sparse", 8, "pallas", 512, 6, "sparse@0.25"),
+              "sparse_fused", source="model")
+    path = tmp_path / "autotune.json"
+    table.dump(str(path))
+    blob = json.loads(path.read_text())
+    assert blob["version"] == AutotuneTable.VERSION
+    assert {e["scheme"] for e in blob["entries"]} == {"chor", "sparse"}
+    back = AutotuneTable.load(str(path))
+    assert len(back) == 2
+    hit = back.get(("chor", 64, "ref", 512, 6, "mask"))
+    assert hit["path"] == "parity" and hit["us"]["parity"] == 3.25
+
+
+def test_autotune_table_version_guard():
+    with pytest.raises(ValueError, match="version"):
+        AutotuneTable.from_json('{"version": 99, "entries": []}')
+
+
+def test_sharded_backend_autotune_file_cold_start_and_save(tmp_path):
+    store = make_synthetic_store(128, 8, seed=1)
+    path = str(tmp_path / "at.json")
+    backend = ShardedBackend(store, autotune_file=path)  # missing: cold
+    backend.planner.table.put(
+        ("chor", 64, "ref", 128, 2, "mask"), "fold", source="measured",
+        us={"fold": 1.0, "parity": 2.0},
+    )
+    assert backend.save_autotune() == path
+    # a second backend warm-starts from the dumped decisions
+    warm = ShardedBackend(store, autotune_file=path)
+    assert warm.planner.table.get(
+        ("chor", 64, "ref", 128, 2, "mask")
+    )["path"] == "fold"
+
+
+# ------------------------------------------------------------ plan decisions
+def _routed(scheme, n, b, key=0):
+    router = SchemeRouter(scheme)
+    return router.plan(jax.random.key(key), n, jnp.arange(b) % n)
+
+
+def test_plan_sparse_family_and_vmem_gate():
+    store = make_synthetic_store(256, 16, seed=2)
+    sch = make_scheme("sparse", d=2, d_a=1, theta=0.25).staged
+    routed = _routed(sch, store.n, 4)
+    for backend, paths in (
+        ("ref", {"sparse_ref"}),
+        ("pallas", {"sparse_fused", "sparse_pair"}),
+    ):
+        plan = KernelPlanner(
+            store, backend=backend, table=AutotuneTable()
+        ).plan(routed, 4, None, scheme=sch)
+        assert plan.path in paths
+        assert plan.family == "sparse"
+        assert plan.m_budget is not None and plan.m_budget > 0
+        assert plan.run is not None  # single host: executor attached
+
+
+def test_plan_sparse_dense_fallback_consults_cost_model():
+    """The scheme's costs(n) decide whether gathering pays at all: on a
+    tiny store the θ·n + 6σ budget is no longer meaningfully below n, so
+    the planner hands the (still sparse-masked) batch to the dense
+    fold/parity decision — same bits, different physical form."""
+    small = make_synthetic_store(64, 8, seed=7)
+    sch = make_scheme("sparse", d=4, d_a=2, theta=0.3).staged
+    plan = KernelPlanner(small, table=AutotuneTable()).plan(
+        _routed(sch, small.n, 2), 2, None, scheme=sch
+    )
+    assert plan.path in ("fold", "parity")
+    assert plan.m_budget is None
+    # and the answers stay exact through the serving backend
+    backend = ShardedBackend(small)
+    router = SchemeRouter(sch)
+    routed = router.plan(jax.random.key(3), small.n, jnp.asarray([5, 63]))
+    out = router.finalize(routed, backend.answer_batch(routed, scheme=sch))
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(small.packed)[np.asarray([5, 63])]
+    )
+    # a CT-sized store keeps the gather family for the same θ
+    big = make_synthetic_store(4096, 8, seed=7)
+    plan_big = KernelPlanner(big, table=AutotuneTable()).plan(
+        _routed(sch, big.n, 2, key=1), 2, None, scheme=sch
+    )
+    assert plan_big.family == "sparse"
+
+
+def test_autotune_families_never_collide():
+    """Regression: a sparse decision cached in the table must never be
+    handed back as a dense fold/parity decision (or vice versa) for the
+    same (scheme, bucket, n, words) — the key's family component keeps
+    the two candidate sets apart. θ=0.25 gathers on this store; θ=0.49's
+    budget crosses the dense cutoff, so the SAME scheme name takes both
+    routes through one shared table."""
+    store = make_synthetic_store(128, 8, seed=11)
+    table = AutotuneTable()
+    planner = KernelPlanner(store, backend="pallas", table=table)
+
+    gathery = make_scheme("sparse", d=4, d_a=2, theta=0.25).staged
+    plan_a = planner.plan(_routed(gathery, store.n, 2), 2, None,
+                          scheme=gathery)
+    assert plan_a.family == "sparse"
+
+    densy = make_scheme("sparse", d=4, d_a=2, theta=0.49).staged
+    plan_b = planner.plan(_routed(densy, store.n, 2, key=1), 2, None,
+                          scheme=densy)
+    assert plan_b.path in ("fold", "parity")
+    assert plan_b.m_budget is None
+    # and both execute (the collision used to crash the dense build)
+    for sch, plan in ((gathery, plan_a), (densy, plan_b)):
+        routed = _routed(sch, store.n, 2, key=2)
+        np.testing.assert_array_equal(
+            np.asarray(plan(routed.payload[0])),
+            np.asarray(ref.xor_fold_ref(store.packed, routed.payload[0])),
+        )
+
+
+def test_plan_forced_parity_crossover():
+    store = make_synthetic_store(128, 8, seed=3)
+    sch = make_scheme("chor", d=2, d_a=1).staged
+    planner = KernelPlanner(store, parity_min_batch=8, table=AutotuneTable())
+    lo = planner.plan(_routed(sch, store.n, 4), 4, None, scheme=sch)
+    hi = planner.plan(_routed(sch, store.n, 16), 16, None, scheme=sch)
+    assert (lo.path, lo.source) == ("fold", "forced")
+    assert (hi.path, hi.source) == ("parity", "forced")
+
+
+def test_plan_measured_inside_band_model_outside_and_one_shot():
+    """Inside the uncertainty band the fold/parity choice is a one-shot
+    measured microbenchmark (cached in the table); far below the model
+    crossover the analytic prior decides without timing anything."""
+    store = make_synthetic_store(200, 8, seed=4)
+    sch = make_scheme("chor", d=2, d_a=1).staged
+    table = AutotuneTable()
+    planner = KernelPlanner(store, table=table)
+
+    tiny = planner.plan(_routed(sch, store.n, 2), 2, None, scheme=sch)
+    assert tiny.source == "model" and tiny.path == "fold"
+    key_tiny = ("chor", 2, "ref", 200, 2, "mask")
+    assert table.get(key_tiny)["us"] == {}  # nothing was timed
+
+    banded = planner.plan(_routed(sch, store.n, 64), 64, None, scheme=sch)
+    assert banded.source == "measured"
+    entry = table.get(("chor", 64, "ref", 200, 2, "mask"))
+    assert set(entry["us"]) == {"fold", "parity"}
+    assert entry["path"] == banded.path
+
+    # one-shot: a fresh planner sharing the table reuses the measurement
+    again = KernelPlanner(store, table=table).plan(
+        _routed(sch, store.n, 64, key=1), 64, None, scheme=sch
+    )
+    assert again.path == banded.path and again.source == "measured"
+
+
+def test_plan_cache_returns_same_plan():
+    store = make_synthetic_store(64, 8, seed=5)
+    sch = make_scheme("chor", d=2, d_a=1).staged
+    planner = KernelPlanner(store, table=AutotuneTable())
+    a = planner.plan(_routed(sch, store.n, 4), 4, None, scheme=sch)
+    b = planner.plan(_routed(sch, store.n, 4, key=9), 4, None, scheme=sch)
+    assert a is b
+    planner.invalidate()
+    c = planner.plan(_routed(sch, store.n, 4), 4, None, scheme=sch)
+    assert c is not a
+
+
+# ------------------------------------------- registry-parameterized identity
+@pytest.mark.parametrize("backend", sorted(registered_backends()))
+@pytest.mark.parametrize(
+    "name,kw",
+    [("chor", {}), ("sparse", dict(theta=0.25)), ("subset", dict(t=3)),
+     ("direct", dict(p=8))],
+)
+def test_every_backend_answers_bit_identically(backend, name, kw):
+    """Acceptance bar: for every registered backend, the planned
+    execution of every wire kind reconstructs the exact records — and the
+    mask-family partial answers equal the jnp oracle server-for-server."""
+    store = make_synthetic_store(222, 20, seed=6)
+    sch = make_scheme(name, d=4, d_a=2, **kw).staged
+    router = SchemeRouter(sch)
+    routed = router.plan(jax.random.key(7), store.n, jnp.asarray([0, 97, 221]))
+    exec_backend = ShardedBackend(store, backend=backend)
+    responses = exec_backend.answer_batch(routed, scheme=sch)
+    if routed.kind == "mask":
+        for pos in range(len(routed.servers)):
+            np.testing.assert_array_equal(
+                np.asarray(responses[pos]),
+                np.asarray(
+                    ref.xor_fold_ref(store.packed, routed.payload[pos])
+                ),
+            )
+    out = router.finalize(routed, responses)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(store.packed)[np.asarray([0, 97, 221])]
+    )
+
+
+def test_prepared_plan_is_used_by_answer_batch():
+    store = make_synthetic_store(96, 12, seed=8)
+    sch = make_scheme("sparse", d=3, d_a=1, theta=0.3).staged
+    backend = ShardedBackend(store, backend="pallas")
+    routed = _routed(sch, store.n, 4)
+    plan = backend.prepare(routed, scheme=sch)
+    assert isinstance(plan, ExecutionPlan)
+    assert plan.path.startswith("sparse") and plan.impl == "pallas"
+    # handing the plan back skips re-planning and answers identically
+    got = backend.answer_batch(routed, plan=plan, scheme=sch)
+    want = jnp.stack([
+        ref.xor_fold_ref(store.packed, routed.payload[p])
+        for p in range(len(routed.servers))
+    ])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

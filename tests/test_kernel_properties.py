@@ -11,7 +11,14 @@ pytest.importorskip(
 )
 from hypothesis import given, settings, strategies as st
 
-from repro.kernels import gather_xor, indices_from_mask, parity_matmul, ref, xor_fold
+from repro.kernels import (
+    fused_gather_fold,
+    gather_xor,
+    indices_from_mask,
+    parity_matmul,
+    ref,
+    xor_fold,
+)
 
 SETTINGS = dict(max_examples=12, deadline=None)
 
@@ -77,3 +84,26 @@ def test_gather_xor_property(n, w, q, density, seed):
     np.testing.assert_array_equal(got, want)
     # and the gather path agrees with the dense fold (same GF(2) contract)
     np.testing.assert_array_equal(got, np.asarray(ref.xor_fold_ref(db, mask)))
+
+
+@given(
+    st.integers(1, 120),        # n includes the single-record corner
+    st.integers(1, 16),
+    st.integers(1, 5),
+    st.floats(0.0, 1.0),
+    st.integers(0, 10**6),
+)
+@settings(**SETTINGS)
+def test_fused_gather_fold_property(n, w, q, density, seed):
+    """The fused one-kernel Sparse-PIR answer == the gather_xor+xor_fold
+    composition == the oracle, over random shapes/densities/blocks."""
+    db, mask = _db(n, w, seed), _mask(q, n, density, seed)
+    idx = indices_from_mask(mask, n)
+    got = np.asarray(fused_gather_fold(db, idx, block_w=8, interpret=True))
+    np.testing.assert_array_equal(got, np.asarray(ref.gather_xor_ref(db, idx)))
+    np.testing.assert_array_equal(
+        got, np.asarray(gather_xor(db, idx, block_w=8, interpret=True))
+    )
+    np.testing.assert_array_equal(
+        got, np.asarray(xor_fold(db, mask, interpret=True))
+    )

@@ -7,7 +7,16 @@ import numpy as np
 import pytest
 
 from repro.db import make_synthetic_store
-from repro.kernels import gather_xor, indices_from_mask, ops, parity_matmul, ref, xor_fold
+from repro.kernels import (
+    fused_block_w,
+    fused_gather_fold,
+    gather_xor,
+    indices_from_mask,
+    ops,
+    parity_matmul,
+    ref,
+    xor_fold,
+)
 
 SHAPES = [
     # (n records, record_bytes, q queries)
@@ -117,6 +126,82 @@ def test_server_paths_agree_end_to_end():
     sp = np.asarray(ops.server_answer_sparse(store.packed, mask, theta=0.4))
     np.testing.assert_array_equal(fold, par)
     np.testing.assert_array_equal(fold, sp)
+
+
+# --------------------------------------------------------------------------
+# Fused gather→xor→fold (the one-kernel Sparse-PIR answer): must be
+# bit-identical to BOTH halves it replaces — the indices_from_mask +
+# gather_xor streaming pair and the dense xor_fold — and to the jnp
+# oracle. Single-record and non-pow2 edge shapes ride the same sweep.
+# --------------------------------------------------------------------------
+EDGE_SHAPES = [
+    # (n records, record_bytes, q queries) — single-record/single-query
+    # degenerate corners the bucketed serving path can still produce
+    (1, 8, 1),
+    (1, 24, 5),
+    (2, 4, 1),
+    (7, 129, 1),
+]
+
+
+@pytest.mark.parametrize("n,rb,q", SHAPES + EDGE_SHAPES)
+def test_fused_matches_oracle_and_unfused_pair(n, rb, q):
+    store, mask = _case(n, rb, q)
+    idx = indices_from_mask(mask, n)  # m = n: no truncation, fold comparable
+    want = np.asarray(ref.gather_xor_ref(store.packed, idx))
+    got = np.asarray(fused_gather_fold(store.packed, idx, interpret=True))
+    np.testing.assert_array_equal(got, want)
+    # the composition the fused kernel replaces, both halves:
+    np.testing.assert_array_equal(
+        got, np.asarray(gather_xor(store.packed, idx, interpret=True))
+    )
+    np.testing.assert_array_equal(
+        got, np.asarray(xor_fold(store.packed, mask, interpret=True))
+    )
+
+
+@pytest.mark.parametrize("block_w", [8, 32, 128])
+def test_fused_block_sweep(block_w):
+    store, mask = _case(211, 21, 6, seed=4)
+    idx = indices_from_mask(mask, 120)
+    want = np.asarray(ref.gather_xor_ref(store.packed, idx))
+    got = np.asarray(
+        fused_gather_fold(store.packed, idx, block_w=block_w, interpret=True)
+    )
+    np.testing.assert_array_equal(got, want)
+
+
+def test_fused_all_padding_rows():
+    store, _ = _case(64, 8, 2)
+    idx = jnp.full((2, 16), -1, jnp.int32)
+    got = np.asarray(fused_gather_fold(store.packed, idx, interpret=True))
+    np.testing.assert_array_equal(got, 0)
+
+
+def test_fused_truncated_budget_matches_pair():
+    """With m below the row weight the fused kernel and the streaming
+    pair see the SAME truncated index set — identical answers even in
+    the overflow regime the budget makes negligible."""
+    store, mask = _case(90, 10, 4, seed=9)
+    idx = indices_from_mask(mask, 8)
+    np.testing.assert_array_equal(
+        np.asarray(fused_gather_fold(store.packed, idx, interpret=True)),
+        np.asarray(gather_xor(store.packed, idx, interpret=True)),
+    )
+
+
+def test_fused_block_w_vmem_gate():
+    # fits: tiny store keeps the full default block
+    assert fused_block_w(256, 16) == 16
+    assert fused_block_w(4096, 512) == 128  # capped at the default block
+    # shrinks to fit: 64k records × 128 words × 4 B = 32 MiB > budget
+    assert 0 < fused_block_w(65536, 128) < 128
+    # nothing fits at CT scale on one host -> 0 = fall back to the pair
+    assert fused_block_w(10**6, 384) == 0
+    # non-pow2 W rounds DOWN to a power of two before shrinking, and the
+    # min(8, W) floor holds: no lane-starved sliver blocks ever escape
+    assert fused_block_w(200_000, 12) == 8   # 8-word slab (6.4 MB) fits
+    assert fused_block_w(300_000, 12) == 0   # 8-word slab doesn't -> pair
 
 
 def test_sparse_index_budget_bounds():

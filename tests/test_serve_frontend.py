@@ -39,6 +39,79 @@ def make_pipe(n=256, cached=False, max_batch=64, max_wait_s=0.0, **kw):
     )
 
 
+# --------------------------------------------------------- double buffering
+@pytest.mark.parametrize("double_buffer", [True, False])
+def test_double_buffered_flush_exact_over_many_batches(double_buffer):
+    """The double-buffered flush (plan batch k+1 while batch k's
+    ExecutionPlan runs) must stay bit-exact across a long run of
+    back-to-back batches — same records as the single-threaded flush it
+    replaces, every future resolved."""
+    pipe = make_pipe(n=512, max_batch=16)
+    queries = [(i * 13) % 512 for i in range(160)]
+    with AsyncFrontend(
+        pipe, ingest_workers=2, queue_limit=1024, shed_policy="block",
+        double_buffer=double_buffer,
+    ) as fe:
+        futs = [fe.submit(f"c{i % 6}", q) for i, q in enumerate(queries)]
+        assert fe.drain(timeout=60.0)
+        for q, fut in zip(queries, futs):
+            np.testing.assert_array_equal(
+                fut.result(timeout=5.0), pipe.store.record_bytes(q)
+            )
+    assert fe.metrics["served"] == len(queries)
+    assert fe.metrics["failed"] == 0
+    # the engine really cut multiple batches (the overlap was exercised)
+    assert pipe.metrics["batches"] >= len(queries) // 16
+
+
+def test_double_buffer_executor_lifecycle():
+    """The one-slot execute stage spins up on start and is torn down by
+    close (drain included), with the in-flight batch settled."""
+    pipe = make_pipe(n=128, max_batch=8)
+    fe = AsyncFrontend(pipe, double_buffer=True).start()
+    assert fe._executor is not None
+    fut = fe.submit("a", 17)
+    fe.close(drain=True)
+    np.testing.assert_array_equal(
+        fut.result(timeout=5.0), pipe.store.record_bytes(17)
+    )
+    assert fe._executor is None
+    # single-threaded mode never creates the executor
+    pipe2 = make_pipe(n=128, max_batch=8)
+    fe2 = AsyncFrontend(pipe2, double_buffer=False).start()
+    assert fe2._executor is None
+    fe2.close()
+
+
+def test_double_buffer_serve_error_fails_only_that_batch(monkeypatch):
+    """An execute-stage failure fails exactly the in-flight batch's
+    futures; the flush worker keeps planning and serving later batches."""
+    pipe = make_pipe(n=64, max_batch=4)
+    boom = {"armed": True}
+    real = pipe.execute_planned
+
+    def flaky(planned):
+        if boom.pop("armed", False):
+            raise RuntimeError("kernel exploded")
+        return real(planned)
+
+    monkeypatch.setattr(pipe, "execute_planned", flaky)
+    with AsyncFrontend(
+        pipe, queue_limit=64, shed_policy="block", double_buffer=True
+    ) as fe:
+        first = [fe.submit(f"a{i}", i) for i in range(4)]
+        assert fe.drain(timeout=30.0)
+        second = [fe.submit(f"b{i}", i) for i in range(4)]
+        assert fe.drain(timeout=30.0)
+    failed = sum(1 for f in first if f.exception() is not None)
+    assert failed == 4  # the armed batch failed as a unit
+    for i, f in enumerate(second):
+        np.testing.assert_array_equal(
+            f.result(timeout=5.0), pipe.store.record_bytes(i)
+        )
+    assert fe.metrics["failed"] == 4
+
+
 # ------------------------------------------------------------- concurrency
 @pytest.mark.parametrize("cached", [False, True])
 def test_concurrent_submitters_get_exact_records(cached):
@@ -202,7 +275,10 @@ def test_serve_error_fails_batch_but_front_survives(monkeypatch):
         return orig(batch)
 
     monkeypatch.setattr(pipe, "serve_requests", flaky)
-    with AsyncFrontend(pipe, ingest_workers=1) as fe:
+    # single-threaded flush is the path that calls serve_requests inline;
+    # the double-buffered equivalent is
+    # test_double_buffer_serve_error_fails_only_that_batch
+    with AsyncFrontend(pipe, ingest_workers=1, double_buffer=False) as fe:
         bad = fe.submit("c", 1)
         assert fe.drain(timeout=30.0)
         with pytest.raises(RuntimeError, match="replica fire"):

@@ -204,6 +204,47 @@ def test_pipeline_parity_path_above_crossover():
         assert (out[f"c{i}"] == store.record_bytes(i * 7 % 128)).all()
 
 
+def test_latency_ema_observed_for_every_scheme_consumed_by_subset_only():
+    """Pins the straggler-tracking contract (serve/sharded.py module
+    docstring): answer_batch feeds the per-replica latency EMA for EVERY
+    scheme — not just Subset-PIR — so the ranking is warm before any
+    subset traffic arrives; but only Subset-PIR's query() ever consumes
+    the fastest-t ranking (other schemes contact all d replicas even
+    when the EMAs say some are slow)."""
+    store = make_synthetic_store(128, 16, seed=9)
+    # the straggler's simulated latency towers over the first-flush jit
+    # compile that lands in server 0's opening EMA sample
+    lat = {i: (0.5 if i == 1 else 0.001) for i in range(4)}
+
+    # observation: a chor pipeline (no subset anywhere) still feeds EMAs
+    pipe = ServingPipeline(
+        store, make_scheme("chor", d=4, d_a=2),
+        simulate_latency=lambda s: lat[s],
+    )
+    for _ in range(3):
+        pipe.submit("c", 7)
+        out = pipe.flush()
+    assert (out["c"] == store.record_bytes(7)).all()
+    assert all(pipe.stats[i].n == 3 for i in range(4))  # every replica fed
+    assert pipe.stats[1].ema_s > pipe.stats[0].ema_s
+    assert 1 not in pipe.fastest_servers(3)  # ranking reflects the EMAs
+
+    # ...but consumption is subset-only: chor still contacts all 4
+    routed = pipe.router.plan(jax.random.key(0), store.n, jnp.array([7]))
+    assert routed.servers == (0, 1, 2, 3)
+
+    # while a subset pipeline's contact set excludes the straggler
+    sub = ServingPipeline(
+        store, make_scheme("subset", d=4, d_a=2, t=2),
+        simulate_latency=lambda s: lat[s],
+    )
+    for _ in range(4):
+        sub.submit("c", 3)
+        sub.flush()
+    routed = sub.router.plan(jax.random.key(1), store.n, jnp.array([3]))
+    assert 1 not in routed.servers and len(routed.servers) == 2
+
+
 def test_pipeline_poll_serves_on_target_or_deadline():
     store = make_synthetic_store(64, 8, seed=3)
     now = itertools.count()

@@ -207,8 +207,8 @@ def test_cache_replay_leaks_nothing_beyond_first_query():
     )
     wire = []  # every payload any server ever receives
     orig = pipe.backend.answer_batch
-    pipe.backend.answer_batch = lambda routed: (
-        wire.append(routed.payload), orig(routed)
+    pipe.backend.answer_batch = lambda routed, **kw: (
+        wire.append(routed.payload), orig(routed, **kw)
     )[1]
 
     for _ in range(1 + k_replays):

@@ -1,8 +1,9 @@
 #!/usr/bin/env python
 """API-boundary checker (CI step): the staged SchemeProtocol is the only
-door to the per-scheme wire internals.
+door to the per-scheme wire internals, and the execution-backend layer
+is the only door to the kernel internals.
 
-Two passes:
+Three passes:
 
 1. **Protocol boundary** — no library module outside ``repro.core``
    (i.e. under src/repro but not src/repro/core), and no benchmark or
@@ -13,11 +14,21 @@ Two passes:
    (``build_scheme`` / ``Anonymized`` / the scheme classes) or the
    back-compat ``Scheme`` facade. tests/ are exempt — the conformance
    and wire-level unit suites deliberately pin the internals.
-2. **__all__ consistency** — every ``repro.*`` module that declares
+2. **Kernel boundary** — same rule for the kernel internals behind the
+   execution-backend layer (DESIGN.md §Execution backends): no module
+   outside ``repro.kernels`` may import the raw kernel modules
+   (``repro.kernels.gather_xor`` / ``xor_fold`` / ``parity_matmul`` /
+   ``fused``) or pull ``gather_xor``/``xor_fold``/``parity_matmul``/
+   ``fused_gather_fold`` from the package. Kernel choice flows through
+   ``repro.kernels.backend`` (ExecutionPlan/KernelPlanner) or the
+   ``repro.kernels.ops`` wrappers; the ``ref`` oracles and
+   ``indices_from_mask`` stay public (they are the correctness ground
+   truth and the mask→index utility, not kernel choices).
+3. **__all__ consistency** — every ``repro.*`` module that declares
    ``__all__`` must actually define each listed name, with no
    duplicates.
 
-Exit status 0 iff both passes are clean; failures print one per line.
+Exit status 0 iff all passes are clean; failures print one per line.
 Run: ``python tools/check_api.py``.
 """
 
@@ -27,7 +38,7 @@ import ast
 import importlib
 import pathlib
 import sys
-from typing import List
+from typing import List, Set
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 SRC = ROOT / "src"
@@ -36,6 +47,14 @@ sys.path.insert(0, str(SRC))
 # the per-scheme wire modules fenced behind the protocol registry
 INTERNAL = {"chor", "sparse", "direct", "subset"}
 INTERNAL_MODULES = {f"repro.core.{m}" for m in INTERNAL}
+
+# the raw kernel modules fenced behind the execution-backend layer
+KERNEL_INTERNAL = {"gather_xor", "xor_fold", "parity_matmul", "fused"}
+KERNEL_INTERNAL_MODULES = {f"repro.kernels.{m}" for m in KERNEL_INTERNAL}
+# names that must not be pulled from the repro.kernels package either:
+# the kernel functions AND the submodules themselves (`from repro.kernels
+# import fused` is the same breach as `import repro.kernels.fused`)
+KERNEL_INTERNAL_NAMES = KERNEL_INTERNAL | {"fused_gather_fold"}
 
 SKIP_DIRS = {".git", "__pycache__", ".pytest_cache"}
 
@@ -46,17 +65,26 @@ def iter_py(root: pathlib.Path):
             yield path
 
 
-def _violations_in(tree: ast.AST, package: str) -> List[str]:
+def _violations_in(
+    tree: ast.AST,
+    package: str,
+    internal_modules: Set[str],
+    parent_pkg: str,
+    internal_names: Set[str],
+) -> List[str]:
     """Names of fenced modules a parsed file imports.
 
     ``package`` is the file's own package (e.g. "repro.serve"), used to
     resolve relative imports — ``from ..core import chor`` inside
-    repro.serve is the same breach as the absolute spelling."""
+    repro.serve is the same breach as the absolute spelling.
+    ``internal_names`` are names that count as a breach when pulled
+    straight from ``parent_pkg`` (``from repro.kernels import
+    xor_fold``)."""
     bad = []
     for node in ast.walk(tree):
         if isinstance(node, ast.Import):
             for alias in node.names:
-                if alias.name in INTERNAL_MODULES:
+                if alias.name in internal_modules:
                     bad.append(alias.name)
         elif isinstance(node, ast.ImportFrom):
             mod = node.module or ""
@@ -66,29 +94,34 @@ def _violations_in(tree: ast.AST, package: str) -> List[str]:
                     continue  # would not import at runtime either
                 base = parts[: len(parts) - (node.level - 1)]
                 mod = ".".join(base + ([mod] if mod else []))
-            if mod in INTERNAL_MODULES or any(
-                mod.startswith(m + ".") for m in INTERNAL_MODULES
+            if mod in internal_modules or any(
+                mod.startswith(m + ".") for m in internal_modules
             ):
                 bad.append(mod)
-            elif mod == "repro.core":
+            elif mod == parent_pkg:
                 bad.extend(
-                    f"repro.core.{a.name}"
+                    f"{parent_pkg}.{a.name}"
                     for a in node.names
-                    if a.name in INTERNAL
+                    if a.name in internal_names
                 )
     return bad
 
 
-def check_protocol_boundary() -> List[str]:
+def _check_fence(
+    fence_exempt: pathlib.Path,
+    internal_modules: Set[str],
+    parent_pkg: str,
+    internal_names: Set[str],
+    hint: str,
+) -> List[str]:
     errors = []
     scopes = [SRC / "repro", ROOT / "benchmarks", ROOT / "examples"]
-    fence_exempt = SRC / "repro" / "core"
     for scope in scopes:
         if not scope.is_dir():
             continue
         for path in iter_py(scope):
             if fence_exempt in path.parents:
-                continue  # repro.core owns its internals
+                continue  # the fenced package owns its internals
             tree = ast.parse(path.read_text(encoding="utf-8"))
             rel = path.relative_to(ROOT)
             if scope == SRC / "repro":
@@ -99,13 +132,33 @@ def check_protocol_boundary() -> List[str]:
                 package = ".".join(parts[:-1])
             else:  # benchmarks/examples are not packages
                 package = ""
-            for mod in _violations_in(tree, package):
-                errors.append(
-                    f"{rel}: imports per-scheme internal {mod!r} — use "
-                    f"repro.core.protocol (registry/Anonymized) or the "
-                    f"Scheme facade instead"
-                )
+            for mod in _violations_in(
+                tree, package, internal_modules, parent_pkg, internal_names
+            ):
+                errors.append(f"{rel}: imports internal {mod!r} — {hint}")
     return errors
+
+
+def check_protocol_boundary() -> List[str]:
+    return _check_fence(
+        SRC / "repro" / "core",
+        INTERNAL_MODULES,
+        "repro.core",
+        INTERNAL,
+        "use repro.core.protocol (registry/Anonymized) or the Scheme "
+        "facade instead",
+    )
+
+
+def check_kernel_boundary() -> List[str]:
+    return _check_fence(
+        SRC / "repro" / "kernels",
+        KERNEL_INTERNAL_MODULES,
+        "repro.kernels",
+        KERNEL_INTERNAL_NAMES,
+        "kernel choice flows through repro.kernels.backend "
+        "(ExecutionPlan/KernelPlanner) or repro.kernels.ops",
+    )
 
 
 def check_all_consistency() -> List[str]:
@@ -141,7 +194,11 @@ def check_all_consistency() -> List[str]:
 
 
 def main() -> int:
-    errors = check_protocol_boundary() + check_all_consistency()
+    errors = (
+        check_protocol_boundary()
+        + check_kernel_boundary()
+        + check_all_consistency()
+    )
     for err in errors:
         print(err)
     print(
