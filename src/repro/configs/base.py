@@ -163,3 +163,8 @@ class PIRConfig:
     # §Execution backends)
     backend: str = "auto"             # registered backend: auto|pallas|ref
     autotune_file: str = ""           # JSON autotune table to load; "" = cold
+    # fleet harness (repro.fleet, DESIGN.md §Fleet harness)
+    heartbeat_timeout_s: float = 30.0  # replica declared dead past this
+    fleet_clients: int = 10_000       # simulated client sessions per run
+    fleet_zipf_a: float = 1.3         # record-popularity skew
+    fleet_repoll_p: float = 0.2       # P(client re-polls its own record)

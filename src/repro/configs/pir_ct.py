@@ -33,7 +33,8 @@ SHAPES = (
 
 def reduced() -> PIRConfig:
     return dataclasses.replace(
-        CONFIG, n_records=2048, record_bytes=64, d=4, d_a=2, query_batch=8, u=16
+        CONFIG, n_records=2048, record_bytes=64, d=4, d_a=2, query_batch=8,
+        u=16, heartbeat_timeout_s=0.1, fleet_clients=256,
     )
 
 
@@ -109,4 +110,20 @@ def make_async_frontend(cfg: PIRConfig = CONFIG, store=None, **kw):
         make_serving_pipeline(cfg, store=store, **kw),
         ingest_workers=cfg.ingest_workers,
         queue_limit=cfg.queue_limit,
+    )
+
+
+def make_fleet_population(cfg: PIRConfig = CONFIG, budget_queries=None, seed=0):
+    """PIRConfig -> repro.fleet.ClientPopulation sized for the config's
+    store (DESIGN.md §Fleet harness). ``budget_queries=(lo, hi)`` puts
+    every client on a finite allowance drawn at the pipeline's price."""
+    from repro.fleet import ClientPopulation
+
+    return ClientPopulation(
+        n_clients=cfg.fleet_clients,
+        n_records=cfg.n_records,
+        zipf_a=cfg.fleet_zipf_a,
+        repoll_p=cfg.fleet_repoll_p,
+        budget_queries=budget_queries,
+        seed=seed,
     )

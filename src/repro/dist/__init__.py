@@ -18,7 +18,13 @@ from repro.dist.collectives import (
     sharded_vocab_lookup,
     xor_psum,
 )
-from repro.dist.fault import FleetState, pir_degraded_privacy, plan_elastic_remesh
+from repro.dist.fault import (
+    FleetState,
+    HeartbeatMonitor,
+    pir_degraded_privacy,
+    plan_elastic_remesh,
+    scheme_degradation,
+)
 # the function shadows the submodule attribute on purpose: `from repro.dist
 # import flash_decode` gives the callable; the module stays importable as
 # `repro.dist.flash_decode` via sys.modules
@@ -44,6 +50,7 @@ __all__ = [
     "DEFAULT_RULES",
     "MULTIPOD_RULES",
     "FleetState",
+    "HeartbeatMonitor",
     "axis_size",
     "collectives",
     "compressed_psum",
@@ -62,6 +69,7 @@ __all__ = [
     "pir_degraded_privacy",
     "plan_elastic_remesh",
     "quantize_int8",
+    "scheme_degradation",
     "sharded_record_lookup",
     "sharded_table_lookup",
     "sharded_vocab_lookup",

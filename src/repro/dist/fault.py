@@ -16,13 +16,22 @@ tests/test_fault.py).
 :func:`plan_elastic_remesh` is the training-side analogue: survivors are
 reassembled into a smaller mesh (checkpoints are topology-free, see
 train.checkpoint) and the global batch rescales with pod count.
+
+The live-serving wiring (DESIGN.md §Fleet harness): a
+:class:`HeartbeatMonitor` turns raw heartbeats into alive→dead *edge*
+events and fires registered pipeline hooks exactly once per death;
+:func:`scheme_degradation` rebuilds a staged scheme for the survivor
+count and returns it together with its :func:`pir_degraded_privacy`
+accounting — the two are computed from the same closed forms and
+cross-checked at the call site, so the scheme the pipeline swaps in can
+never disagree with the ε it advertises.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.core import accounting
 
@@ -30,9 +39,11 @@ __all__ = [
     "POD_MESH_SHAPE",
     "POD_MESH_AXES",
     "FleetState",
+    "HeartbeatMonitor",
     "RemeshPlan",
     "plan_elastic_remesh",
     "pir_degraded_privacy",
+    "scheme_degradation",
 ]
 
 # One production pod (repro.launch.mesh): 16×16 chips, ("data", "model").
@@ -61,14 +72,67 @@ class FleetState:
         self.last_beat[pod] = max(now, self.last_beat.get(pod, -math.inf))
 
     def _alive(self, pod: int, now: float) -> bool:
+        # half-open window [last, last + timeout): a beat landing exactly
+        # one timeout ago is already dead, deterministically — a closed
+        # boundary would flap alive/dead across callers sampling `now`
+        # microseconds apart (tests/test_fault.py pins the boundary)
         last = self.last_beat.get(pod)
-        return last is not None and now - last <= self.heartbeat_timeout_s
+        return last is not None and now - last < self.heartbeat_timeout_s
 
     def alive_pods(self, now: float) -> List[int]:
         return [p for p in range(self.n_pods) if self._alive(p, now)]
 
     def dead_pods(self, now: float) -> List[int]:
         return [p for p in range(self.n_pods) if not self._alive(p, now)]
+
+
+class HeartbeatMonitor:
+    """Edge-detecting liveness monitor: :class:`FleetState` + pipeline hooks.
+
+    :class:`FleetState` answers "who is alive *now*"; the serving side
+    needs the *transition* — a replica that WAS alive and stopped beating.
+    ``poll(now)`` fires every registered ``on_failure(newly_dead, alive)``
+    callback exactly once per death edge (typically
+    ``ServingPipeline.degrade_replicas``, which remeshes and re-prices ε).
+    A pod that has never heartbeated is dead per FleetState's conservative
+    rule but fires no failure edge — a booting fleet must prove liveness
+    before its silence means loss. A revival (fresh heartbeat after a
+    reported death) re-arms the edge, so a flapping replica reports each
+    distinct death.
+    """
+
+    def __init__(self, n_pods: int, *, heartbeat_timeout_s: float = 30.0):
+        self.state = FleetState(n_pods, heartbeat_timeout_s)
+        self._seen_alive: Set[int] = set()
+        self._reported_dead: Set[int] = set()
+        self._callbacks: List[Callable[[List[int], List[int]], None]] = []
+
+    def on_failure(
+        self, callback: Callable[[List[int], List[int]], None]
+    ) -> None:
+        """Register ``callback(newly_dead, alive_now)``; fired from
+        :meth:`poll` on each death edge, in registration order."""
+        self._callbacks.append(callback)
+
+    def heartbeat(self, pod: int, now: float) -> None:
+        self.state.heartbeat(pod, now)
+        self._seen_alive.add(pod)
+        self._reported_dead.discard(pod)  # revival re-arms the death edge
+
+    def poll(self, now: float) -> List[int]:
+        """Detect death edges at ``now``; returns the newly-dead pods
+        (after firing the callbacks — callbacks see a consistent world
+        where the deaths have already been recorded)."""
+        dead = [
+            p for p in self.state.dead_pods(now) if p in self._seen_alive
+        ]
+        newly = [p for p in dead if p not in self._reported_dead]
+        if newly:
+            self._reported_dead.update(newly)
+            alive = self.state.alive_pods(now)
+            for cb in self._callbacks:
+                cb(list(newly), list(alive))
+        return newly
 
 
 # --------------------------------------------------------------------------
@@ -143,30 +207,114 @@ def pir_degraded_privacy(
         out.update(serviceable=0.0, epsilon=math.inf)
         return out
 
+    # "as-<base>" = the base scheme behind a u-user anonymity system: the
+    # base ε degrades with d' exactly as below, then the Composition Lemma
+    # applies unchanged (the AS does not shrink with the fleet). For
+    # direct this reproduces Security Thm 2 exactly: e^{2ε_direct} is the
+    # squared ratio inside epsilon_as_direct.
     scheme = scheme.lower()
-    if scheme in ("chor", "it-pir"):
+    anon = scheme.startswith("as-")
+    base = scheme[3:] if anon else scheme
+    if base in ("chor", "it-pir"):
         # information-theoretic: perfect while ≥ 1 honest server survives
         eps = 0.0
-    elif scheme in ("sparse", "as-sparse"):
+    elif base == "sparse":
         if theta is None:
             raise ValueError("sparse schemes need theta")
         eps = accounting.epsilon_sparse(theta, d_eff, d_a)
-        if scheme == "as-sparse":
-            eps = accounting.compose_with_anonymity(eps, u)
-    elif scheme in ("direct", "as-direct"):
+    elif base == "direct":
         if p is None:
             raise ValueError("direct schemes need p")
-        if scheme == "direct":
-            eps = accounting.epsilon_direct(n, d_eff, d_a, p)
-        else:
-            eps = accounting.epsilon_as_direct(n, d_eff, d_a, p, u)
-    elif scheme == "subset":
+        eps = accounting.epsilon_direct(n, d_eff, d_a, p)
+    elif base == "subset":
         if t is None:
             raise ValueError("subset needs t")
         eps = 0.0
         out["delta"] = accounting.delta_subset(d_eff, d_a, min(t, d_eff))
     else:
         raise ValueError(f"unknown scheme {scheme!r}")
+    if anon:
+        eps = accounting.compose_with_anonymity(eps, u)
 
     out.update(serviceable=1.0, epsilon=eps)
     return out
+
+
+def scheme_degradation(
+    scheme: Any, n: int, failed: int
+) -> Tuple[Optional[Any], Dict[str, float]]:
+    """Rebuild a staged scheme for d' = d − failed survivors, with its
+    degraded privacy accounted.
+
+    The ops side of :func:`pir_degraded_privacy`: given the scheme a
+    pipeline is serving (a staged SchemeProtocol instance, including
+    ``Anonymized`` wrappers, or the back-compat facade), return
+    ``(degraded_scheme, info)`` where ``info`` is the
+    :func:`pir_degraded_privacy` dict and ``degraded_scheme`` is a fresh
+    registry-built instance at d' — or None when unserviceable
+    (d' ≤ d_a, or a survivor count the scheme cannot run on at all).
+
+    Parameters constrained by the server count are re-fitted to d' and
+    the accounting uses the *re-fitted* values: Subset-PIR's ``t`` clamps
+    to the survivors (δ re-priced for the smaller pool), Direct's ``p``
+    rounds down to a multiple of d' (dummy budget re-partitioned; fewer
+    dummies ⇒ the ε the survivors actually provide). The returned
+    scheme's own ``privacy(n)`` therefore equals ``info["epsilon"]`` /
+    ``info["delta"]`` exactly — verified here, so the scheme a pipeline
+    swaps in can never disagree with the ε it accounts
+    (tests/test_fault.py pins the equality per scheme).
+    """
+    from repro.core.protocol import Anonymized, as_protocol, build_scheme
+
+    proto = as_protocol(scheme)
+    u = None
+    if isinstance(proto, Anonymized):
+        u = int(proto.u)
+        proto = as_protocol(proto.base)
+    d, d_a = int(proto.d), int(proto.d_a)
+    if not (0 <= failed <= d):
+        raise ValueError(f"need 0 <= failed <= d, got failed={failed}, d={d}")
+    d_eff = d - failed
+    name = proto.name
+    params = {
+        f.name: getattr(proto, f.name)
+        for f in dataclasses.fields(proto)
+        if f.name not in ("d", "d_a") and getattr(proto, f.name) is not None
+    }
+
+    dead = {
+        "d_effective": float(d_eff), "delta": 0.0,
+        "serviceable": 0.0, "epsilon": math.inf,
+    }
+    if d_eff <= d_a or d_eff < 1:
+        return None, dead
+    if name == "subset" and d_eff < 2:
+        # subset needs ≥ 2 servers to contact; one survivor can't run it
+        return None, dead
+
+    if name == "subset" and "t" in params:
+        params["t"] = max(2, min(int(params["t"]), d_eff))
+    if name == "direct" and "p" in params:
+        p0 = int(params["p"])
+        params["p"] = max(d_eff, p0 - p0 % d_eff)
+
+    full_name = f"as-{name}" if u is not None else name
+    kw = dict(params)
+    if u is not None:
+        kw["u"] = u
+    degraded = build_scheme(full_name, d_eff, d_a, **kw)
+    info = pir_degraded_privacy(
+        d=d, d_a=d_a, failed=failed, scheme=full_name, n=n,
+        theta=params.get("theta"), p=params.get("p"), t=params.get("t"),
+        u=u if u is not None else 1,
+    )
+    eps, delta = degraded.privacy(n)
+    if not (
+        math.isclose(eps, info["epsilon"], rel_tol=1e-9, abs_tol=1e-12)
+        and math.isclose(delta, info["delta"], rel_tol=1e-9, abs_tol=1e-12)
+    ):
+        raise RuntimeError(
+            f"degraded scheme privacy {(eps, delta)} disagrees with "
+            f"pir_degraded_privacy {info!r} for {full_name} at d'={d_eff}"
+        )
+    return degraded, info

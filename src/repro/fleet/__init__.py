@@ -1,0 +1,60 @@
+"""repro.fleet — fleet-scale load harness: open-loop traffic, per-client
+budgets, SLO metrics, live fault injection (DESIGN.md §Fleet harness).
+
+The paper's headline claim is a *fleet-scale* claim — weak ε-private
+schemes become arbitrarily safe composed with large anonymity systems —
+so the serving stack has to be measured the way a fleet actually runs:
+open-loop arrival processes (Poisson / bursty / diurnal) driving the
+real ``AsyncFrontend → scheduler → router → sharded backend`` path,
+thousands of simulated clients each carrying their own (ε, δ) budget,
+and replicas dying mid-traffic. This package supplies exactly that and
+nothing else:
+
+* :mod:`~repro.fleet.arrivals` — deterministic open-loop arrival
+  processes (submit on schedule, never wait for answers — overload must
+  actually build queues).
+* :mod:`~repro.fleet.clients` — the simulated client population: ids,
+  zipf-ish index popularity with per-client hot-record re-polls (the
+  §2.2 correlated-query pattern), per-client budget installation.
+* :mod:`~repro.fleet.metrics` — the thread-safe SLO collector:
+  p50/p95/p99 latency, goodput, refusal rate, queue-depth and ε time
+  series.
+* :mod:`~repro.fleet.injector` — scripted replica kills driven through
+  the :class:`~repro.dist.fault.HeartbeatMonitor` while traffic flows.
+* :mod:`~repro.fleet.harness` — the driver tying them together into one
+  :class:`FleetScenario` run producing a :class:`FleetReport`.
+
+Layering: this package consumes the ``repro.serve`` and ``repro.dist``
+surfaces only — never ``repro.kernels`` (any module) and never the
+per-scheme ``repro.core`` wire internals (``tools/check_api.py`` fences
+both).
+"""
+
+from repro.fleet.arrivals import (
+    BurstyArrivals,
+    DiurnalArrivals,
+    PoissonArrivals,
+)
+from repro.fleet.clients import ClientPopulation
+from repro.fleet.harness import (
+    FleetHarness,
+    FleetReport,
+    FleetScenario,
+    run_scenario,
+)
+from repro.fleet.injector import FaultEvent, FaultInjector
+from repro.fleet.metrics import SLOCollector
+
+__all__ = [
+    "BurstyArrivals",
+    "ClientPopulation",
+    "DiurnalArrivals",
+    "FaultEvent",
+    "FaultInjector",
+    "FleetHarness",
+    "FleetReport",
+    "FleetScenario",
+    "PoissonArrivals",
+    "SLOCollector",
+    "run_scenario",
+]

@@ -57,6 +57,16 @@ short-circuits the server round-trip). L2 is bounded by
 ``max_pre_batches`` per bucket — a SparsePre for bucket B costs ≈ B·n·d
 bytes, so the pool depth, not the entry count, is the knob.
 
+Thread safety: one internal lock guards every structure mutation AND
+every ``metrics`` counter bump. The refusal memo is consulted by the
+frontend's concurrent admission threads while the flush/executor threads
+drive lookup/insert/pre — without the lock, the plain ``dict``
+read-modify-write increments lose updates under load (the counters are
+the observability surface the fleet harness's SLO math reads, so "close
+enough" counts are wrong counts; tests/test_serve_cache.py hammers for
+exactness). Reading ``metrics`` without the lock stays safe: ints are
+replaced, never mutated in place.
+
 The cache assumes the record store is immutable for its lifetime (the
 synthetic and CT stores are); call :meth:`QueryCache.invalidate` if the
 backing records ever change.
@@ -65,6 +75,7 @@ backing records ever change.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import OrderedDict, deque
 from typing import Any, Deque, Dict, Optional, Tuple
 
@@ -145,6 +156,9 @@ class QueryCache:
         self._pre: Dict[int, Deque[Any]] = {}
         # client -> the budget-state token its refusal was computed from
         self._refused: "OrderedDict[str, Tuple]" = OrderedDict()
+        # guards every structure mutation and metrics bump: admission
+        # threads (refusal memo) race the flush/executor threads (L1/L2)
+        self._mu = threading.Lock()
         self.metrics = {
             "hits": 0, "misses": 0, "insertions": 0, "evictions": 0,
             "pre_filled": 0, "pre_used": 0, "pre_dropped": 0,
@@ -152,21 +166,23 @@ class QueryCache:
         }
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._mu:
+            return len(self._entries)
 
     # ------------------------------------------------- L1: per-client memo
     def lookup(self, client: str, index: int) -> Optional[CacheEntry]:
         """Memo for exactly (client, index); None on miss. The key is the
         privacy rule: no cross-client, no cross-index reuse, ever."""
         key = (client, int(index))
-        entry = self._entries.get(key)
-        if entry is None:
-            self.metrics["misses"] += 1
-            return None
-        self._entries.move_to_end(key)  # LRU touch
-        entry.hits += 1
-        self.metrics["hits"] += 1
-        return entry
+        with self._mu:
+            entry = self._entries.get(key)
+            if entry is None:
+                self.metrics["misses"] += 1
+                return None
+            self._entries.move_to_end(key)  # LRU touch
+            entry.hits += 1
+            self.metrics["hits"] += 1
+            return entry
 
     def insert(
         self,
@@ -184,14 +200,15 @@ class QueryCache:
         ):
             query_cols = None
         key = (client, int(index))
-        self._entries[key] = CacheEntry(
-            query_cols=query_cols, answer=np.asarray(answer)
-        )
-        self._entries.move_to_end(key)
-        self.metrics["insertions"] += 1
-        while len(self._entries) > self.max_entries:
-            self._entries.popitem(last=False)
-            self.metrics["evictions"] += 1
+        with self._mu:
+            self._entries[key] = CacheEntry(
+                query_cols=query_cols, answer=np.asarray(answer)
+            )
+            self._entries.move_to_end(key)
+            self.metrics["insertions"] += 1
+            while len(self._entries) > self.max_entries:
+                self._entries.popitem(last=False)
+                self.metrics["evictions"] += 1
 
     # ----------------------------------------------- negative-result memo
     def note_refusal(self, client: str, token: Tuple) -> None:
@@ -202,21 +219,23 @@ class QueryCache:
         pure function of (token, price), so memoizing on the token is
         exact: any budget mutation changes the token and the memo
         misses. Advisory only: the memo never touches the budget."""
-        self._refused[client] = token
-        self._refused.move_to_end(client)
-        self.metrics["refusals_noted"] += 1
-        while len(self._refused) > self.max_refusal_entries:
-            self._refused.popitem(last=False)
+        with self._mu:
+            self._refused[client] = token
+            self._refused.move_to_end(client)
+            self.metrics["refusals_noted"] += 1
+            while len(self._refused) > self.max_refusal_entries:
+                self._refused.popitem(last=False)
 
     def refused(self, client: str, token: Tuple) -> bool:
         """True iff ``client`` is memoized as budget-exhausted for
         exactly this budget state (a changed token — top-up, shared-
         budget spend, fresh budget — is a miss, never a stale hit)."""
-        if self._refused.get(client) != token:
-            return False
-        self._refused.move_to_end(client)  # LRU touch
-        self.metrics["refusal_hits"] += 1
-        return True
+        with self._mu:
+            if self._refused.get(client) != token:
+                return False
+            self._refused.move_to_end(client)  # LRU touch
+            self.metrics["refusal_hits"] += 1
+            return True
 
     # --------------------------------------------- L2: single-use pre pool
     def put_pre(self, bucket: int, pre: Any) -> bool:
@@ -230,31 +249,35 @@ class QueryCache:
             raise ValueError(
                 f"pre built for batch {batch}, banked under bucket {bucket}"
             )
-        q = self._pre.setdefault(int(bucket), deque())
-        if len(q) >= self.max_pre_batches:
-            self.metrics["pre_dropped"] += 1
-            return False
-        q.append(pre)
-        self.metrics["pre_filled"] += 1
-        return True
+        with self._mu:
+            q = self._pre.setdefault(int(bucket), deque())
+            if len(q) >= self.max_pre_batches:
+                self.metrics["pre_dropped"] += 1
+                return False
+            q.append(pre)
+            self.metrics["pre_filled"] += 1
+            return True
 
     def take_pre(self, bucket: int) -> Optional[Any]:
         """Pop (consume) one precomputed batch for ``bucket``. Single-use:
         a popped pre can never be handed out again."""
-        q = self._pre.get(int(bucket))
-        if not q:
-            return None
-        self.metrics["pre_used"] += 1
-        return q.popleft()
+        with self._mu:
+            q = self._pre.get(int(bucket))
+            if not q:
+                return None
+            self.metrics["pre_used"] += 1
+            return q.popleft()
 
     def pre_depth(self, bucket: int) -> int:
-        return len(self._pre.get(int(bucket), ()))
+        with self._mu:
+            return len(self._pre.get(int(bucket), ()))
 
     # ------------------------------------------------------------- control
     def invalidate(self) -> None:
-        """Drop everything (backing store changed, budgets were reset, or
-        privacy review asked)."""
-        self._entries.clear()
-        self._pre.clear()
-        self._refused.clear()
-        self.metrics["invalidations"] += 1
+        """Drop everything (backing store changed, budgets were reset, the
+        scheme degraded under replica loss, or privacy review asked)."""
+        with self._mu:
+            self._entries.clear()
+            self._pre.clear()
+            self._refused.clear()
+            self.metrics["invalidations"] += 1

@@ -48,6 +48,11 @@ from repro.core.accounting import PrivacyBudget
 from repro.core.protocol import Queries, SchemeProtocol, as_protocol
 from repro.db import packing
 from repro.db.store import RecordStore
+from repro.dist.fault import (
+    RemeshPlan,
+    plan_elastic_remesh,
+    scheme_degradation,
+)
 from repro.kernels.backend import ExecutionPlan
 from repro.serve.cache import QueryCache, block_pre_ready, scheme_signature
 from repro.serve.router import SchemeRouter
@@ -127,15 +132,28 @@ class ServingPipeline:
         # device work in execute runs outside the lock; the sync path
         # takes it uncontended.
         self._phase_lock = threading.Lock()
-        # the per-query (ε, δ) price is constant for a pipeline (fixed
-        # scheme, fixed n): compute once so admission is O(1) float math
+        # the per-query (ε, δ) price is constant between remeshes (fixed
+        # scheme, fixed n): compute once so admission is O(1) float math;
+        # degrade_replicas re-prices it when survivors shrink the scheme
         self._eps_per_query, self._delta_per_query = self.staged.privacy(
             store.n
         )
+        # replica-loss state (DESIGN.md §Fleet harness): the healthy
+        # scheme is kept so cumulative failures always degrade from the
+        # original d, not from an already-degraded intermediate
+        self._base_staged: SchemeProtocol = self.staged
+        self._failed_replicas: set = set()
+        self._serviceable = True
+        self.last_remesh: Optional[RemeshPlan] = None
+        self.degraded: Optional[Dict[str, float]] = None
         self.metrics = {
             "queries": 0, "batches": 0, "records_touched": 0.0,
             "blocks_sent": 0.0, "refused": 0, "padded": 0, "truncated": 0,
-            "cache_hits": 0,
+            "cache_hits": 0, "remeshes": 0,
+            "d_effective": float(self.staged.d),
+            "epsilon_per_query": self._eps_per_query,
+            "delta_per_query": self._delta_per_query,
+            "unserviceable": 0,
         }
 
     # ------------------------------------------------------------ clients
@@ -143,6 +161,20 @@ class ServingPipeline:
         if client not in self._budgets:
             self._budgets[client] = self._default_budget()
         return self._budgets[client]
+
+    def set_budget(self, client: str, budget: PrivacyBudget) -> None:
+        """Install a per-client budget ahead of traffic. The fleet
+        harness gives each simulated client its own (ε, δ) allowance this
+        way; clients never installed fall back to ``default_budget`` on
+        first contact."""
+        self._budgets[client] = budget
+
+    @property
+    def price(self) -> Tuple[float, float]:
+        """The per-query (ε, δ) admission price currently charged.
+        Constant between remeshes; replica loss re-prices it through
+        :meth:`degrade_replicas` ((∞, δ) once unserviceable)."""
+        return self._eps_per_query, self._delta_per_query
 
     def _budget_token(self, client: str) -> tuple:
         """Hashable snapshot of the client's budget state. ``can_spend``
@@ -161,7 +193,15 @@ class ServingPipeline:
         from, so any budget change (top-up, shared-budget spend, a fresh
         budget behind a reused cache) re-consults the accountant — and
         (as always) a refusal spends nothing.
+
+        An unserviceable pipeline (replica loss left d' ≤ d_a: privacy
+        would rest entirely on corrupt servers) refuses everyone
+        unconditionally — an explicit flag, not an ∞ price, because the
+        default budget's ∞ limit would happily "afford" ∞.
         """
+        if not self._serviceable:
+            self.metrics["refused"] += 1
+            return None
         if self.cache is not None and self.cache.refused(
             client, self._budget_token(client)
         ):
@@ -187,6 +227,83 @@ class ServingPipeline:
     @property
     def stats(self) -> Dict[int, ServerStats]:
         return self.backend.stats
+
+    # ------------------------------------------------------- replica loss
+    def degrade_replicas(self, failed: List[int]) -> Dict[str, float]:
+        """Replica-loss hook (DESIGN.md §Fleet harness): degrade, don't
+        outage. Wired to :class:`~repro.dist.fault.HeartbeatMonitor`'s
+        failure edge by the fleet harness; callable directly by ops.
+
+        ``failed`` are replica ids of the *original* d-server deployment
+        (cumulative: ids union with prior losses; repeats are no-ops).
+        The pipeline (1) accounts the degradation —
+        :func:`~repro.dist.fault.scheme_degradation` re-fits the scheme
+        to the d' survivors and prices it with ``pir_degraded_privacy``;
+        (2) swaps in the degraded scheme, re-pricing admission at the new
+        (ε, δ); (3) relabels the backend's survivors and rebuilds the
+        router; (4) invalidates + re-signs the cache (old-d randomness is
+        unreplayable on the survivor wire); (5) records the
+        :func:`~repro.dist.fault.plan_elastic_remesh` plan. Once d' ≤
+        d_a the pipeline flips unserviceable and refuses all admission
+        (the paper's mandate: refuse, never serve at ε = ∞).
+
+        Batches planned before the swap still execute and resolve —
+        their wire bits went out under the old scheme, which was honestly
+        priced when their clients were admitted; degradation never drops
+        an in-flight future. Returns the degraded-privacy dict.
+        """
+        with self._phase_lock:
+            fresh = {int(f) for f in failed} - self._failed_replicas
+            if not fresh:
+                if self.degraded is not None:
+                    return dict(self.degraded)
+                return {
+                    "d_effective": float(self.staged.d), "serviceable": 1.0,
+                    "epsilon": self._eps_per_query,
+                    "delta": self._delta_per_query,
+                }
+            self._failed_replicas |= fresh
+            d0 = self._base_staged.d
+            survivors = [
+                r for r in range(d0) if r not in self._failed_replicas
+            ]
+            degraded_scheme, info = scheme_degradation(
+                self._base_staged, self.store.n, len(self._failed_replicas)
+            )
+            self.degraded = info
+            self.metrics["remeshes"] += 1
+            self.metrics["d_effective"] = info["d_effective"]
+            self.last_remesh = (
+                plan_elastic_remesh(survivors) if survivors else None
+            )
+            if degraded_scheme is None:
+                self._serviceable = False
+                self.metrics["unserviceable"] = 1
+                self._eps_per_query = float("inf")
+                self._delta_per_query = info["delta"]
+                self.metrics["epsilon_per_query"] = float("inf")
+                self.metrics["delta_per_query"] = info["delta"]
+                return dict(info)
+            self.scheme = self.staged = degraded_scheme
+            self._eps_per_query = info["epsilon"]
+            self._delta_per_query = info["delta"]
+            self.metrics["epsilon_per_query"] = self._eps_per_query
+            self.metrics["delta_per_query"] = self._delta_per_query
+            self.backend.relabel_replicas(survivors)
+            self.router = SchemeRouter(
+                self.staged, pick_servers=self.backend.fastest
+            )
+            if self.cache is not None:
+                # banked pres and memod columns were drawn for the old d
+                # and cannot be replayed on the survivor wire; the
+                # refusal memo goes too (budget tokens survive, but the
+                # price rose — re-consulting the accountant is the only
+                # safe direction)
+                self.cache.invalidate()
+                self.cache.signature = scheme_signature(
+                    degraded_scheme, self.store.n
+                )
+            return dict(info)
 
     def plan_requests(self, batch: List[Request]) -> Optional[PlannedBatch]:
         """Plan one cut batch without executing it: resolve cache hits,

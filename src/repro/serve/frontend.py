@@ -52,7 +52,10 @@ front of it (DESIGN.md §Async front):
 * **Graceful drain**: :meth:`drain` forces the backlog through (partial
   batches included) and blocks until every accepted future is resolved;
   ``close(drain=True)`` (also the context-manager exit) drains before
-  stopping. ``close(drain=False)`` cancels whatever is still unserved.
+  stopping. ``close(drain=False)`` cancels whatever is still unserved;
+  its wait for in-flight block-policy submitters to settle is bounded by
+  ``drain_timeout_s`` on the *scheduler's* injected clock, so fake-clock
+  tests control it like every other timeout in the stack.
 """
 
 from __future__ import annotations
@@ -89,6 +92,7 @@ class AsyncFrontend:
         queue_limit: int = 4096,
         shed_policy: str = "reject",
         idle_tick_s: float = 0.005,
+        drain_timeout_s: float = 1.0,
         prefill: bool = True,
         double_buffer: bool = True,
     ):
@@ -98,10 +102,15 @@ class AsyncFrontend:
             raise ValueError(f"need queue_limit >= 1, got {queue_limit}")
         if shed_policy not in ("reject", "block"):
             raise ValueError(f"shed_policy must be reject|block, got {shed_policy!r}")
+        if drain_timeout_s <= 0:
+            raise ValueError(
+                f"need drain_timeout_s > 0, got {drain_timeout_s}"
+            )
         self.pipeline = pipeline
         self.ingest_workers = ingest_workers
         self.shed_policy = shed_policy
         self.idle_tick_s = idle_tick_s
+        self.drain_timeout_s = drain_timeout_s
         self.prefill = prefill
         self.double_buffer = double_buffer
         self._executor: Optional[ThreadPoolExecutor] = None
@@ -245,9 +254,14 @@ class AsyncFrontend:
             self._executor = None
         # cancel anything that never got served (drain=False path); rescan
         # until in-flight block-policy submitters have either enqueued
-        # (each scan frees queue slots) or noticed the close and backed out
+        # (each scan frees queue slots) or noticed the close and backed
+        # out. The give-up deadline runs on the scheduler's injected
+        # clock — the same clock every other timeout in the stack reads —
+        # bounded by the configurable drain_timeout_s (a hardcoded
+        # wall-clock deadline here made fake-clock tests real-time-bound)
         leftovers: List[Future] = []
-        deadline = time.monotonic() + 1.0
+        clock = self.pipeline.scheduler.clock
+        deadline = clock() + self.drain_timeout_s
         while True:
             while True:
                 try:
@@ -260,7 +274,7 @@ class AsyncFrontend:
                         self._unadmitted -= 1
             with self._cv:
                 settled = self._unadmitted <= 0
-            if settled or time.monotonic() > deadline:
+            if settled or clock() > deadline:
                 break
             time.sleep(0.005)
         with self._cv:

@@ -171,6 +171,24 @@ class ShardedBackend:
         for i in range(d):
             self.stats.setdefault(i, ServerStats())
 
+    def relabel_replicas(self, survivors: List[int]) -> None:
+        """Compact the replica id space after loss: survivor ``s`` (old
+        id) becomes logical replica ``i`` (its rank in ``survivors`` —
+        mirroring :func:`~repro.dist.fault.plan_elastic_remesh`'s sorted
+        survivor tuple). Latency EMAs carry over under the new labels so
+        the straggler ranking stays warm across a remesh; dead replicas'
+        stats retire. The simulated-latency hook keeps seeing *physical*
+        ids — a simulated-slow machine stays slow whatever logical slot
+        the remesh parks it in."""
+        order = [int(s) for s in survivors]
+        self.stats = {
+            i: self.stats.get(s, ServerStats()) for i, s in enumerate(order)
+        }
+        if self._sim is not None:
+            phys = self._sim
+            m = tuple(order)
+            self._sim = lambda i: phys(m[i]) if 0 <= i < len(m) else phys(i)
+
     def observe_latency(self, server: int, dt: float) -> None:
         self.stats.setdefault(server, ServerStats()).observe(dt)
 

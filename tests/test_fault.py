@@ -6,7 +6,14 @@ import math
 import pytest
 
 from repro.core import accounting
-from repro.dist.fault import FleetState, pir_degraded_privacy, plan_elastic_remesh
+from repro.core.schemes import make_scheme
+from repro.dist.fault import (
+    FleetState,
+    HeartbeatMonitor,
+    pir_degraded_privacy,
+    plan_elastic_remesh,
+    scheme_degradation,
+)
 
 
 def test_fleet_heartbeats():
@@ -128,3 +135,86 @@ def test_fleet_drives_remesh_plan():
     assert plan2.survivors == (0, 2)
     assert plan2.mesh_shape == (2, 16, 16)
     assert plan2.global_batch_scale == 2.0
+
+def test_alive_window_is_half_open():
+    """Liveness is ``now - last < timeout`` — dead at *exactly* the
+    timeout boundary. The closed-interval variant (``<=``) would let a
+    replica flap alive/dead across polls scheduled exactly one timeout
+    apart, double-counting death edges downstream."""
+    f = FleetState(n_pods=1, heartbeat_timeout_s=10.0)
+    f.heartbeat(0, now=100.0)
+    assert f.alive_pods(now=109.9) == [0]
+    assert f.dead_pods(now=110.0) == [0]  # boundary: already dead
+    assert f.dead_pods(now=110.1) == [0]
+
+
+def test_monitor_never_beaten_pods_fire_no_edge():
+    mon = HeartbeatMonitor(3, heartbeat_timeout_s=1.0)
+    edges = []
+    mon.on_failure(lambda newly, alive: edges.append((newly, alive)))
+    mon.heartbeat(0, now=0.0)
+    # pods 1 and 2 never proved liveness: dead per FleetState, no edge
+    assert mon.state.dead_pods(now=5.0) == [0, 1, 2]
+    assert mon.poll(now=0.5) == []
+    assert edges == []
+
+
+def test_monitor_one_edge_per_death_and_revival_rearms():
+    mon = HeartbeatMonitor(2, heartbeat_timeout_s=1.0)
+    edges = []
+    mon.on_failure(lambda newly, alive: edges.append((newly, alive)))
+    mon.heartbeat(0, now=0.0)
+    mon.heartbeat(1, now=0.0)
+    assert mon.poll(now=0.5) == []
+    assert mon.poll(now=1.5) == [0, 1]   # both silent past the window
+    assert mon.poll(now=2.0) == []       # edge-triggered: no repeat
+    assert edges == [([0, 1], [])]
+    mon.heartbeat(1, now=3.0)            # revival re-arms pod 1's edge
+    assert mon.poll(now=3.1) == []
+    assert mon.poll(now=4.5) == [1]      # second death is its own edge
+    assert edges[-1] == ([1], [])
+
+
+def test_scheme_degradation_matches_own_privacy():
+    """The degraded scheme a pipeline swaps in must price exactly what
+    the info dict accounts — per scheme, including re-fitted params."""
+    n = 1000
+    cases = [
+        make_scheme("sparse", d=6, d_a=2, theta=0.25),
+        make_scheme("direct", d=6, d_a=2, p=12),
+        make_scheme("subset", d=6, d_a=2, t=5),
+        make_scheme("as-sparse", d=6, d_a=2, theta=0.25, u=64),
+        make_scheme("chor", d=6, d_a=2),
+    ]
+    for sch in cases:
+        degraded, info = scheme_degradation(sch, n, failed=2)
+        assert degraded is not None and info["serviceable"] == 1.0
+        assert info["d_effective"] == 4.0
+        eps, delta = degraded.privacy(n)
+        assert eps == pytest.approx(info["epsilon"])
+        assert delta == pytest.approx(info["delta"])
+
+
+def test_scheme_degradation_refits_t_and_p():
+    sub = make_scheme("subset", d=8, d_a=2, t=7)
+    degraded, info = scheme_degradation(sub, 1000, failed=4)
+    # t clamps to the 4 survivors; delta re-priced for the smaller pool
+    assert degraded.t == 4
+    assert info["delta"] == pytest.approx(accounting.delta_subset(4, 2, 4))
+    di = make_scheme("direct", d=8, d_a=2, p=16)
+    degraded, info = scheme_degradation(di, 1000, failed=3)
+    # p=16 rounds down to a positive multiple of d'=5
+    assert degraded.p == 15
+    assert info["epsilon"] == pytest.approx(
+        accounting.epsilon_direct(1000, 5, 2, 15)
+    )
+
+
+def test_scheme_degradation_unserviceable_returns_none():
+    sch = make_scheme("sparse", d=4, d_a=2, theta=0.25)
+    degraded, info = scheme_degradation(sch, 1000, failed=2)  # d' == d_a
+    assert degraded is None
+    assert info["serviceable"] == 0.0 and math.isinf(info["epsilon"])
+    sub = make_scheme("subset", d=4, d_a=1, t=3)
+    degraded, info = scheme_degradation(sub, 1000, failed=3)  # 1 survivor
+    assert degraded is None and info["serviceable"] == 0.0

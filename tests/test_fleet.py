@@ -1,0 +1,306 @@
+"""Fleet harness (DESIGN.md §Fleet harness): arrival processes are
+deterministic and rate-correct, client populations draw reproducible
+budgeted traffic, the SLO collector's counts stay exact, the injector →
+monitor → ``degrade_replicas`` signal path remeshes and re-prices ε at
+the Security-Theorem bound, and an end-to-end mini scenario finishes a
+mid-traffic replica kill with zero dropped futures."""
+
+import math
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import make_scheme
+from repro.core.accounting import PrivacyBudget
+from repro.db import make_synthetic_store
+from repro.dist.fault import HeartbeatMonitor, pir_degraded_privacy
+from repro.fleet import (
+    BurstyArrivals,
+    ClientPopulation,
+    DiurnalArrivals,
+    FaultEvent,
+    FaultInjector,
+    FleetScenario,
+    PoissonArrivals,
+    SLOCollector,
+    run_scenario,
+)
+from repro.serve import BatchScheduler, QueryCache, ServingPipeline
+
+
+# ----------------------------------------------------------------- arrivals
+def test_poisson_times_deterministic_sorted_and_rate_correct():
+    a = PoissonArrivals(rate_qps=500.0)
+    t1 = a.times(4.0, seed=3)
+    t2 = a.times(4.0, seed=3)
+    np.testing.assert_array_equal(t1, t2)  # same seed, same schedule
+    assert len(a.times(4.0, seed=4)) != 0 and not np.array_equal(
+        t1, a.times(4.0, seed=4)
+    )
+    assert np.all(np.diff(t1) >= 0) and t1[0] >= 0 and t1[-1] < 4.0
+    # λT = 2000; a Poisson count is within 5σ of its mean essentially always
+    assert abs(len(t1) - 2000) < 5 * math.sqrt(2000)
+
+
+def test_bursty_and_diurnal_rates_and_thinning():
+    b = BurstyArrivals(base_qps=50.0, burst_qps=500.0, period_s=1.0, duty=0.2)
+    assert b.peak_qps == 500.0
+    assert float(b.rate(np.array([0.1]))[0]) == 500.0   # inside the burst
+    assert float(b.rate(np.array([0.5]))[0]) == 50.0    # off-duty
+    t = b.times(10.0, seed=0)
+    # mean rate = 0.2*500 + 0.8*50 = 140 qps over 10 s
+    assert abs(len(t) - 1400) < 5 * math.sqrt(1400)
+    dr = DiurnalArrivals(mean_qps=100.0, amplitude=0.8, period_s=2.0)
+    assert dr.peak_qps == pytest.approx(180.0)
+    r = dr.rate(np.linspace(0, 2.0, 101))
+    assert float(r.min()) >= 100.0 * 0.2 - 1e-9  # never negative
+    t = dr.times(20.0, seed=1)
+    assert abs(len(t) - 2000) < 5 * math.sqrt(2000)
+
+
+def test_arrival_validation():
+    with pytest.raises(ValueError):
+        PoissonArrivals(rate_qps=0.0)
+    with pytest.raises(ValueError):
+        BurstyArrivals(base_qps=10.0, burst_qps=50.0, duty=1.5)
+    with pytest.raises(ValueError):
+        DiurnalArrivals(mean_qps=10.0, amplitude=1.5)
+
+
+# ------------------------------------------------------------------ clients
+def test_population_draw_deterministic_and_in_range():
+    pop = ClientPopulation(n_clients=50, n_records=128, seed=5)
+    d1 = pop.draw(500, seed=9)
+    assert d1 == pop.draw(500, seed=9)
+    clients = {c for c, _ in d1}
+    assert clients <= {pop.client(i) for i in range(50)}
+    assert all(0 <= q < 128 for _, q in d1)
+    # the re-poll mix actually lands clients on their own hot record
+    hot_hits = sum(
+        1 for c, q in d1 if q == pop.hot_index(int(c[1:]))
+    )
+    assert hot_hits > 0
+
+
+def test_population_installs_budgets_at_pipeline_price():
+    store = make_synthetic_store(64, 8, seed=0)
+    sch = make_scheme("sparse", d=4, d_a=2, theta=0.25)
+    pipe = ServingPipeline(store, sch)
+    eps_q = pipe.price[0]
+    pop = ClientPopulation(
+        n_clients=10, n_records=64, budget_queries=(2, 2), seed=1
+    )
+    assert pop.install_budgets(pipe) == 10
+    b = pipe.budget(pop.client(0))
+    assert b.epsilon_limit == pytest.approx(2 * eps_q)
+    # exactly 2 queries affordable, the 3rd refused
+    assert pipe.submit(pop.client(0), 1) and pipe.submit(pop.client(0), 2)
+    assert not pipe.submit(pop.client(0), 3)
+    # unbudgeted population is a no-op
+    assert ClientPopulation(n_clients=3, n_records=64).install_budgets(pipe) == 0
+
+
+# ---------------------------------------------------------------- collector
+def test_slo_collector_summary_and_threaded_exactness():
+    col = SLOCollector()
+    with pytest.raises(ValueError):
+        col.observe("lost")
+    T, I = 8, 250
+
+    def hammer():
+        for _ in range(I):
+            col.observe("served", 0.010)
+            col.observe("refused")
+            col.observe("shed")
+
+    threads = [threading.Thread(target=hammer) for _ in range(T)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    col.sample(0.5, queue_depth=7)
+    col.sample(1.0, queue_depth=3)
+    s = col.summary(wall_s=2.0)
+    assert s["served"] == s["refused"] == s["shed"] == T * I  # exact
+    assert s["failed"] == 0 and s["arrivals"] == 3 * T * I
+    assert s["p50_ms"] == pytest.approx(10.0)
+    assert s["goodput_qps"] == pytest.approx(T * I / 2.0)
+    assert s["refusal_rate"] == pytest.approx(1 / 3)
+    assert s["max_queue_depth"] == 7.0
+
+
+# ----------------------------------------------------- injector -> monitor
+def test_injector_kill_is_detected_after_timeout_and_revive_rearms():
+    mon = HeartbeatMonitor(3, heartbeat_timeout_s=1.0)
+    edges = []
+    mon.on_failure(lambda newly, alive: edges.append((newly, alive)))
+    inj = FaultInjector(
+        mon,
+        [FaultEvent(2.0, 1), FaultEvent(6.0, 1, kind="revive"),
+         FaultEvent(8.0, 1)],
+        beat_interval_s=0.25,
+    )
+    assert inj.tick(0.0) == []          # booting fleet: no edges
+    assert inj.tick(1.9) == []          # steady heartbeats keep all alive
+    assert inj.tick(2.1) == []          # killed, but within the timeout
+    assert inj.down == {1}
+    newly = inj.tick(3.5)               # past timeout: edge fires once
+    assert newly == [1]
+    assert edges == [([1], [0, 2])]
+    assert inj.tick(4.0) == []          # edge-triggered: no repeat
+    inj.tick(6.2)                       # revived: beating again
+    assert inj.down == set()
+    assert inj.tick(7.9) == []          # alive again through steady beats
+    inj.tick(8.1)                       # second kill lands
+    assert inj.tick(9.5) == [1]         # the second death is its own edge
+    assert len(edges) == 2
+
+
+def test_fault_event_validation_and_ordering():
+    with pytest.raises(ValueError):
+        FaultEvent(1.0, 0, kind="maim")
+    with pytest.raises(ValueError):
+        FaultEvent(-1.0, 0)
+    mon = HeartbeatMonitor(2, heartbeat_timeout_s=1.0)
+    inj = FaultInjector(mon, [FaultEvent(5.0, 1), FaultEvent(1.0, 0)])
+    inj.tick(2.0)
+    assert inj.down == {0}  # events applied in time order, not list order
+
+
+# ------------------------------------------------- pipeline degraded mode
+def _sparse_pipe(n=128, d=4, d_a=2, theta=0.25, cached=True):
+    store = make_synthetic_store(n, 16, seed=2)
+    sch = make_scheme("sparse", d=d, d_a=d_a, theta=theta)
+    return ServingPipeline(
+        store, sch,
+        scheduler=BatchScheduler(max_batch=16, target_latency_s=10.0),
+        cache=QueryCache(sch, store.n) if cached else None,
+    )
+
+
+def test_degrade_replicas_reprices_and_still_serves_exact():
+    pipe = _sparse_pipe()
+    n = pipe.store.n
+    eps0 = pipe.price[0]
+    info = pipe.degrade_replicas([3])
+    bound = pir_degraded_privacy(
+        d=4, d_a=2, failed=1, scheme="sparse", n=n, theta=0.25
+    )
+    assert info == bound and pipe.degraded == bound
+    assert pipe.price[0] == bound["epsilon"] > eps0
+    assert pipe.metrics["remeshes"] == 1
+    assert pipe.metrics["d_effective"] == 3.0
+    assert pipe.last_remesh is not None
+    assert pipe.last_remesh.survivors == (0, 1, 2)
+    assert pipe.staged.d == 3
+    # admission now charges the degraded price
+    pipe.submit("c", 7)
+    out = pipe.flush()
+    np.testing.assert_array_equal(out["c"], pipe.store.record_bytes(7))
+    assert pipe.budget("c").spent_epsilon == pytest.approx(bound["epsilon"])
+    # repeat of an already-failed replica is a no-op
+    assert pipe.degrade_replicas([3]) == bound
+    assert pipe.metrics["remeshes"] == 1
+
+
+def test_degrade_invalidates_and_resigns_cache():
+    from repro.serve import scheme_signature
+
+    pipe = _sparse_pipe()
+    pipe.submit("c", 5)
+    pipe.flush()
+    assert pipe.cache.lookup("c", 5) is not None
+    sig0 = pipe.cache.signature
+    pipe.degrade_replicas([0])
+    # old-d randomness is unreplayable on the survivor wire: memo gone,
+    # and the cache now signs as the degraded scheme
+    assert pipe.cache.lookup("c", 5) is None
+    assert pipe.cache.signature != sig0
+    assert pipe.cache.signature == scheme_signature(pipe.staged, pipe.store.n)
+
+
+def test_degrade_to_unserviceable_refuses_everyone():
+    pipe = _sparse_pipe()
+    info = pipe.degrade_replicas([0, 1])  # d'=2 == d_a: privacy gone
+    assert info["serviceable"] == 0.0 and math.isinf(info["epsilon"])
+    assert math.isinf(pipe.price[0])
+    assert pipe.metrics["unserviceable"] == 1
+    # refused unconditionally — even the default unlimited budget, which
+    # would happily "afford" an infinite price
+    assert not pipe.submit("anyone", 1)
+    assert pipe.metrics["refused"] == 1
+
+
+def test_degrade_relabels_backend_stats():
+    pipe = _sparse_pipe(cached=False)
+    # give old replica 2 a distinctive EMA, then kill replica 1
+    pipe.backend.stats[2].observe(0.123)
+    pipe.degrade_replicas([1])
+    # survivor order [0, 2, 3]: old 2 is now logical rank 1
+    assert pipe.backend.stats[1].ema_s == pytest.approx(0.123)
+    assert set(pipe.backend.stats) == {0, 1, 2}
+
+
+# ------------------------------------------------------------- end to end
+def test_scenario_with_midtraffic_kill_zero_dropped_futures():
+    pipe = _sparse_pipe(n=256)
+    n = pipe.store.n
+    # pay the healthy-path jit before the timed window
+    for i in range(8):
+        pipe.submit("warm", (i * 3) % n)
+    pipe.flush()
+    scenario = FleetScenario(
+        name="mini_1loss",
+        arrivals=PoissonArrivals(120.0),
+        duration_s=0.8,
+        faults=(FaultEvent(0.3, 3),),
+        heartbeat_timeout_s=0.05,
+        seed=2,
+    )
+    pop = ClientPopulation(n_clients=32, n_records=n, seed=2)
+    rep = run_scenario(scenario, pipe, pop, queue_limit=4096)
+    assert rep.arrivals > 0
+    assert rep.slo["failed"] == 0          # zero dropped in-flight futures
+    assert rep.slo["served"] > 0
+    assert rep.remeshes == 1 and not rep.unserviceable
+    bound = pir_degraded_privacy(
+        d=4, d_a=2, failed=1, scheme="sparse", n=n, theta=0.25
+    )
+    assert rep.price[0] == pytest.approx(bound["epsilon"])
+    assert rep.degraded == bound
+    # the timeline watched the price rise through the kill
+    eps_track = [pt["eps_per_query"] for pt in rep.timeline
+                 if "eps_per_query" in pt]
+    assert eps_track and eps_track[-1] == pytest.approx(bound["epsilon"])
+    # report serializes without the bulky timeline
+    assert "timeline" not in rep.to_json()
+
+
+def test_scenario_budget_exhaustion_surfaces_as_refusals_not_failures():
+    pipe = _sparse_pipe(n=128)
+    for i in range(4):
+        pipe.submit("warm", i)
+    pipe.flush()
+    scenario = FleetScenario(
+        name="tight_budgets", arrivals=PoissonArrivals(150.0),
+        duration_s=0.5, seed=4,
+    )
+    pop = ClientPopulation(
+        n_clients=4, n_records=128, budget_queries=(1, 2), seed=4
+    )
+    rep = run_scenario(scenario, pipe, pop)
+    assert rep.slo["failed"] == 0
+    assert rep.slo["refused"] > 0          # exhaustion is policy, not error
+    assert rep.slo["served"] > 0
+    total = sum(rep.slo[k] for k in ("served", "refused", "shed", "failed"))
+    assert total == rep.arrivals == rep.slo["arrivals"]
+
+
+def test_scenario_validation():
+    with pytest.raises(ValueError):
+        FleetScenario(name="x", arrivals=PoissonArrivals(1.0), duration_s=0.0)
+    with pytest.raises(ValueError):
+        FleetScenario(
+            name="x", arrivals=PoissonArrivals(1.0), heartbeat_timeout_s=0.0
+        )

@@ -330,3 +330,84 @@ def test_prefill_respects_pool_cap_and_direct_fallback():
     np.testing.assert_array_equal(
         pipe_d.flush()["c"], store.record_bytes(5)
     )
+
+
+# ------------------------------------------------- metrics under contention
+def test_metrics_exact_under_threaded_hammer():
+    """Every counter bump happens under the cache lock — T threads each
+    driving I hits, I misses, I notes and I memoized refusals must land
+    on exactly T*I per counter. Plain dict increments (read-modify-write
+    outside the lock) lose updates under this hammer."""
+    import threading
+
+    sch = make_scheme("chor", d=2, d_a=1)
+    cache = QueryCache(
+        sch, 64, max_entries=100_000, max_refusal_entries=100_000
+    )
+    T, I = 8, 300
+    start = threading.Barrier(T)
+
+    def hammer(t):
+        start.wait()
+        for i in range(I):
+            client = f"t{t}-{i}"
+            cache.insert(client, 0, answer=np.zeros(4, np.uint8))
+            assert cache.lookup(client, 0) is not None       # hit
+            assert cache.lookup(client, 1) is None           # miss
+            tok = (1.0, 0.0, 1.0, 0.0)
+            cache.note_refusal(client, tok)
+            assert cache.refused(client, tok)                # refusal hit
+
+    threads = [threading.Thread(target=hammer, args=(t,)) for t in range(T)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=60.0)
+    assert not any(th.is_alive() for th in threads)
+    m = cache.metrics
+    assert m["hits"] == T * I
+    assert m["misses"] == T * I
+    assert m["insertions"] == T * I
+    assert m["refusals_noted"] == T * I
+    assert m["refusal_hits"] == T * I
+    assert m["evictions"] == 0
+
+
+# --------------------------------------------- refusal memo LRU order pin
+def test_refusal_memo_eviction_order_is_lru():
+    """Pin the memo's LRU discipline: a refusal *hit* refreshes its
+    client, so eviction always takes the least-recently-consulted entry
+    — not insertion (FIFO) order."""
+    sch = make_scheme("chor", d=2, d_a=1)
+    cache = QueryCache(sch, 64, max_refusal_entries=3)
+    tok = (1.0, 0.0, 1.0, 0.0)
+    for c in ("a", "b", "c"):
+        cache.note_refusal(c, tok)
+    assert cache.refused("a", tok)      # touch: order is now b, c, a
+    cache.note_refusal("d", tok)        # evicts b (LRU), NOT a (FIFO)
+    assert not cache.refused("b", tok)
+    assert cache.refused("a", tok) and cache.refused("c", tok)
+    assert cache.refused("d", tok)      # order: a, c, d (b's miss is no touch)
+    cache.note_refusal("e", tok)        # evicts a — consulted least recently
+    assert not cache.refused("a", tok)
+    assert all(cache.refused(c, tok) for c in ("c", "d", "e"))
+
+
+def test_invalidate_clears_refusal_memo_under_churn():
+    """invalidate() empties the refusal memo along with entries and
+    pres, even while the memo is churning at its bound — no client stays
+    memo-refused across a remesh/re-sign."""
+    sch = make_scheme("chor", d=2, d_a=1)
+    cache = QueryCache(sch, 64, max_entries=8, max_refusal_entries=8)
+    tok = (1.0, 0.0, 1.0, 0.0)
+    clients = [f"c{i}" for i in range(40)]  # 5x the bound: constant churn
+    for i, c in enumerate(clients):
+        cache.note_refusal(c, tok)
+        cache.insert(c, i % 64, answer=np.zeros(4, np.uint8))
+    assert sum(cache.refused(c, tok) for c in clients) == 8  # at the bound
+    cache.invalidate()
+    assert len(cache) == 0
+    assert not any(cache.refused(c, tok) for c in clients)
+    # and the memo still works (and stays bounded) after the wipe
+    cache.note_refusal("fresh", tok)
+    assert cache.refused("fresh", tok)

@@ -327,3 +327,38 @@ def test_asubmit_from_event_loop():
         answers = asyncio.run(drive(fe))
     for i, a in enumerate(answers):
         np.testing.assert_array_equal(a, pipe.store.record_bytes(i * 5))
+
+
+# ----------------------------------------------------- close deadline clock
+def test_close_deadline_runs_on_scheduler_clock(monkeypatch):
+    """close(drain=False)'s bounded wait for stuck block-policy
+    submitters must run on the scheduler's injected clock, scaled by
+    drain_timeout_s — not a hardcoded wall-clock second. Regression: a
+    fake clock that jumps past the deadline must let close return
+    immediately even while a submitter is permanently unsettled."""
+    ticks = {"n": 0}
+
+    def fake_clock():
+        ticks["n"] += 1
+        return float(ticks["n"])  # each read advances a full second
+
+    pipe = make_pipe()
+    pipe.scheduler.clock = fake_clock
+    monkeypatch.setattr(AsyncFrontend, "start", lambda self: self)
+    fe = AsyncFrontend(pipe, ingest_workers=1, queue_limit=4,
+                       shed_policy="block", drain_timeout_s=2.0)
+    with fe._cv:
+        fe._unadmitted += 1  # a submitter that will never settle
+    t0 = time.monotonic()
+    fe.close(drain=False)
+    wall = time.monotonic() - t0
+    # the fake clock blows through the 2.0s budget in a couple of reads;
+    # the old hardcoded `time.monotonic() + 1.0` made this take >= 1s
+    assert wall < 0.5
+    assert ticks["n"] >= 2  # the deadline really consulted the injected clock
+
+
+def test_drain_timeout_must_be_positive():
+    pipe = make_pipe()
+    with pytest.raises(ValueError, match="drain_timeout_s"):
+        AsyncFrontend(pipe, drain_timeout_s=0.0)

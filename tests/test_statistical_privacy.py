@@ -237,3 +237,39 @@ def test_subset_empirical_delta_matches_thm5():
     want = acc.delta_subset(d, d_a, t)  # = (4/6)(3/5) = 0.4
     got = hits / trials
     assert abs(got - want) < 0.04, (got, want)
+
+# --------------------------------------------------------------------------
+# Degraded serving (replica loss)
+# --------------------------------------------------------------------------
+def test_degraded_sparse_empirical_eps_meets_degraded_bound():
+    """After a replica loss the pipeline swaps in scheme_degradation's
+    d'-server scheme and accounts pir_degraded_privacy's ε. Measure the
+    degraded scheme's *routed* query vectors: the empirical leakage must
+    sit under (and, Thm 3 being tight, near) the degraded bound — the ε
+    the fleet harness surfaces is the ε the wire actually spends."""
+    from repro.dist.fault import scheme_degradation
+
+    n, d, d_a, theta = 16, 5, 2, 0.25
+    sch = make_scheme("sparse", d=d, d_a=d_a, theta=theta)
+    degraded, info = scheme_degradation(sch, n, failed=1)
+    bound = info["epsilon"]
+    assert bound == pytest.approx(acc.epsilon_sparse(theta, d - 1, d_a))
+    assert bound > sch.epsilon(n)  # loss strictly worsens the price
+    router = SchemeRouter(degraded)
+    q_i, q_j = 2, 9
+
+    def fn(keys: jax.Array, hyp: int) -> jnp.ndarray:
+        q = q_i if hyp == 0 else q_j
+
+        def one(k):
+            routed = router.plan(k, n, jnp.full((1,), q, jnp.int32))
+            obs = routed.payload[:d_a, 0, :]  # the d_a corrupted rows
+            pi = jnp.sum(obs[:, q_i]) % 2
+            pj = jnp.sum(obs[:, q_j]) % 2
+            return (2 * pi + pj).astype(jnp.int32)
+
+        return jax.vmap(one)(keys)
+
+    emp = _empirical_epsilon(fn)
+    assert emp <= bound + 0.25, (emp, bound)
+    assert emp >= 0.5 * bound, (emp, bound)

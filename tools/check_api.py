@@ -24,7 +24,14 @@ Three passes:
    ``repro.kernels.ops`` wrappers; the ``ref`` oracles and
    ``indices_from_mask`` stay public (they are the correctness ground
    truth and the mask→index utility, not kernel choices).
-3. **__all__ consistency** — every ``repro.*`` module that declares
+3. **Fleet layering** — the fleet harness (``repro.fleet``, DESIGN.md
+   §Fleet harness) sits *above* the serving stack: it may import
+   ``repro.serve`` and ``repro.dist``, but never anything under
+   ``repro.kernels`` (any submodule or the package itself) nor the
+   per-scheme wire internals. Load generation drives the public
+   pipeline; if the harness needs a kernel- or wire-level knob, that
+   knob belongs on the pipeline's API, not in the harness.
+4. **__all__ consistency** — every ``repro.*`` module that declares
    ``__all__`` must actually define each listed name, with no
    duplicates.
 
@@ -84,7 +91,9 @@ def _violations_in(
     for node in ast.walk(tree):
         if isinstance(node, ast.Import):
             for alias in node.names:
-                if alias.name in internal_modules:
+                if alias.name in internal_modules or any(
+                    alias.name.startswith(m + ".") for m in internal_modules
+                ):
                     bad.append(alias.name)
         elif isinstance(node, ast.ImportFrom):
             mod = node.module or ""
@@ -161,6 +170,32 @@ def check_kernel_boundary() -> List[str]:
     )
 
 
+# everything the fleet harness may never import: the whole kernel layer
+# (any submodule — kernel choice is the pipeline's concern) plus the
+# per-scheme wire internals
+FLEET_BANNED_MODULES = {"repro.kernels"} | INTERNAL_MODULES
+
+
+def check_fleet_boundary() -> List[str]:
+    errors = []
+    scope = SRC / "repro" / "fleet"
+    if not scope.is_dir():
+        return errors
+    for path in iter_py(scope):
+        tree = ast.parse(path.read_text(encoding="utf-8"))
+        parts = list(path.relative_to(SRC).with_suffix("").parts)
+        package = ".".join(parts[:-1])
+        for mod in _violations_in(
+            tree, package, FLEET_BANNED_MODULES, "repro.core", INTERNAL
+        ):
+            errors.append(
+                f"{path.relative_to(ROOT)}: imports {mod!r} — the fleet "
+                "harness drives the public serving pipeline (repro.serve / "
+                "repro.dist); kernel and per-scheme wire internals are fenced"
+            )
+    return errors
+
+
 def check_all_consistency() -> List[str]:
     errors = []
     for path in iter_py(SRC / "repro"):
@@ -197,6 +232,7 @@ def main() -> int:
     errors = (
         check_protocol_boundary()
         + check_kernel_boundary()
+        + check_fleet_boundary()
         + check_all_consistency()
     )
     for err in errors:
