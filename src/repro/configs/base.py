@@ -163,6 +163,8 @@ class PIRConfig:
     # §Execution backends)
     backend: str = "auto"             # registered backend: auto|pallas|ref
     autotune_file: str = ""           # JSON autotune table to load; "" = cold
+    fused_vmem_budget_bytes: int = 0  # fused-kernel VMEM gate override;
+                                      # 0 = derive from the local device
     # fleet harness (repro.fleet, DESIGN.md §Fleet harness)
     heartbeat_timeout_s: float = 30.0  # replica declared dead past this
     fleet_clients: int = 10_000       # simulated client sessions per run

@@ -86,6 +86,7 @@ def make_serving_pipeline(cfg: PIRConfig = CONFIG, store=None, **kw):
             simulate_latency=kw.pop("simulate_latency", None),
             backend=cfg.backend,
             autotune_file=cfg.autotune_file or None,
+            vmem_budget_bytes=cfg.fused_vmem_budget_bytes or None,
         )
     return ServingPipeline(
         store,

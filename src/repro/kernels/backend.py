@@ -15,28 +15,45 @@ Three pieces:
   bit-identical, and the faster choice in a CPU serving hot path), and
   ``auto`` (kernels on accelerators, oracles on CPU hosts). A backend
   resolves to a concrete *impl* and the planner builds executors from it.
-* **Autotune table** (:class:`AutotuneTable`): a process-local memo of
-  one-shot *measured* microbenchmarks, keyed ``(scheme, bucket,
-  backend)``. Where the old static ``parity_crossover_batch`` constant
-  guessed the VPU-fold / MXU-parity crossover from a napkin roofline,
-  the planner now measures both paths once at the actual (bucket, n, W)
-  shape — inside the uncertainty band around the model's crossover —
-  and remembers the winner. The table dumps/loads as JSON
-  (:func:`dump_autotune` / :func:`load_autotune`; format in DESIGN.md
-  §Execution backends) so a deployment can ship warmed decisions.
-  EXPERIMENTS.md §Autotune describes the methodology.
+* **Autotune table** (:class:`AutotuneTable`): a memo of *measured*
+  search results, keyed ``(scheme, bucket, backend, n, words, family)``.
+  Each entry records the winning candidate (path + impl + block shape),
+  the microbenchmark microseconds of **every** candidate it beat —
+  including the ref-oracle baseline, which is how the never-regress
+  guarantee is auditable after the fact — and the fingerprint of the
+  device it was measured on (:func:`device_fingerprint`). ``load`` /
+  ``update`` refuse to merge entries fingerprinted for a different
+  device: a table dumped on a v4 must not pin plans on a v5e host, so
+  mismatched entries are dropped and counted instead of merged. The
+  table dumps/loads as JSON (:func:`dump_autotune` /
+  :func:`load_autotune`; format in DESIGN.md §Execution backends) so a
+  deployment can ship warmed decisions. EXPERIMENTS.md §Autotune
+  describes the methodology.
 * **Planner** (:class:`KernelPlanner`): ``plan(scheme_plan, bucket,
   mesh_state)`` maps one batch's wire plan (the scheme's
   :class:`~repro.core.protocol.Queries` — its ``kind`` and θ are the
   only scheme-side facts execution needs) to an :class:`ExecutionPlan`
   carrying the chosen path, impl, block sizes, sparse index budget and
-  (single-host) a ready jitted executor. ``SchemeProtocol.costs(n)``
-  feeds the decision as the analytic prior; the microbenchmark settles
-  what the prior cannot. For Sparse-PIR on the pallas impl the planner
-  prefers the **fused gather→xor→fold kernel**
-  (``repro.kernels.fused``) whenever the db word-block fits VMEM,
-  falling back to the ``indices_from_mask`` + ``gather_xor`` streaming
-  pair when it does not.
+  (single-host) a ready jitted executor.
+
+``plan()`` **never measures**. On a request thread the planner answers
+from the autotune table when a measured entry exists, and from the
+analytic cost-model prior (``SchemeProtocol.costs(n)`` → the C_p
+crossover) when it does not — a cold cell costs zero microbenchmarks and
+zero extra jit compiles on the serving path. Cold cells are queued as
+*pending*, and :meth:`KernelPlanner.tune_step` runs the actual search in
+the ``AsyncFrontend``'s idle slot (where cache prefill already lives):
+it enumerates every candidate for the cell — path ∈ {fold, parity} for
+the dense-mask family, {fused, streaming-pair} × ``block_w`` ×
+``grid_order`` for the sparse family — measures each at the cell's true
+(bucket, n, W) shape, and records the winner.
+
+**Never-regress guarantee:** when the backend is ``auto`` and resolves
+to a non-ref impl, the candidate set *always includes the ref-oracle
+baseline* for the same cell, so the recorded winner can be "run the
+oracle" — ``auto`` keeps whichever side actually wins on this device,
+and BENCH's ``exec_perf_floor`` row asserts ``auto ≥ ref`` (within noise
+tolerance) in every measured cell.
 
 The serve layer's ``parity_min_batch`` knob survives as a *forced*
 decision (``ExecutionPlan.source == "forced"``) — useful in tests and
@@ -47,8 +64,10 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import threading
 import time
-from typing import Any, Callable, Dict, Optional, Tuple
+import zlib
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -70,8 +89,11 @@ __all__ = [
     "resolve_kernel_impl_alias",
     "AutotuneTable",
     "autotune_table",
+    "device_fingerprint",
     "load_autotune",
     "dump_autotune",
+    "PlanCandidate",
+    "TuneCell",
     "KernelPlanner",
     "shard_answer_fn",
 ]
@@ -87,11 +109,15 @@ class ExecutionPlan:
 
     ``path`` is the physical kernel form (``fold`` / ``parity`` /
     ``sparse_fused`` / ``sparse_pair`` / ``sparse_ref`` / ``direct``),
-    ``impl`` the resolved backend (never "auto"), ``blocks`` the chosen
-    kernel block sizes, ``m_budget`` the sparse index budget (None off
-    the sparse family), and ``source`` where the decision came from:
-    ``measured`` (autotune microbenchmark), ``model`` (analytic
-    cost-model prior), ``forced`` (caller override) or ``only`` (single
+    ``impl`` the impl the executor is built from — normally the resolved
+    backend (never "auto"), but under the never-regress guarantee a
+    measured winner may be ``ref`` even when the backend resolved to
+    pallas. ``blocks`` carries the chosen kernel block shape
+    (``block_w``, ``grid_order``), ``m_budget`` the sparse index budget
+    (None off the sparse family), and ``source`` where the decision came
+    from: ``measured`` (autotune search winner), ``model`` (analytic
+    cost-model prior — the cold-cell answer while the search is still
+    pending), ``forced`` (caller override) or ``only`` (single
     candidate). ``run`` is the jitted single-host executor (payload ->
     [B, W]); it is None for decision-only plans — mesh plans, where the
     sharded serve layer builds the shard_map executor *from the plan's
@@ -103,7 +129,7 @@ class ExecutionPlan:
     impl: str
     bucket: int
     n: int
-    blocks: Tuple[Tuple[str, int], ...] = ()
+    blocks: Tuple[Tuple[str, Any], ...] = ()
     m_budget: Optional[int] = None
     theta: Optional[float] = None
     interpret: bool = False
@@ -208,7 +234,9 @@ class RefBackend(ExecutionBackend):
 
 @register_backend("auto")
 class AutoBackend(ExecutionBackend):
-    """Kernels on accelerators, oracles on CPU hosts."""
+    """Kernels on accelerators, oracles on CPU hosts — and, per measured
+    cell, whichever of the two the autotune search proves faster (the
+    never-regress guarantee; the resolved impl is only the prior)."""
 
     def resolve(self) -> str:
         return "ref" if ops.on_cpu() else "pallas"
@@ -231,20 +259,45 @@ def _family(theta: Optional[float]) -> str:
     return "mask" if theta is None else f"sparse@{float(theta):g}"
 
 
+def device_fingerprint() -> Dict[str, str]:
+    """Identity of the device measurements on this host are valid for:
+    ``{"platform", "device_kind"}`` of ``jax.devices()[0]``. Autotune
+    entries are stamped with it at :meth:`AutotuneTable.put` time, and
+    merges drop entries whose fingerprint is not the local one — a
+    microsecond measured on one accelerator generation says nothing
+    about another."""
+    dev = jax.devices()[0]
+    return {
+        "platform": str(dev.platform),
+        "device_kind": str(getattr(dev, "device_kind", "") or dev.platform),
+    }
+
+
 class AutotuneTable:
-    """Process-local memo of one-shot path microbenchmarks.
+    """Memo of measured autotune-search results.
 
     Entry: ``(scheme, bucket, backend, n, words, family) -> {"path",
-    "source", "us"}`` where ``us`` maps each measured candidate path to
-    its microbenchmark microseconds (empty for model/forced decisions).
-    JSON round-trip via :meth:`to_json` / :meth:`from_json`; the on-disk
-    format is the documented autotune-file format (DESIGN.md §Execution
-    backends)."""
+    "impl", "blocks", "source", "us", "device"}`` where ``path`` /
+    ``impl`` / ``blocks`` describe the winning candidate, ``us`` maps
+    every measured candidate label to its microbenchmark microseconds
+    (the ref baseline's timing is in here too — the never-regress
+    decision stays auditable), and ``device`` is the fingerprint of the
+    host that measured it. JSON round-trip via :meth:`to_json` /
+    :meth:`from_json`; the on-disk format is the documented
+    autotune-file format (DESIGN.md §Execution backends).
 
-    VERSION = 1
+    :meth:`update` (and therefore :func:`load_autotune`) drops entries
+    fingerprinted for a different device instead of merging them; the
+    running count lands in :attr:`dropped` and is returned per call.
+    """
+
+    VERSION = 2
 
     def __init__(self) -> None:
         self._entries: Dict[Key, Dict[str, Any]] = {}
+        #: cumulative count of entries refused by :meth:`update` because
+        #: their device fingerprint did not match this host
+        self.dropped = 0
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -252,10 +305,28 @@ class AutotuneTable:
     def get(self, key: Key) -> Optional[Dict[str, Any]]:
         return self._entries.get(key)
 
-    def put(self, key: Key, path: str, *, source: str,
-            us: Optional[Dict[str, float]] = None) -> None:
+    def put(
+        self,
+        key: Key,
+        path: str,
+        *,
+        impl: str,
+        source: str,
+        blocks: Optional[Dict[str, Any]] = None,
+        us: Optional[Dict[str, float]] = None,
+        device: Optional[Dict[str, str]] = None,
+    ) -> None:
+        """Record a decision. ``device=None`` stamps the local
+        fingerprint (the normal path for fresh measurements);
+        deserialization passes the dumped fingerprint through."""
         self._entries[key] = {
-            "path": path, "source": source, "us": dict(us or {}),
+            "path": path,
+            "impl": impl,
+            "blocks": dict(blocks or {}),
+            "source": source,
+            "us": dict(us or {}),
+            "device": dict(device) if device is not None
+            else device_fingerprint(),
         }
 
     def items(self):
@@ -292,8 +363,14 @@ class AutotuneTable:
                     str(e["scheme"]), int(e["bucket"]), str(e["backend"]),
                     int(e["n"]), int(e["words"]), str(e["family"]),
                 ),
-                str(e["path"]), source=str(e["source"]),
+                str(e["path"]),
+                impl=str(e["impl"]),
+                source=str(e["source"]),
+                blocks=dict(e.get("blocks", {})),
                 us={k: float(v) for k, v in e.get("us", {}).items()},
+                device={
+                    k: str(v) for k, v in (e.get("device") or {}).items()
+                },
             )
         return table
 
@@ -303,11 +380,26 @@ class AutotuneTable:
 
     @classmethod
     def load(cls, path: str) -> "AutotuneTable":
+        """Read a dumped table verbatim (entries keep whatever
+        fingerprint they were measured with). Merging into a live table
+        — :meth:`update` / :func:`load_autotune` — is where the
+        device-mismatch filter applies."""
         with open(path) as f:
             return cls.from_json(f.read())
 
-    def update(self, other: "AutotuneTable") -> None:
-        self._entries.update(other._entries)
+    def update(self, other: "AutotuneTable") -> int:
+        """Merge ``other``'s entries measured on *this* device; drop the
+        rest. Returns the number dropped by this call (also accumulated
+        in :attr:`dropped`)."""
+        local = device_fingerprint()
+        dropped = 0
+        for key, entry in other._entries.items():
+            if entry.get("device") == local:
+                self._entries[key] = entry
+            else:
+                dropped += 1
+        self.dropped += dropped
+        return dropped
 
 
 _PROCESS_TABLE = AutotuneTable()
@@ -320,7 +412,8 @@ def autotune_table() -> AutotuneTable:
 
 def load_autotune(path: str, table: Optional[AutotuneTable] = None) -> AutotuneTable:
     """Merge a dumped JSON table into ``table`` (default: the process
-    table); returns the merged table."""
+    table); returns the merged table. Entries fingerprinted for a
+    different device are dropped and counted (``table.dropped``)."""
     table = table if table is not None else _PROCESS_TABLE
     table.update(AutotuneTable.load(path))
     return table
@@ -328,6 +421,43 @@ def load_autotune(path: str, table: Optional[AutotuneTable] = None) -> AutotuneT
 
 def dump_autotune(path: str, table: Optional[AutotuneTable] = None) -> None:
     (table if table is not None else _PROCESS_TABLE).dump(path)
+
+
+# --------------------------------------------------------------------------
+# The search space
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PlanCandidate:
+    """One point in the autotune search space: a kernel path, the impl
+    it runs on, and its block shape. ``label`` is the stable string the
+    table's ``us`` timing map keys on."""
+
+    path: str
+    impl: str
+    blocks: Tuple[Tuple[str, Any], ...] = ()
+
+    @property
+    def label(self) -> str:
+        tail = "".join(f"+{k}={v}" for k, v in sorted(self.blocks))
+        return f"{self.path}/{self.impl}{tail}"
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneCell:
+    """One pending autotune cell: everything :meth:`KernelPlanner.tune_step`
+    needs to rebuild the candidate set and a representative payload
+    off the request path."""
+
+    scheme: str
+    bucket: int
+    impl: str  # the backend-resolved impl (candidate sets key off it)
+    theta: Optional[float]
+    n_eff: int
+    m_budget: Optional[int]
+
+    @property
+    def family(self) -> str:
+        return _family(self.theta)
 
 
 # --------------------------------------------------------------------------
@@ -341,10 +471,15 @@ def _bench_mask(key: jax.Array, bucket: int, n: int, p: float) -> jnp.ndarray:
     return (draws < max(1, round(p * 256))).astype(jnp.uint8)
 
 
-def _measure_us(fn: Callable, *args, reps: int = 3) -> float:
-    """One-shot microbenchmark: one warmup call (pays jit), then
+def _measure_us(
+    fn: Callable, *args, reps: int = 3,
+    candidate: Optional["PlanCandidate"] = None,
+) -> float:
+    """One candidate's microbenchmark: one warmup call (pays jit), then
     best-of-``reps`` — the min is the right statistic for an ordering
-    decision (a stall inflates a sample, nothing deflates one)."""
+    decision (a stall inflates a sample, nothing deflates one).
+    ``candidate`` identifies what is being timed; the real timer ignores
+    it, injected fakes (tests, simulators) key on it."""
     jax.block_until_ready(fn(*args))
     best = float("inf")
     for _ in range(reps):
@@ -358,20 +493,20 @@ class KernelPlanner:
     """Maps (wire plan, bucket, mesh residency) -> :class:`ExecutionPlan`.
 
     Owns the decisions the serve layer used to hardcode: which backend
-    impl runs (registry), fold vs parity (autotune table seeded by the
-    cost-model prior), fused vs streaming sparse (VMEM fit + one-shot
-    measurement), interpret mode, block sizes and the sparse index
-    budget. Plans are cached per (scheme, kind, θ, bucket, mesh), so the
-    microbenchmark for a key runs at most once per process — and the
-    serve pipeline plans batch k+1 while batch k executes, so even that
-    one shot hides in the double-buffer overlap (DESIGN.md §Execution
-    backends).
-    """
+    impl runs (registry), fold vs parity, fused vs streaming sparse,
+    block shape and grid order, interpret mode and the sparse index
+    budget. ``plan()`` is **measurement-free**: it answers from the
+    autotune table or the analytic prior and queues cold cells; the
+    search itself runs through :meth:`tune_step` /
+    :meth:`tune_pending` in the async front's idle slot (DESIGN.md
+    §Execution backends).
 
-    # measure only inside the uncertainty band around the model crossover;
-    # outside it the analytic prior is overwhelming and timing both paths
-    # (two jit compiles) would buy nothing
-    MEASURE_BAND = (0.25, 4.0)
+    ``seed`` fixes the bench-payload PRNG so a search over the same
+    cells is reproducible; ``vmem_budget_bytes`` overrides the
+    device-derived fused VMEM gate (``PIRConfig.fused_vmem_budget_bytes``
+    threads through here); ``measure`` swaps the microbenchmark function
+    (tests inject deterministic timers).
+    """
 
     # the sparse gather forms only pay while the index budget stays
     # meaningfully below the record count; at θ·n ≈ n streaming the whole
@@ -385,13 +520,21 @@ class KernelPlanner:
         backend: str = "auto",
         table: Optional[AutotuneTable] = None,
         parity_min_batch: Optional[int] = None,
+        seed: int = 0,
+        vmem_budget_bytes: Optional[int] = None,
+        measure: Optional[Callable[..., float]] = None,
     ):
         self.backend = get_backend(backend)
         self.store = store
         self.table = table if table is not None else autotune_table()
         self._parity_min_batch = parity_min_batch
+        self._seed = int(seed)
+        self._vmem_budget = vmem_budget_bytes
+        self._measure = measure if measure is not None else _measure_us
         self._planes: Optional[jnp.ndarray] = None
         self._plans: Dict[Tuple, ExecutionPlan] = {}
+        self._pending: Dict[Key, TuneCell] = {}
+        self._lock = threading.Lock()
 
     # ------------------------------------------------------------- helpers
     @property
@@ -412,18 +555,34 @@ class KernelPlanner:
             _family(theta),
         )
 
+    def _table_hit(self, key: Key) -> Optional[Dict[str, Any]]:
+        """A table entry is only trusted when its fingerprint matches
+        this host (a hand-constructed table may carry foreign entries;
+        :meth:`AutotuneTable.update` filters, ``table=`` does not)."""
+        hit = self.table.get(key)
+        if hit is None:
+            return None
+        dev = hit.get("device")
+        if dev is not None and dev != device_fingerprint():
+            return None
+        return hit
+
     def _model_crossover(self) -> int:
         """The analytic fold/parity crossover batch (the prior the
-        measurement refines; the constant that used to *be* the
-        decision)."""
+        search refines; the constant that used to *be* the decision)."""
         return ops.parity_crossover_batch(
             self.store.n, self.store.record_bits
+        )
+
+    def _fused_bw(self, n_eff: int) -> int:
+        return fused_block_w(
+            n_eff, self.store.words, budget_bytes=self._vmem_budget
         )
 
     # ------------------------------------------------------------ executors
     def _build_run(
         self, path: str, impl: str, m_budget: Optional[int],
-        interpret: bool, blocks: Dict[str, int],
+        interpret: bool, blocks: Dict[str, Any],
     ) -> Callable[[jnp.ndarray], jnp.ndarray]:
         """Single-host executor for a resolved (path, impl): the shared
         path→kernel dispatch with this store's operand bound in."""
@@ -431,50 +590,260 @@ class KernelPlanner:
         operand = self.planes() if path == "parity" else self.store.packed
         return lambda payload: fn(operand, payload)
 
-    # ------------------------------------------------------------ decisions
-    def _decide_mask_path(
-        self, scheme_name: str, bucket: int, impl: str, on_mesh: bool,
-        costs: Optional[Dict[str, float]],
-    ) -> Tuple[str, str]:
-        """fold vs parity for dense-mask batches: forced override, then
-        the autotune table, then measure-or-model."""
-        if self._parity_min_batch is not None:
-            path = "parity" if bucket >= self._parity_min_batch else "fold"
-            return path, "forced"
+    # ------------------------------------------------------- the search space
+    def _impl_candidates(self, impl: str) -> List[str]:
+        """Impls the search races. Under ``auto`` resolving to a kernel
+        impl, the ref oracle is always in the race — that baseline IS
+        the never-regress guarantee: the winner may be "run the oracle"
+        and auto keeps it."""
+        impls = [impl]
+        if self.backend.name == "auto" and impl != "ref":
+            impls.append("ref")
+        return impls
 
-        key = self._table_key(scheme_name, bucket, impl)
-        hit = self.table.get(key)
-        if hit is not None and hit["path"] in ("fold", "parity"):
-            return hit["path"], hit["source"]
+    def _candidates(self, cell: TuneCell) -> List[PlanCandidate]:
+        """Enumerate the cell's search space: path × block shape × grid
+        layout, plus the ref baseline under ``auto``."""
+        out: List[PlanCandidate] = []
+        if cell.theta is None:  # dense-mask family: fold vs parity
+            for impl in self._impl_candidates(cell.impl):
+                out.append(PlanCandidate("fold", impl))
+                out.append(PlanCandidate("parity", impl))
+            return out
+        # sparse family
+        for impl in self._impl_candidates(cell.impl):
+            if impl == "ref":
+                out.append(PlanCandidate("sparse_ref", "ref"))
+                continue
+            w = self.store.words
+            bw_max = self._fused_bw(cell.n_eff)
+            fused_bws = [bw_max] if bw_max else []
+            if bw_max // 2 >= 8:  # a narrower tile, if one is distinct
+                fused_bws.append(bw_max // 2)
+            for bw in fused_bws:
+                for go in ("qw", "wq"):
+                    out.append(PlanCandidate(
+                        "sparse_fused", impl,
+                        (("block_w", bw), ("grid_order", go)),
+                    ))
+            for bw in sorted({min(128, w), min(32, w)}, reverse=True):
+                for go in ("qwm", "wqm"):
+                    out.append(PlanCandidate(
+                        "sparse_pair", impl,
+                        (("block_w", bw), ("grid_order", go)),
+                    ))
+        return out
 
-        qstar = self._model_crossover()
-        # the cost model's prior: C_p says every record is touched either
-        # way (dense masks), so the crossover is purely a hardware-form
-        # question — bucket vs the roofline crossover batch
-        del costs
-        lo, hi = self.MEASURE_BAND
-        if on_mesh or not (lo * qstar <= bucket <= hi * qstar):
-            path = "parity" if bucket >= qstar else "fold"
-            self.table.put(key, path, source="model")
-            return path, "model"
+    def _prior(
+        self, cell: TuneCell
+    ) -> Tuple[str, str, Dict[str, Any]]:
+        """The analytic cost-model prior: the measurement-free answer a
+        request thread gets for a cold cell (and the seed ordering of
+        the search). Returns (path, impl, blocks)."""
+        if cell.theta is None:
+            qstar = self._model_crossover()
+            path = "parity" if cell.bucket >= qstar else "fold"
+            return path, cell.impl, {}
+        if cell.impl == "ref":
+            return "sparse_ref", "ref", {}
+        bw = self._fused_bw(cell.n_eff)
+        if bw:
+            # C_p says the work is m·BW either way; residency is the
+            # model's tiebreak — fit VMEM, walk queries outer
+            return "sparse_fused", cell.impl, {
+                "block_w": bw, "grid_order": "qw",
+            }
+        return "sparse_pair", cell.impl, {}
 
-        # one-shot measured microbenchmark at the true (bucket, n, W)
-        mask = _bench_mask(jax.random.key(0), int(bucket), self.store.n, 0.5)
-        us = {
-            "fold": _measure_us(
-                jax.jit(self._build_run("fold", impl, None, ops.on_cpu(), {})),
-                mask,
-            ),
-            "parity": _measure_us(
-                jax.jit(
-                    self._build_run("parity", impl, None, ops.on_cpu(), {})
-                ),
-                mask,
-            ),
-        }
-        path = min(us, key=us.get)
-        self.table.put(key, path, source="measured", us=us)
-        return path, "measured"
+    # ------------------------------------------------------------ the search
+    def pending(self) -> Tuple[Key, ...]:
+        """Cells planned from the prior and still awaiting their search
+        (the idle-slot work queue)."""
+        with self._lock:
+            return tuple(self._pending)
+
+    def _note_pending(self, key: Key, cell: TuneCell) -> None:
+        with self._lock:
+            if key not in self._pending and self._table_hit(key) is None:
+                self._pending[key] = cell
+
+    def tune_step(self, max_cells: int = 1) -> int:
+        """Run the autotune search for up to ``max_cells`` pending cells
+        (FIFO). Returns how many were tuned. This is the idle-slot
+        entry point: the async front calls it when the ingest queue is
+        quiet, so the table fills during lulls instead of stalling
+        requests."""
+        tuned = 0
+        while tuned < max_cells:
+            with self._lock:
+                if not self._pending:
+                    break
+                key = next(iter(self._pending))
+                cell = self._pending.pop(key)
+            self._tune_cell(key, cell)
+            tuned += 1
+        return tuned
+
+    def tune_pending(self) -> int:
+        """Drain the pending queue completely (benchmarks and shutdown
+        dumps call this; serving uses :meth:`tune_step`)."""
+        return self.tune_step(max_cells=len(self._pending) + 1_000_000)
+
+    def _bench_payload(self, key: Key, cell: TuneCell) -> jnp.ndarray:
+        """A representative payload for the cell, deterministic in
+        (planner seed, cell key) — fixed seed ⇒ reproducible search."""
+        if cell.theta is None:
+            density = 0.5
+        else:
+            density = min(
+                0.5, max(0.01, (cell.m_budget or 1) / max(cell.n_eff, 1))
+            )
+        prng = jax.random.fold_in(
+            jax.random.key(self._seed),
+            zlib.crc32(repr(key).encode()) & 0x7FFFFFFF,
+        )
+        return _bench_mask(prng, cell.bucket, self.store.n, density)
+
+    def _tune_cell(self, key: Key, cell: TuneCell) -> None:
+        """Measure every candidate for one cell and record the winner
+        (plus all timings + the device fingerprint) in the table."""
+        cands = self._candidates(cell)
+        if not cands:
+            return
+        if len(cands) == 1:
+            c = cands[0]
+            self.table.put(
+                key, c.path, impl=c.impl, blocks=dict(c.blocks),
+                source="only",
+            )
+        else:
+            payload = self._bench_payload(key, cell)
+            interp = ops.on_cpu()
+            us: Dict[str, float] = {}
+            by_label: Dict[str, PlanCandidate] = {}
+            for c in cands:
+                fn = jax.jit(self._build_run(
+                    c.path, c.impl, cell.m_budget, interp, dict(c.blocks)
+                ))
+                us[c.label] = float(self._measure(fn, payload, candidate=c))
+                by_label[c.label] = c
+            winner = by_label[min(us, key=us.get)]
+            self.table.put(
+                key, winner.path, impl=winner.impl,
+                blocks=dict(winner.blocks), source="measured", us=us,
+            )
+        with self._lock:
+            # cached model-prior plans for this cell are stale now
+            self._plans.clear()
+
+    # ---------------------------------------------------------------- plan
+    def plan(
+        self,
+        scheme_plan: Any,
+        bucket: int,
+        mesh_state: Optional[dict] = None,
+        *,
+        scheme: Any = None,
+    ) -> ExecutionPlan:
+        """One batch's wire plan -> its execution decision.
+
+        ``scheme_plan`` is the scheme's wire-level
+        :class:`~repro.core.protocol.Queries` (its ``kind`` and ``theta``
+        are the scheme-side facts execution depends on); ``bucket`` the
+        padded batch size; ``mesh_state`` the serve layer's mesh
+        residency dict (None off-mesh). ``scheme`` (a staged
+        SchemeProtocol) keys the autotune table and supplies ``costs(n)``
+        as the analytic prior; without it the plan keys on the wire kind
+        alone.
+
+        Never measures: a table hit returns the recorded search winner,
+        a miss returns the analytic prior and queues the cell for the
+        idle-slot search (single-host cells only — shard_map executors
+        are not safely microbenchmarkable mid-serving, so mesh plans
+        stay on the prior).
+        """
+        kind = scheme_plan.kind
+        theta = getattr(scheme_plan, "theta", None)
+        scheme_name = getattr(scheme, "name", None) or f"kind:{kind}"
+        costs = scheme.costs(self.store.n) if scheme is not None else None
+        on_mesh = mesh_state is not None
+        mesh_key = (
+            (id(mesh_state["mesh"]), mesh_state["raxes"]) if on_mesh else None
+        )
+        impl = self.backend.resolve()
+        interpret = ops.on_cpu()
+
+        cache_key = (scheme_name, kind, theta, int(bucket), impl, mesh_key)
+        cached = self._plans.get(cache_key)
+        if cached is not None:
+            return cached
+
+        n_eff = (
+            mesh_state["n_pad"] // mesh_state["rshards"]
+            if on_mesh else self.store.n
+        )
+        blocks: Dict[str, Any] = {}
+        m_budget = None
+        chosen_impl = impl
+        if kind == "index":
+            path, source = "direct", "only"
+        else:
+            sparse = (
+                theta is not None and theta < 0.5
+                and self._gather_pays(theta, costs, scheme)
+            )
+            cell_theta = theta if sparse else None
+            if sparse:
+                m_budget = ops.sparse_index_budget(n_eff, theta)
+            cell = TuneCell(
+                scheme=scheme_name, bucket=int(bucket), impl=impl,
+                theta=cell_theta, n_eff=n_eff, m_budget=m_budget,
+            )
+            if not sparse and self._parity_min_batch is not None:
+                path = (
+                    "parity" if bucket >= self._parity_min_batch else "fold"
+                )
+                source = "forced"
+            else:
+                key = self._table_key(scheme_name, bucket, impl, cell_theta)
+                hit = self._table_hit(key)
+                if hit is not None:
+                    path = hit["path"]
+                    chosen_impl = hit.get("impl", impl)
+                    blocks = dict(hit.get("blocks", {}))
+                    source = hit["source"]
+                else:
+                    path, chosen_impl, blocks = self._prior(cell)
+                    source = (
+                        "only" if sparse and impl == "ref" else "model"
+                    )
+                    if not on_mesh and source == "model":
+                        self._note_pending(key, cell)
+
+        # the direct family's lookup has exactly one physical form per
+        # residency (a gather, owned by the serve layer's index path) —
+        # its plan is decision-only, like every mesh plan
+        run = None
+        if not on_mesh and path != "direct":
+            run = jax.jit(
+                self._build_run(
+                    path, chosen_impl, m_budget, interpret, blocks
+                )
+            )
+        plan = ExecutionPlan(
+            path=path,
+            impl=chosen_impl,
+            bucket=int(bucket),
+            n=n_eff,
+            blocks=tuple(sorted(blocks.items())),
+            m_budget=m_budget,
+            theta=theta,
+            interpret=interpret,
+            source=source,
+            run=run,
+        )
+        self._plans[cache_key] = plan
+        return plan
 
     def _gather_pays(
         self, theta: float, costs: Optional[Dict[str, float]], scheme: Any
@@ -499,138 +868,17 @@ class KernelPlanner:
         budget = ops.sparse_index_budget(n, min(max(touched / n, 1e-9), 0.5))
         return budget < self.GATHER_DENSE_CUTOFF * n
 
-    def _decide_sparse_path(
-        self, scheme_name: str, bucket: int, impl: str, on_mesh: bool,
-        n_eff: int, m_budget: int, theta: float,
-    ) -> Tuple[str, str, Dict[str, int]]:
-        """Sparse family: ref oracle on the ref impl; fused kernel vs the
-        streaming pair on pallas (VMEM fit gates, the one-shot
-        microbenchmark settles)."""
-        if impl == "ref":
-            return "sparse_ref", "only", {}
-        bw = fused_block_w(n_eff, self.store.words)
-        if bw == 0:
-            return "sparse_pair", "model", {}
-        blocks = {"block_w": bw}
-        if on_mesh:
-            # no shard_map microbench: VMEM fit is the decision
-            return "sparse_fused", "model", blocks
-        key = self._table_key(scheme_name, bucket, impl, theta)
-        hit = self.table.get(key)
-        if hit is not None and hit["path"].startswith("sparse"):
-            return hit["path"], hit["source"], blocks
-        mask = _bench_mask(
-            jax.random.key(1), int(bucket), self.store.n,
-            min(0.5, max(0.01, m_budget / max(n_eff, 1))),
-        )
-        interp = ops.on_cpu()
-        us = {
-            "sparse_fused": _measure_us(
-                jax.jit(self._build_run(
-                    "sparse_fused", impl, m_budget, interp, blocks
-                )),
-                mask,
-            ),
-            "sparse_pair": _measure_us(
-                jax.jit(
-                    self._build_run("sparse_pair", impl, m_budget, interp, {})
-                ),
-                mask,
-            ),
-        }
-        path = min(us, key=us.get)
-        self.table.put(key, path, source="measured", us=us)
-        return path, "measured", blocks
-
-    # ---------------------------------------------------------------- plan
-    def plan(
-        self,
-        scheme_plan: Any,
-        bucket: int,
-        mesh_state: Optional[dict] = None,
-        *,
-        scheme: Any = None,
-    ) -> ExecutionPlan:
-        """One batch's wire plan -> its execution decision.
-
-        ``scheme_plan`` is the scheme's wire-level
-        :class:`~repro.core.protocol.Queries` (its ``kind`` and ``theta``
-        are the scheme-side facts execution depends on); ``bucket`` the
-        padded batch size; ``mesh_state`` the serve layer's mesh
-        residency dict (None off-mesh). ``scheme`` (a staged
-        SchemeProtocol) keys the autotune table and supplies ``costs(n)``
-        as the analytic prior; without it the plan keys on the wire kind
-        alone.
-        """
-        kind = scheme_plan.kind
-        theta = getattr(scheme_plan, "theta", None)
-        scheme_name = getattr(scheme, "name", None) or f"kind:{kind}"
-        costs = scheme.costs(self.store.n) if scheme is not None else None
-        on_mesh = mesh_state is not None
-        mesh_key = (
-            (id(mesh_state["mesh"]), mesh_state["raxes"]) if on_mesh else None
-        )
-        impl = self.backend.resolve()
-        interpret = ops.on_cpu()
-
-        cache_key = (scheme_name, kind, theta, int(bucket), impl, mesh_key)
-        cached = self._plans.get(cache_key)
-        if cached is not None:
-            return cached
-
-        n_eff = (
-            mesh_state["n_pad"] // mesh_state["rshards"]
-            if on_mesh else self.store.n
-        )
-        blocks: Dict[str, int] = {}
-        m_budget = None
-        if kind == "index":
-            path, source = "direct", "only"
-        elif theta is not None and theta < 0.5 and self._gather_pays(
-            theta, costs, scheme
-        ):
-            m_budget = ops.sparse_index_budget(n_eff, theta)
-            path, source, blocks = self._decide_sparse_path(
-                scheme_name, bucket, impl, on_mesh, n_eff, m_budget, theta
-            )
-        else:
-            path, source = self._decide_mask_path(
-                scheme_name, bucket, impl, on_mesh, costs
-            )
-
-        # the direct family's lookup has exactly one physical form per
-        # residency (a gather, owned by the serve layer's index path) —
-        # its plan is decision-only, like every mesh plan
-        run = None
-        if not on_mesh and path != "direct":
-            run = jax.jit(
-                self._build_run(path, impl, m_budget, interpret, blocks)
-            )
-        plan = ExecutionPlan(
-            path=path,
-            impl=impl,
-            bucket=int(bucket),
-            n=n_eff,
-            blocks=tuple(sorted(blocks.items())),
-            m_budget=m_budget,
-            theta=theta,
-            interpret=interpret,
-            source=source,
-            run=run,
-        )
-        self._plans[cache_key] = plan
-        return plan
-
     def invalidate(self) -> None:
         """Drop cached plans (mesh changed or store swapped); the
         autotune table survives — measurements key on shapes, not
         residency."""
-        self._plans.clear()
+        with self._lock:
+            self._plans.clear()
 
 
 def _path_answer_fn(
     path: str, impl: str, m_budget: Optional[int], interp: bool,
-    blocks: Dict[str, int],
+    blocks: Dict[str, Any],
 ) -> Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]:
     """THE path→kernel dispatch: ``(operand, payload) -> [B, W]`` where
     ``operand`` is the packed db ([n, W] uint32) — or the bitplanes for
@@ -639,7 +887,8 @@ def _path_answer_fn(
     :func:`shard_answer_fn` hands the same function to ``shard_map``
     with the local shard as operand. The ``ref`` impl routes to the jnp
     oracles — bit-identical to the kernels, asserted exactly in
-    tests/test_kernels.py."""
+    tests/test_kernels.py. ``blocks`` carries the search's block shape
+    (``block_w``, ``grid_order``) for the sparse kernel forms."""
     if path == "fold":
         if impl == "ref":
             return ref.xor_fold_ref
@@ -657,14 +906,18 @@ def _path_answer_fn(
             db, indices_from_mask(m, m_budget)
         )
     if path == "sparse_pair":
+        bw = blocks.get("block_w", 128)
+        go = blocks.get("grid_order", "qwm")
         return lambda db, m: gather_xor(
-            db, indices_from_mask(m, m_budget), interpret=interp
+            db, indices_from_mask(m, m_budget),
+            block_w=bw, grid_order=go, interpret=interp,
         )
     if path == "sparse_fused":
         bw = blocks["block_w"]
+        go = blocks.get("grid_order", "qw")
         return lambda db, m: fused_gather_fold(
             db, indices_from_mask(m, m_budget),
-            block_w=bw, interpret=interp,
+            block_w=bw, grid_order=go, interpret=interp,
         )
     raise ValueError(f"no kernel form for path {path!r}")
 

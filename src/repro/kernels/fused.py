@@ -16,13 +16,27 @@ folding them into a register accumulator. One kernel launch, one output
 write, no cross-step accumulator — the gather→xor→fold chain the unfused
 pair spreads over m grid steps collapses into in-kernel control flow.
 
+Two shape knobs are exposed to the execution planner's autotune search
+(DESIGN.md §Execution backends): ``block_w`` (the word-block width) and
+``grid_order`` — ``"qw"`` walks queries in the outer grid axis (the db
+word-block is re-fetched per query), ``"wq"`` walks word-blocks outer so
+one VMEM-resident db block serves *every* query before the next block is
+fetched. Which wins depends on q, n·BW, and the DMA/compute balance of
+the host — exactly the kind of question the planner settles by
+measurement, not by napkin.
+
 The price is VMEM residency: the db word-block is [n, BW] uint32, so the
 kernel only applies when ``n·BW·4`` fits the VMEM budget —
 :func:`fused_block_w` picks the widest power-of-two BW that fits and
 returns 0 when none does, which is exactly the signal the execution
 planner (``repro.kernels.backend``) uses to fall back to the unfused
-pair. At CT scale (n = 10⁶) the fused form only applies per record
-*shard*; single-host million-record stores take the streaming pair.
+pair. The budget derives from the *local* device
+(:func:`fused_vmem_budget`: half the device's VMEM, by ``device_kind``),
+falling back to the v5e-shaped :data:`FUSED_VMEM_BUDGET_BYTES` constant
+off-TPU — so the gate fires where this host's VMEM says it should, not
+where a v5e's would. At CT scale (n = 10⁶) the fused form only applies
+per record *shard*; single-host million-record stores take the streaming
+pair.
 
 Bit-identity: fused(db, idx) == gather_xor(db, idx) == xor_fold(db, mask)
 == the jnp oracle, proven exactly in tests/test_kernels.py and swept by
@@ -32,27 +46,67 @@ hypothesis in tests/test_kernel_properties.py.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["fused_gather_fold", "fused_block_w", "FUSED_VMEM_BUDGET_BYTES"]
+__all__ = [
+    "fused_gather_fold",
+    "fused_block_w",
+    "fused_vmem_budget",
+    "FUSED_VMEM_BUDGET_BYTES",
+]
 
 DEFAULT_BLOCK_W = 128
 
-# VMEM the fused db word-block may occupy (half of a v5e core's 16 MiB,
-# leaving room for the output block, the loop state and double buffering)
+# Fallback VMEM budget the fused db word-block may occupy (half of a v5e
+# core's 16 MiB, leaving room for the output block, the loop state and
+# double buffering) — used when the local device's VMEM is unknown
 FUSED_VMEM_BUDGET_BYTES = 8 * 1024 * 1024
 
+# per-core VMEM by TPU device kind (bytes). Most generations carry
+# 16 MiB of VMEM per core; v4 doubles it. Matching is by substring of
+# jax's device_kind string ("TPU v4", "TPU v5 lite", ...); unknown kinds
+# fall back to the 16 MiB default, non-TPU hosts to the constant above.
+_TPU_VMEM_BYTES = {
+    "v4": 32 * 1024 * 1024,
+}
+_TPU_VMEM_DEFAULT = 16 * 1024 * 1024
+
+
+def fused_vmem_budget() -> int:
+    """VMEM budget for the fused db word-block, derived from the local
+    device: half the device's per-core VMEM on TPU (the other half stays
+    free for the output block, loop state and double buffering — the
+    same split the old hardcoded constant assumed for a v5e), the
+    :data:`FUSED_VMEM_BUDGET_BYTES` fallback anywhere else. The
+    execution planner threads a ``PIRConfig.fused_vmem_budget_bytes``
+    override past this entirely."""
+    dev = jax.devices()[0]
+    if dev.platform != "tpu":
+        return FUSED_VMEM_BUDGET_BYTES
+    kind = getattr(dev, "device_kind", "") or ""
+    vmem = _TPU_VMEM_DEFAULT
+    for sub, size in _TPU_VMEM_BYTES.items():
+        if sub in kind.lower():
+            vmem = size
+            break
+    return vmem // 2
+
+
 def fused_block_w(n: int, w: int, *, block_w: int = DEFAULT_BLOCK_W,
-                  budget_bytes: int = FUSED_VMEM_BUDGET_BYTES) -> int:
+                  budget_bytes: Optional[int] = None) -> int:
     """Widest power-of-two word-block ≤ min(block_w, W) whose [n, BW]
     uint32 db slab fits the VMEM budget; 0 when nothing ≥ min(8, W)
     words fits (caller must fall back to the unfused streaming pair — a
     lane-starved sliver block would waste the VPU even if it technically
-    fit)."""
+    fit). ``budget_bytes=None`` derives the budget from the local device
+    (:func:`fused_vmem_budget`)."""
+    if budget_bytes is None:
+        budget_bytes = fused_vmem_budget()
     cap = max(1, min(block_w, w))
     bw = 1 << (cap.bit_length() - 1)  # round down to a power of two
     floor = min(8, bw)
@@ -61,8 +115,8 @@ def fused_block_w(n: int, w: int, *, block_w: int = DEFAULT_BLOCK_W,
     return bw if n * bw * 4 <= budget_bytes else 0
 
 
-def _kernel(idx_ref, db_ref, out_ref):
-    b = pl.program_id(0)
+def _kernel(idx_ref, db_ref, out_ref, *, b_axis: int):
+    b = pl.program_id(b_axis)
     m = idx_ref.shape[1]
     bw = out_ref.shape[1]
 
@@ -80,39 +134,59 @@ def _kernel(idx_ref, db_ref, out_ref):
     )
 
 
-@functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("block_w", "grid_order", "interpret")
+)
 def fused_gather_fold(
     db: jnp.ndarray,
     idx: jnp.ndarray,
     *,
     block_w: int = DEFAULT_BLOCK_W,
+    grid_order: str = "qw",
     interpret: bool = False,
 ) -> jnp.ndarray:
     """db: [n, W] uint32; idx: [q, m] int32 (−1 = padding) -> [q, W].
 
-    Semantics identical to ``gather_xor(db, idx)``; see the module
-    docstring for when the planner picks which.
+    Semantics identical to ``gather_xor(db, idx)`` for every
+    ``grid_order``; see the module docstring for the knobs the planner's
+    autotune search sweeps and when it picks which.
     """
+    if grid_order not in ("qw", "wq"):
+        raise ValueError(f"grid_order must be 'qw' or 'wq', got {grid_order!r}")
     n, w = db.shape
     q, m = idx.shape
 
     bw = min(block_w, w)
     wp = -w % bw
     db_p = jnp.pad(db, ((0, 0), (0, wp)))
+    wblocks = (w + wp) // bw
 
-    grid = (q, (w + wp) // bw)
+    if grid_order == "qw":
+        # queries outer: the db word-block is re-fetched per query
+        grid = (q, wblocks)
+        db_map = lambda b, j, idx_ref: (0, j)
+        out_map = lambda b, j, idx_ref: (b, j)
+        b_axis = 0
+    else:
+        # word-blocks outer: one resident db block answers every query
+        # before the next block is DMA'd in
+        grid = (wblocks, q)
+        db_map = lambda j, b, idx_ref: (0, j)
+        out_map = lambda j, b, idx_ref: (b, j)
+        b_axis = 1
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
         in_specs=[
             # the whole record axis of one word-block, VMEM-resident for
             # the duration of the in-kernel index walk
-            pl.BlockSpec((n, bw), lambda b, j, idx_ref: (0, j)),
+            pl.BlockSpec((n, bw), db_map),
         ],
-        out_specs=pl.BlockSpec((1, bw), lambda b, j, idx_ref: (b, j)),
+        out_specs=pl.BlockSpec((1, bw), out_map),
     )
     out = pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, b_axis=b_axis),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((q, w + wp), jnp.uint32),
         interpret=interpret,

@@ -7,9 +7,14 @@ scalar-prefetched indices to drive the BlockSpec index_map — the TPU
 analogue of the CPU implementation's pointer-chasing gather.
 
 Layout: idx [q, m] int32 (selected record ids per query, padded with -1;
-m = ceil(θ·n·slack) is static). Grid: (q, w_blocks, m); the output block
-[1, BW] stays in VMEM across the m innermost steps while selected record
-blocks are DMA'd in; padded slots skip the XOR via @pl.when.
+m = ceil(θ·n·slack) is static). Grid: (q, w_blocks, m) by default; the
+output block [1, BW] stays in VMEM across the m innermost steps while
+selected record blocks are DMA'd in; padded slots skip the XOR via
+@pl.when. ``grid_order="wqm"`` swaps the two outer axes (word-blocks
+outer, queries middle) — the m accumulation axis always stays innermost,
+so both orders write each output block exactly once and are bit-identical;
+which order streams better is the execution planner's autotune search to
+settle (DESIGN.md §Execution backends), along with the ``block_w`` tile.
 
 Per-step VMEM: db row block 1·BW·4 + out 1·BW·4 ≈ 1 KiB at BW=128 — the
 kernel is pure DMA-bound streaming, as the cost model says it should be.
@@ -29,8 +34,8 @@ __all__ = ["gather_xor", "indices_from_mask"]
 DEFAULT_BLOCK_W = 128
 
 
-def _kernel(idx_ref, db_ref, out_ref):
-    b = pl.program_id(0)
+def _kernel(idx_ref, db_ref, out_ref, *, b_axis: int):
+    b = pl.program_id(b_axis)
     i = pl.program_id(2)
 
     @pl.when(i == 0)
@@ -42,37 +47,55 @@ def _kernel(idx_ref, db_ref, out_ref):
         out_ref[...] = out_ref[...] ^ db_ref[...]
 
 
-@functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("block_w", "grid_order", "interpret")
+)
 def gather_xor(
     db: jnp.ndarray,
     idx: jnp.ndarray,
     *,
     block_w: int = DEFAULT_BLOCK_W,
+    grid_order: str = "qwm",
     interpret: bool = False,
 ) -> jnp.ndarray:
     """db: [n, W] uint32; idx: [q, m] int32 (−1 = padding) -> [q, W]."""
+    if grid_order not in ("qwm", "wqm"):
+        raise ValueError(
+            f"grid_order must be 'qwm' or 'wqm', got {grid_order!r}"
+        )
     n, w = db.shape
     q, m = idx.shape
 
     bw = min(block_w, w)
     wp = -w % bw
     db_p = jnp.pad(db, ((0, 0), (0, wp)))
+    wblocks = (w + wp) // bw
 
-    grid = (q, (w + wp) // bw, m)
+    if grid_order == "qwm":
+        grid = (q, wblocks, m)
+        b_axis, j_axis = 0, 1
+    else:
+        grid = (wblocks, q, m)
+        b_axis, j_axis = 1, 0
+
+    def db_map(*args):
+        ids, idx_ref = args[:3], args[3]
+        # one record row per innermost step, selected by the prefetched
+        # index; padded (-1) slots clamp to row 0 and are skipped in-kernel
+        return (jnp.maximum(idx_ref[ids[b_axis], ids[2]], 0), ids[j_axis])
+
+    def out_map(*args):
+        ids = args[:3]
+        return (ids[b_axis], ids[j_axis])
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
-        in_specs=[
-            # one record row per innermost step, selected by the prefetched
-            # index; padded (-1) slots clamp to row 0 and are skipped in-kernel
-            pl.BlockSpec(
-                (1, bw), lambda b, j, i, idx_ref: (jnp.maximum(idx_ref[b, i], 0), j)
-            ),
-        ],
-        out_specs=pl.BlockSpec((1, bw), lambda b, j, i, idx_ref: (b, j)),
+        in_specs=[pl.BlockSpec((1, bw), db_map)],
+        out_specs=pl.BlockSpec((1, bw), out_map),
     )
     out = pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, b_axis=b_axis),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((q, w + wp), jnp.uint32),
         interpret=interpret,

@@ -65,8 +65,10 @@ def build_args() -> argparse.ArgumentParser:
                          "registry; DESIGN.md §Execution backends)")
     ap.add_argument("--autotune-file", default="",
                     help="JSON autotune table: loaded at startup when it "
-                         "exists, written back (with this run's one-shot "
-                         "measurements) at exit")
+                         "exists (entries measured on other devices are "
+                         "dropped), written back — with this run's search "
+                         "results, pending cells tuned at exit — so the "
+                         "next run starts warm")
     return ap
 
 
@@ -193,8 +195,15 @@ def main() -> None:
           f"backend={engine.backend.backend_name} "
           f"paths: {engine.backend.path_counts}")
     if args.autotune_file:
+        if engine.backend.autotune_dropped:
+            print(f"autotune load dropped {engine.backend.autotune_dropped} "
+                  f"entries measured on a different device")
+        # finish the search for any still-cold cells so the dumped table
+        # carries measured winners, not priors
+        tuned = engine.backend.tune_pending()
         print(f"autotune table -> {engine.backend.save_autotune()} "
-              f"({len(engine.backend.planner.table)} entries)")
+              f"({len(engine.backend.planner.table)} entries, "
+              f"{tuned} tuned at exit)")
 
 
 if __name__ == "__main__":

@@ -37,7 +37,6 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-import time
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -335,7 +334,8 @@ class ServingPipeline:
 
         routed = exec_plan = None
         padded = 0
-        t0 = time.perf_counter()
+        plan_s = 0.0
+        clock = self.scheduler.clock
         if misses:
             b = len(misses)
             padded = self.scheduler.padded_size(b)
@@ -343,6 +343,12 @@ class ServingPipeline:
                 [r.index for r in misses] + [0] * (padded - b), jnp.int32
             )
             with self._phase_lock:
+                # the plan timer starts only once the phase lock is held:
+                # under the double-buffered flush, waiting here for the
+                # concurrent execute's bookkeeping is queue contention,
+                # not plan cost — billing it as plan time inflated the
+                # scheduler's service EMA and shrank the adaptive target
+                t0 = clock()
                 self._key, sub = jax.random.split(self._key)
                 pre = (
                     self.cache.take_pre(padded)
@@ -350,10 +356,11 @@ class ServingPipeline:
                 )
             routed = self.router.plan(sub, self.store.n, q_idx, pre=pre)
             exec_plan = self.backend.prepare(routed, scheme=self.staged)
+            plan_s = clock() - t0
         return PlannedBatch(
             batch=list(batch), results=results, misses=misses,
             miss_pos=miss_pos, padded=padded, routed=routed,
-            exec_plan=exec_plan, plan_s=time.perf_counter() - t0,
+            exec_plan=exec_plan, plan_s=plan_s,
         )
 
     def execute_planned(
@@ -374,14 +381,17 @@ class ServingPipeline:
             # timing from execute's start (not the plan's t0) keeps the
             # scheduler's EMA honest when the double buffer queues this
             # execute behind the previous batch's — queue wait is not
-            # per-batch cost and would otherwise shrink the target
-            t1 = time.perf_counter()
+            # per-batch cost and would otherwise shrink the target.
+            # Both phases read the scheduler's own clock so fake-clock
+            # tests can pin exactly what the EMA is fed.
+            clock = self.scheduler.clock
+            t1 = clock()
             responses = self.backend.answer_batch(
                 routed, plan=planned.exec_plan, scheme=self.staged
             )
             out = self.router.finalize(routed, responses)
             out.block_until_ready()
-            dt = planned.plan_s + (time.perf_counter() - t1)
+            dt = planned.plan_s + (clock() - t1)
 
             nbytes = -(-self.store.record_bits // 8)
             raw = packing.unpack_bytes_np(np.asarray(out[:b]), nbytes)
@@ -460,6 +470,15 @@ class ServingPipeline:
         # materialize here, on the producer: banking pending randomness
         # would just move the wait into the next flush
         return int(self.cache.put_pre(bucket, block_pre_ready(pre)))
+
+    def autotune_step(self, max_cells: int = 1) -> int:
+        """Run the execution backend's autotune search for up to
+        ``max_cells`` pending plan cells (DESIGN.md §Execution backends).
+        The async frontend calls this from its flush worker while idle —
+        the second idle-slot job next to :meth:`prefill_cache` — so cold
+        cells planned from the analytic prior get their measured winner
+        during lulls, never on a request thread. Returns cells tuned."""
+        return self.backend.autotune_step(max_cells)
 
     def step(self) -> Dict[str, np.ndarray]:
         """Serve at most one scheduled batch (≤ max_batch; the rest of the

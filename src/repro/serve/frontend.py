@@ -12,7 +12,8 @@ front of it (DESIGN.md §Async front):
                                                 BatchScheduler
                                                       │
                      flush worker: deadline timers, ready() cuts,
-                     idle-time cache prefill, per-request futures
+                     idle-time cache prefill + autotune steps,
+                     per-request futures
 
 * **Concurrency contract**: any number of caller threads (or asyncio
   tasks via :meth:`asubmit`) may submit at once. ``ingest_workers``
@@ -45,10 +46,14 @@ front of it (DESIGN.md §Async front):
   following batch can miss the memo and go out as a fresh (fully
   priced, fresh-randomness) query — answers and (ε, δ) accounting are
   unaffected, the hit just materializes one batch later.
-* **Idle prefill**: between flushes the worker banks precomputed batch
-  randomness into the cross-batch cache
+* **Idle prefill + idle autotune**: between flushes the worker banks
+  precomputed batch randomness into the cross-batch cache
   (:meth:`~repro.serve.engine.ServingPipeline.prefill_cache`), moving
-  query generation off the serve critical path.
+  query generation off the serve critical path — and runs one step of
+  the execution backend's autotune search
+  (:meth:`~repro.serve.engine.ServingPipeline.autotune_step`) per lull,
+  so plan cells served cold from the analytic prior acquire their
+  measured winner without a request thread ever microbenchmarking.
 * **Graceful drain**: :meth:`drain` forces the backlog through (partial
   batches included) and blocks until every accepted future is resolved;
   ``close(drain=True)`` (also the context-manager exit) drains before
@@ -94,6 +99,7 @@ class AsyncFrontend:
         idle_tick_s: float = 0.005,
         drain_timeout_s: float = 1.0,
         prefill: bool = True,
+        autotune: bool = True,
         double_buffer: bool = True,
     ):
         if ingest_workers < 1:
@@ -112,6 +118,7 @@ class AsyncFrontend:
         self.idle_tick_s = idle_tick_s
         self.drain_timeout_s = drain_timeout_s
         self.prefill = prefill
+        self.autotune = autotune
         self.double_buffer = double_buffer
         self._executor: Optional[ThreadPoolExecutor] = None
 
@@ -126,7 +133,7 @@ class AsyncFrontend:
         self._stop = False
         self._threads: List[threading.Thread] = []
         self._counters = {"accepted": 0, "shed": 0, "served": 0,
-                          "failed": 0, "prefilled": 0}
+                          "failed": 0, "prefilled": 0, "autotuned": 0}
 
     # ----------------------------------------------------------- lifecycle
     def start(self) -> "AsyncFrontend":
@@ -453,6 +460,15 @@ class AsyncFrontend:
                 if self.pipeline.prefill_cache():
                     with self._cv:
                         self._counters["prefilled"] += 1
+                    continue
+            # second idle-slot job: one autotune search step per lull —
+            # cold plan cells queued by request threads get their
+            # measured winner here, never on the serving path (DESIGN.md
+            # §Execution backends)
+            if self.autotune and idle:
+                if self.pipeline.autotune_step():
+                    with self._cv:
+                        self._counters["autotuned"] += 1
                     continue
             with self._cv:
                 if self._stop:

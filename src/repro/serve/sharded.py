@@ -116,6 +116,7 @@ class ShardedBackend:
         autotune: Optional[AutotuneTable] = None,
         autotune_file: Optional[str] = None,
         parity_min_batch: Optional[int] = None,
+        vmem_budget_bytes: Optional[int] = None,
         kernel_impl: Optional[str] = None,
     ):
         if kernel_impl is not None:
@@ -132,11 +133,17 @@ class ShardedBackend:
             backend=backend,
             table=autotune,
             parity_min_batch=parity_min_batch,
+            vmem_budget_bytes=vmem_budget_bytes,
         )
         self.autotune_file = autotune_file
+        #: autotune entries refused at load because they were measured on
+        #: a different device (see AutotuneTable.update)
+        self.autotune_dropped = 0
         if autotune_file is not None:
             try:
-                self.planner.table.update(AutotuneTable.load(autotune_file))
+                self.autotune_dropped = self.planner.table.update(
+                    AutotuneTable.load(autotune_file)
+                )
             except FileNotFoundError:
                 pass  # cold start; save_autotune() creates it
         self.stats: Dict[int, ServerStats] = {}
@@ -165,6 +172,19 @@ class ShardedBackend:
             raise ValueError("no autotune_file configured and no path given")
         dump_autotune(path, self.planner.table)
         return path
+
+    # -------------------------------------------------------------- autotune
+    def autotune_step(self, max_cells: int = 1) -> int:
+        """Run the planner's autotune search for up to ``max_cells``
+        pending cells (the async front's idle-slot job); returns cells
+        tuned. Request threads never call this — they plan from the
+        table or the analytic prior only."""
+        return self.planner.tune_step(max_cells)
+
+    def tune_pending(self) -> int:
+        """Drain the planner's pending-cell queue (benchmarks and
+        shutdown dumps); returns cells tuned."""
+        return self.planner.tune_pending()
 
     # ------------------------------------------------------------ stragglers
     def ensure_replicas(self, d: int) -> None:

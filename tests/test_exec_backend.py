@@ -20,12 +20,26 @@ from repro.kernels.backend import (
     AutotuneTable,
     ExecutionPlan,
     KernelPlanner,
+    device_fingerprint,
     get_backend,
     register_backend,
     registered_backends,
     resolve_kernel_impl_alias,
 )
 from repro.serve import SchemeRouter, ShardedBackend
+
+
+def _counting_measure(calls=None):
+    """An injected microbenchmark that never touches the clock: records
+    each measured candidate and returns a deterministic figure (later
+    candidates slower, so the first candidate always wins)."""
+    calls = calls if calls is not None else []
+
+    def measure(fn, *args, candidate=None):
+        calls.append(candidate)
+        return float(100 + len(calls))
+
+    return measure, calls
 
 
 # ---------------------------------------------------------------- registry
@@ -68,19 +82,26 @@ def test_sharded_backend_kernel_impl_deprecated_alias():
 # ----------------------------------------------------------- autotune table
 def test_autotune_table_json_roundtrip(tmp_path):
     table = AutotuneTable()
-    table.put(("chor", 64, "ref", 512, 6, "mask"), "parity",
-              source="measured", us={"fold": 10.5, "parity": 3.25})
+    table.put(("chor", 64, "ref", 512, 6, "mask"), "parity", impl="ref",
+              source="measured",
+              us={"fold/ref": 10.5, "parity/ref": 3.25})
     table.put(("sparse", 8, "pallas", 512, 6, "sparse@0.25"),
-              "sparse_fused", source="model")
+              "sparse_fused", impl="pallas",
+              blocks={"block_w": 64, "grid_order": "wq"}, source="measured")
     path = tmp_path / "autotune.json"
     table.dump(str(path))
     blob = json.loads(path.read_text())
     assert blob["version"] == AutotuneTable.VERSION
     assert {e["scheme"] for e in blob["entries"]} == {"chor", "sparse"}
+    # every dumped entry carries the measuring device's fingerprint
+    assert all(e["device"] == device_fingerprint() for e in blob["entries"])
     back = AutotuneTable.load(str(path))
     assert len(back) == 2
     hit = back.get(("chor", 64, "ref", 512, 6, "mask"))
-    assert hit["path"] == "parity" and hit["us"]["parity"] == 3.25
+    assert hit["path"] == "parity" and hit["us"]["parity/ref"] == 3.25
+    sp = back.get(("sparse", 8, "pallas", 512, 6, "sparse@0.25"))
+    assert sp["impl"] == "pallas"
+    assert sp["blocks"] == {"block_w": 64, "grid_order": "wq"}
 
 
 def test_autotune_table_version_guard():
@@ -88,13 +109,36 @@ def test_autotune_table_version_guard():
         AutotuneTable.from_json('{"version": 99, "entries": []}')
 
 
+def test_autotune_merge_drops_and_counts_foreign_devices():
+    """Satellite bugfix: a table dumped on a different host/accelerator
+    must not silently pin wrong plans here — update() merges only
+    entries fingerprinted for this device and counts the rest."""
+    local = AutotuneTable()
+    k_here = ("chor", 64, "ref", 512, 6, "mask")
+    k_there = ("chor", 128, "ref", 512, 6, "mask")
+    incoming = AutotuneTable()
+    incoming.put(k_here, "fold", impl="ref", source="measured")
+    incoming.put(
+        k_there, "parity", impl="pallas", source="measured",
+        device={"platform": "tpu", "device_kind": "TPU v9000"},
+    )
+    dropped = local.update(incoming)
+    assert dropped == 1 and local.dropped == 1
+    assert local.get(k_here) is not None and local.get(k_there) is None
+    # roundtrip keeps foreign entries verbatim; only the *merge* filters
+    back = AutotuneTable.from_json(incoming.to_json())
+    assert back.get(k_there)["device"]["device_kind"] == "TPU v9000"
+    assert back.update(AutotuneTable()) == 0  # filter is one-directional
+
+
 def test_sharded_backend_autotune_file_cold_start_and_save(tmp_path):
     store = make_synthetic_store(128, 8, seed=1)
     path = str(tmp_path / "at.json")
     backend = ShardedBackend(store, autotune_file=path)  # missing: cold
+    assert backend.autotune_dropped == 0
     backend.planner.table.put(
-        ("chor", 64, "ref", 128, 2, "mask"), "fold", source="measured",
-        us={"fold": 1.0, "parity": 2.0},
+        ("chor", 64, "ref", 128, 2, "mask"), "fold", impl="ref",
+        source="measured", us={"fold/ref": 1.0, "parity/ref": 2.0},
     )
     assert backend.save_autotune() == path
     # a second backend warm-starts from the dumped decisions
@@ -102,6 +146,25 @@ def test_sharded_backend_autotune_file_cold_start_and_save(tmp_path):
     assert warm.planner.table.get(
         ("chor", 64, "ref", 128, 2, "mask")
     )["path"] == "fold"
+
+
+def test_sharded_backend_autotune_file_foreign_entries_dropped(tmp_path):
+    """Loading a file dumped on another device is a counted no-op, not a
+    silent plan pin."""
+    store = make_synthetic_store(128, 8, seed=1)
+    path = str(tmp_path / "foreign.json")
+    foreign = AutotuneTable()
+    foreign.put(
+        ("chor", 64, "ref", 128, 2, "mask"), "parity", impl="pallas",
+        source="measured",
+        device={"platform": "tpu", "device_kind": "TPU v9000"},
+    )
+    foreign.dump(path)
+    backend = ShardedBackend(
+        store, autotune=AutotuneTable(), autotune_file=path
+    )
+    assert backend.autotune_dropped == 1
+    assert len(backend.planner.table) == 0
 
 
 # ------------------------------------------------------------ plan decisions
@@ -195,31 +258,145 @@ def test_plan_forced_parity_crossover():
     assert (hi.path, hi.source) == ("parity", "forced")
 
 
-def test_plan_measured_inside_band_model_outside_and_one_shot():
-    """Inside the uncertainty band the fold/parity choice is a one-shot
-    measured microbenchmark (cached in the table); far below the model
-    crossover the analytic prior decides without timing anything."""
+def test_plan_never_measures_on_request_path():
+    """Satellite bugfix: a cold cell costs zero microbenchmarks on the
+    calling (request) thread — plan() answers from the analytic prior
+    and queues the cell for the idle-slot search."""
     store = make_synthetic_store(200, 8, seed=4)
     sch = make_scheme("chor", d=2, d_a=1).staged
-    table = AutotuneTable()
-    planner = KernelPlanner(store, table=table)
+    measure, calls = _counting_measure()
+    planner = KernelPlanner(store, table=AutotuneTable(), measure=measure)
 
-    tiny = planner.plan(_routed(sch, store.n, 2), 2, None, scheme=sch)
-    assert tiny.source == "model" and tiny.path == "fold"
-    key_tiny = ("chor", 2, "ref", 200, 2, "mask")
-    assert table.get(key_tiny)["us"] == {}  # nothing was timed
+    cold = planner.plan(_routed(sch, store.n, 64), 64, None, scheme=sch)
+    assert cold.source == "model"
+    assert calls == []  # nothing was timed inline
+    key = planner._table_key("chor", 64, "ref")
+    assert planner.pending() == (key,)
+    assert planner.table.get(key) is None  # priors are not table entries
 
-    banded = planner.plan(_routed(sch, store.n, 64), 64, None, scheme=sch)
-    assert banded.source == "measured"
-    entry = table.get(("chor", 64, "ref", 200, 2, "mask"))
-    assert set(entry["us"]) == {"fold", "parity"}
-    assert entry["path"] == banded.path
 
-    # one-shot: a fresh planner sharing the table reuses the measurement
-    again = KernelPlanner(store, table=table).plan(
-        _routed(sch, store.n, 64, key=1), 64, None, scheme=sch
+def test_tune_step_measures_all_candidates_and_replan_uses_winner():
+    """The idle-slot search measures every candidate for the cell,
+    records the winner + all timings + the device fingerprint, and a
+    re-plan of the same cell returns the measured winner."""
+    store = make_synthetic_store(200, 8, seed=4)
+    sch = make_scheme("chor", d=2, d_a=1).staged
+    measure, calls = _counting_measure()
+    planner = KernelPlanner(store, table=AutotuneTable(), measure=measure)
+    routed = _routed(sch, store.n, 64)
+    planner.plan(routed, 64, None, scheme=sch)
+
+    assert planner.tune_step() == 1
+    assert planner.pending() == ()
+    key = planner._table_key("chor", 64, "ref")
+    entry = planner.table.get(key)
+    assert entry["source"] == "measured"
+    assert entry["device"] == device_fingerprint()
+    # the dense-mask family races fold vs parity on the resolved impl
+    assert set(entry["us"]) == {"fold/ref", "parity/ref"}
+    assert {c.path for c in calls} == {"fold", "parity"}
+    # first measured candidate got the fastest fake timing
+    assert entry["path"] == calls[0].path
+
+    warm = planner.plan(routed, 64, None, scheme=sch)
+    assert warm.source == "measured" and warm.path == entry["path"]
+    # and nothing else got queued or re-measured by the warm plan
+    assert len(calls) == 2 and planner.pending() == ()
+
+
+def test_autotune_search_deterministic_under_fixed_seed():
+    """Same planner seed, same cells, same (injected) timer ⇒ identical
+    bench payloads, candidate order, labels and recorded winner."""
+    store = make_synthetic_store(256, 16, seed=2)
+    sch = make_scheme("sparse", d=2, d_a=1, theta=0.25).staged
+    runs = []
+    for _ in range(2):
+        seen = []
+
+        def measure(fn, payload, candidate=None, seen=seen):
+            seen.append(
+                (candidate.label,
+                 np.asarray(payload).sum(), np.asarray(payload).shape)
+            )
+            return float(len(seen))
+
+        planner = KernelPlanner(
+            store, backend="pallas", table=AutotuneTable(),
+            seed=7, measure=measure,
+        )
+        planner.plan(_routed(sch, store.n, 8, key=1), 8, None, scheme=sch)
+        planner.tune_pending()
+        key = planner._table_key("sparse", 8, "pallas", 0.25)
+        entry = planner.table.get(key)
+        runs.append((seen, entry["path"], entry["blocks"], entry["us"]))
+    assert runs[0] == runs[1]
+
+
+def test_never_regress_ref_baseline_wins_when_pallas_slowed():
+    """The never-regress guarantee: under the auto backend the search
+    always races the ref-oracle baseline; artificially slowing every
+    pallas candidate makes the recorded winner — and the re-planned
+    executor — the ref path, bit-identically."""
+    store = make_synthetic_store(256, 16, seed=2)
+    sch = make_scheme("sparse", d=2, d_a=1, theta=0.25).staged
+
+    def slow_pallas(fn, *args, candidate=None):
+        return 10_000.0 if candidate.impl == "pallas" else 1.0
+
+    planner = KernelPlanner(
+        store, backend="auto", table=AutotuneTable(), measure=slow_pallas
     )
-    assert again.path == banded.path and again.source == "measured"
+    # on this CPU host auto resolves to ref; force the pallas resolution
+    # so the search actually has a kernel side to lose (interpret mode
+    # keeps the pallas candidates runnable off-TPU)
+    planner.backend = type(
+        "StubAuto", (), {"name": "auto", "resolve": lambda self: "pallas"}
+    )()
+    routed = _routed(sch, store.n, 8, key=1)
+    cold = planner.plan(routed, 8, None, scheme=sch)
+    assert cold.impl == "pallas" and cold.source == "model"
+
+    planner.tune_pending()
+    key = planner._table_key("sparse", 8, "pallas", 0.25)
+    entry = planner.table.get(key)
+    assert (entry["path"], entry["impl"]) == ("sparse_ref", "ref")
+    assert "sparse_ref/ref" in entry["us"]
+    assert any(lbl.startswith("sparse_fused/pallas") for lbl in entry["us"])
+
+    warm = planner.plan(routed, 8, None, scheme=sch)
+    assert (warm.path, warm.impl, warm.source) == (
+        "sparse_ref", "ref", "measured"
+    )
+    np.testing.assert_array_equal(
+        np.asarray(warm(routed.payload[0])),
+        np.asarray(ref.xor_fold_ref(store.packed, routed.payload[0])),
+    )
+
+
+def test_sparse_search_space_covers_blocks_and_grid_orders():
+    """The sparse-family search space is (fused vs pair) × block_w ×
+    grid_order — and a real (wall-clock) tuned winner stays
+    bit-identical to the oracle whatever point it lands on."""
+    store = make_synthetic_store(256, 16, seed=2)
+    sch = make_scheme("sparse", d=2, d_a=1, theta=0.25).staged
+    planner = KernelPlanner(store, backend="pallas", table=AutotuneTable())
+    routed = _routed(sch, store.n, 4, key=3)
+    planner.plan(routed, 4, None, scheme=sch)
+    assert planner.tune_pending() == 1
+    entry = planner.table.get(planner._table_key("sparse", 4, "pallas", 0.25))
+    fused = [l for l in entry["us"] if l.startswith("sparse_fused")]
+    pair = [l for l in entry["us"] if l.startswith("sparse_pair")]
+    assert fused and pair
+    assert any("grid_order=qw" in l for l in fused)
+    assert any("grid_order=wq" in l for l in fused)
+    assert any("grid_order=qwm" in l for l in pair)
+    assert any("grid_order=wqm" in l for l in pair)
+    warm = planner.plan(routed, 4, None, scheme=sch)
+    assert warm.source == "measured"
+    np.testing.assert_array_equal(
+        np.asarray(warm(routed.payload[0])),
+        np.asarray(ref.xor_fold_ref(store.packed, routed.payload[0])),
+    )
 
 
 def test_plan_cache_returns_same_plan():

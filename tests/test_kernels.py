@@ -171,6 +171,39 @@ def test_fused_block_sweep(block_w):
     np.testing.assert_array_equal(got, want)
 
 
+@pytest.mark.parametrize("grid_order", ["qw", "wq"])
+@pytest.mark.parametrize("block_w", [8, 32])
+def test_fused_grid_order_sweep_bit_identical(grid_order, block_w):
+    """Both fused grid layouts ("qw": queries outer, "wq": word-blocks
+    outer, reusing the query slab across the w sweep) are pure schedule
+    choices — bit-identical to the ref gather for every block width the
+    autotuner may pick."""
+    store, mask = _case(211, 21, 6, seed=4)
+    idx = indices_from_mask(mask, 120)
+    want = np.asarray(ref.gather_xor_ref(store.packed, idx))
+    got = np.asarray(fused_gather_fold(
+        store.packed, idx, block_w=block_w, grid_order=grid_order,
+        interpret=True,
+    ))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("grid_order", ["qwm", "wqm"])
+@pytest.mark.parametrize("block_w", [16, 64])
+def test_gather_xor_grid_order_sweep_bit_identical(grid_order, block_w):
+    """The streaming pair's two outer-loop orders (queries-major vs
+    word-blocks-major; m always innermost so the XOR accumulation stays
+    sequential) agree bit-for-bit with the ref gather."""
+    store, mask = _case(211, 21, 6, seed=5)
+    idx = indices_from_mask(mask, 120)
+    want = np.asarray(ref.gather_xor_ref(store.packed, idx))
+    got = np.asarray(gather_xor(
+        store.packed, idx, block_w=block_w, grid_order=grid_order,
+        interpret=True,
+    ))
+    np.testing.assert_array_equal(got, want)
+
+
 def test_fused_all_padding_rows():
     store, _ = _case(64, 8, 2)
     idx = jnp.full((2, 16), -1, jnp.int32)

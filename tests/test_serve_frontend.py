@@ -17,12 +17,14 @@ import pytest
 from repro.core import make_scheme
 from repro.core.accounting import PrivacyBudget
 from repro.db import make_synthetic_store
+from repro.kernels.backend import AutotuneTable
 from repro.serve import (
     AsyncFrontend,
     BackpressureError,
     BatchScheduler,
     QueryCache,
     ServingPipeline,
+    ShardedBackend,
 )
 
 
@@ -362,3 +364,60 @@ def test_drain_timeout_must_be_positive():
     pipe = make_pipe()
     with pytest.raises(ValueError, match="drain_timeout_s"):
         AsyncFrontend(pipe, drain_timeout_s=0.0)
+
+
+# ----------------------------------------------------- idle-slot autotune
+def _fresh_autotune_pipe(n=256):
+    store = make_synthetic_store(n, 16, seed=7)
+    sch = make_scheme("chor", d=2, d_a=1)
+    return ServingPipeline(
+        store, sch, backend=ShardedBackend(store, autotune=AutotuneTable())
+    )
+
+
+def test_cold_cell_serve_never_microbenchmarks_on_request_path():
+    """The first request to hit a cold autotune cell must be planned from
+    the analytic prior alone — zero microbenchmark calls on the
+    ingest/flush threads. The cell is queued for the idle slot instead
+    (DESIGN.md §Execution backends)."""
+    pipe = _fresh_autotune_pipe()
+    calls = []
+    real = pipe.backend.planner._measure
+
+    def counting(fn, *args, **kw):
+        calls.append(kw.get("candidate"))
+        return real(fn, *args, **kw)
+
+    pipe.backend.planner._measure = counting
+    with AsyncFrontend(pipe, autotune=False) as fe:
+        fut = fe.submit("a", 5)
+        assert fe.drain(timeout=30.0)
+        np.testing.assert_array_equal(
+            fut.result(timeout=5.0), pipe.store.record_bytes(5)
+        )
+        assert calls == []  # the serve path consulted only the prior
+    assert len(pipe.backend.planner.pending()) == 1  # queued for idle slot
+
+
+def test_idle_slot_runs_autotune_step_and_counts():
+    """Between flushes the worker spends lulls on the autotune search:
+    the cold cell left by the first serve gets its measured winner off
+    the serving path, and the "autotuned" counter records the step."""
+    pipe = _fresh_autotune_pipe()
+    with AsyncFrontend(pipe, idle_tick_s=0.001) as fe:
+        fut = fe.submit("a", 5)
+        assert fe.drain(timeout=30.0)
+        np.testing.assert_array_equal(
+            fut.result(timeout=5.0), pipe.store.record_bytes(5)
+        )
+        deadline = time.monotonic() + 30.0
+        while time.monotonic() < deadline:
+            if fe.metrics["autotuned"] and not pipe.backend.planner.pending():
+                break
+            time.sleep(0.01)
+        assert fe.metrics["autotuned"] >= 1
+    assert not pipe.backend.planner.pending()
+    assert any(
+        entry["source"] == "measured"
+        for _, entry in pipe.backend.planner.table.items()
+    )

@@ -310,3 +310,63 @@ def test_engine_facade_flush_serves_one_batch_like_old_engine():
     assert len(first) == 4 and len(eng.scheduler) == 2
     second = eng.flush()
     assert len(second) == 2 and eng.flush() == {}
+
+
+def test_plan_timer_excludes_phase_lock_contention():
+    """Regression (fake clock): plan_s must start *after* the phase lock
+    is acquired. Under the double-buffered flush the plan phase can wait
+    on execute's bookkeeping; billing that wait as plan time inflated
+    the scheduler's service EMA and wrongly shrank the adaptive target."""
+    now = itertools.count()
+    clock = lambda: next(now)
+
+    store = make_synthetic_store(128, 8, seed=9)
+    pipe = ServingPipeline(
+        store, make_scheme("chor", d=2, d_a=1),
+        scheduler=BatchScheduler(max_batch=8, clock=clock),
+    )
+
+    class ContendedLock:
+        """Every acquisition burns 100 fake seconds of 'lock wait'."""
+
+        def __init__(self, inner):
+            self.inner = inner
+
+        def __enter__(self):
+            for _ in range(100):
+                clock()
+            return self.inner.__enter__()
+
+        def __exit__(self, *exc):
+            return self.inner.__exit__(*exc)
+
+    pipe._phase_lock = ContendedLock(pipe._phase_lock)
+    assert pipe.submit("alice", 3)
+    planned = pipe.plan_requests(pipe.take_batch())
+    # exactly the two timer reads inside the locked plan region: the 100-
+    # tick acquisition waits (one per phase-lock entry) are not billed
+    assert planned.plan_s == 1
+    results = pipe.execute_planned(planned)
+    assert (dict((r.client, a) for r, a in results)["alice"]
+            == store.record_bytes(3)).all()
+
+
+def test_pipeline_autotune_step_tunes_cold_cells_off_thread():
+    """ServingPipeline.autotune_step drains the planner's pending cells
+    (the frontend's idle-slot job); serving itself leaves cells cold."""
+    from repro.kernels.backend import AutotuneTable
+
+    store = make_synthetic_store(128, 8, seed=10)
+    pipe = ServingPipeline(
+        store, make_scheme("chor", d=2, d_a=1),
+        backend=ShardedBackend(store, autotune=AutotuneTable()),
+    )
+    assert pipe.submit("bob", 5)
+    out = pipe.flush()
+    assert (out["bob"] == store.record_bytes(5)).all()
+    planner = pipe.backend.planner
+    assert len(planner.pending()) == 1  # served cold, queued for tuning
+    assert pipe.autotune_step() == 1
+    assert planner.pending() == ()
+    ((key, entry),) = list(planner.table.items())
+    assert entry["source"] == "measured" and entry["us"]
