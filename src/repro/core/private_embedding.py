@@ -22,7 +22,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.accounting import PrivacyBudget
-from repro.core.protocol import as_protocol, staged_retrieve
+from repro.core.protocol import (
+    as_protocol,
+    multi_privacy,
+    staged_retrieve,
+    staged_retrieve_many,
+)
 from repro.core.schemes import make_scheme
 from repro.db.store import RecordStore
 
@@ -95,6 +100,36 @@ class PrivateEmbedding:
         packed = staged_retrieve(self._staged, key, self._store, idx.reshape(-1))
         rows = jax.lax.bitcast_convert_type(packed, jnp.float32)
         return rows.reshape(*idx.shape, self.dim)
+
+    def lookup_many(self, key: jax.Array, index_lists) -> list:
+        """Jagged multi-index lookup: per-request index lists ->
+        per-request [k_r, dim] float32 rows (bit-exact).
+
+        One precompute at the flattened pow2 bucket, one wire round-trip
+        (DESIGN.md §Multi-index wire format); privacy is priced by the
+        Composition Lemma as ``sum(k_r)`` sequential lookups — the padded
+        dummy columns are free because their responses are discarded.
+        This is the true multi-index path a looped :meth:`lookup` only
+        approximates: same bits, one batch plan instead of one per index.
+        """
+        if self._staged is None:
+            return [
+                jnp.take(self.table, jnp.asarray(ix, jnp.int32), axis=0)
+                for ix in index_lists
+            ]
+        total = sum(len(ix) for ix in index_lists)
+        if self.budget is not None:
+            eps, delta = multi_privacy(self._staged, self.vocab, total)
+            self.budget.spend(eps, delta)
+        packed = staged_retrieve_many(
+            self._staged, key, self._store, index_lists
+        )
+        return [
+            jax.lax.bitcast_convert_type(rows, jnp.float32).reshape(
+                -1, self.dim
+            )
+            for rows in packed
+        ]
 
     def bag_lookup(
         self,

@@ -54,15 +54,24 @@ from typing import (
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import accounting, chor, direct, sparse, subset
 from repro.db.store import RecordStore
 
 __all__ = [
     "Queries",
+    "MultiQueries",
     "Answers",
     "Plan",
     "SchemeProtocol",
+    "jagged_offsets",
+    "multi_bucket",
+    "multi_pad",
+    "multi_query",
+    "multi_reconstruct",
+    "multi_privacy",
+    "staged_retrieve_many",
     "register_scheme",
     "get_scheme",
     "registered_schemes",
@@ -100,6 +109,61 @@ class Queries:
     servers: Tuple[int, ...]
     q_idx: jnp.ndarray
     theta: Optional[float] = None
+
+
+@dataclasses.dataclass
+class MultiQueries:
+    """A jagged multi-index batch flattened onto the single-index wire.
+
+    Real embedding workloads issue per-request index *lists* (DLRM sparse
+    features, LLM vocab lookups). The wire stays the single-index format:
+    request r's i-th index occupies flat column ``r·k_max + i`` of
+    ``queries`` (each request padded to ``k_max`` columns, the request
+    axis padded to a pow2 count, so the flat bucket ``B = R_pad·k_max``
+    is itself a pow2). Padding columns carry *real* queries for index 0 —
+    on the wire they are indistinguishable from live columns — and their
+    responses are discarded at reconstruction.
+
+    ``offsets`` is the jagged descriptor (``offsets[r+1] − offsets[r]`` =
+    request r's true index count); like ``q_idx`` it is client-side
+    reconstruction state. Privacy is priced by the Composition Lemma as
+    ``offsets[-1]`` sequential lookups (:func:`multi_privacy`) — padding
+    columns are never charged because their answers are thrown away.
+    Delegating properties make a ``MultiQueries`` quack like its flat
+    ``queries`` so every registered scheme's ``answer``/``reconstruct``
+    stage accepts it unchanged.
+    """
+
+    queries: Queries
+    offsets: np.ndarray
+    k_max: int
+    requests: int
+
+    # ------------------------------------------------ flat-wire delegation
+    @property
+    def kind(self) -> str:
+        return self.queries.kind
+
+    @property
+    def payload(self) -> jnp.ndarray:
+        return self.queries.payload
+
+    @property
+    def servers(self) -> Tuple[int, ...]:
+        return self.queries.servers
+
+    @property
+    def q_idx(self) -> jnp.ndarray:
+        return self.queries.q_idx
+
+    @property
+    def theta(self) -> Optional[float]:
+        return self.queries.theta
+
+    @property
+    def total(self) -> int:
+        """True (unpadded) number of flattened indices."""
+        return int(self.offsets[-1])
 
 
 @dataclasses.dataclass
@@ -269,6 +333,124 @@ def staged_retrieve(
     queries = scheme.query(plan, q_idx)
     answers = scheme.answer(store, queries)
     return scheme.reconstruct(answers)
+
+
+# --------------------------------------------------------------------------
+# Jagged multi-index batches (DESIGN.md §Multi-index wire format)
+# --------------------------------------------------------------------------
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, int(x) - 1).bit_length() if x > 1 else 1
+
+
+def jagged_offsets(index_lists: Sequence[Sequence[int]]) -> np.ndarray:
+    """[R+1] int32 prefix sums of the per-request index counts — the
+    jagged descriptor every multi-index stage shares. Empty rows are
+    legal (a request that resolved entirely from cache still occupies a
+    row so responses land back in request order)."""
+    counts = [len(ix) for ix in index_lists]
+    return np.cumsum([0] + counts, dtype=np.int32)
+
+
+def multi_bucket(index_lists: Sequence[Sequence[int]]) -> int:
+    """Flat wire bucket for a jagged batch: requests padded to a pow2
+    count, each to ``k_max`` (pow2) columns — ``B = R_pad·k_max`` is the
+    batch size ``precompute`` must be built for. Scheduling buckets on
+    this *total flattened* size, not the request count."""
+    r_pad = _next_pow2(max(1, len(index_lists)))
+    k_max = _next_pow2(max([1] + [len(ix) for ix in index_lists]))
+    return r_pad * k_max
+
+
+def multi_pad(
+    index_lists: Sequence[Sequence[int]],
+) -> Tuple[jnp.ndarray, np.ndarray, int, int]:
+    """Flatten a jagged batch onto the padded flat layout.
+
+    Returns ``(q_idx, offsets, k_max, requests)``: ``q_idx`` is the
+    [B] int32 flat index vector with request r's i-th index at
+    ``r·k_max + i`` and index 0 in every padding slot; ``offsets`` the
+    [R+1] jagged descriptor; ``requests`` the true request count.
+    """
+    offsets = jagged_offsets(index_lists)
+    r_pad = _next_pow2(max(1, len(index_lists)))
+    k_max = _next_pow2(max([1] + [len(ix) for ix in index_lists]))
+    flat = np.zeros(r_pad * k_max, dtype=np.int32)
+    for r, ix in enumerate(index_lists):
+        flat[r * k_max : r * k_max + len(ix)] = np.asarray(ix, dtype=np.int32)
+    return jnp.asarray(flat), offsets, k_max, len(index_lists)
+
+
+def multi_query(
+    scheme: "SchemeProtocol",
+    plan: Plan,
+    index_lists: Sequence[Sequence[int]],
+    *,
+    pick_servers: Optional[Callable[[int], Sequence[int]]] = None,
+) -> MultiQueries:
+    """Multi-index query stage: flatten+pad the jagged batch and drive the
+    scheme's single-index ``query`` at the flat bucket. The plan must have
+    been precomputed for :func:`multi_bucket` of the same batch."""
+    q_idx, offsets, k_max, requests = multi_pad(index_lists)
+    bucket = int(q_idx.shape[0])
+    if plan.batch != bucket:
+        raise ValueError(
+            f"plan batch {plan.batch} != flat multi bucket {bucket} "
+            f"(precompute with multi_bucket(index_lists))"
+        )
+    queries = scheme.query(plan, q_idx, pick_servers=pick_servers)
+    return MultiQueries(
+        queries=queries, offsets=offsets, k_max=k_max, requests=requests
+    )
+
+
+def multi_reconstruct(scheme: "SchemeProtocol", answers: Answers) -> list:
+    """Multi-index reconstruct stage: run the scheme's flat ``reconstruct``
+    and split the [B, W] rows back into per-request [k_r, W] arrays in
+    request order, dropping padding rows."""
+    mq = answers.queries
+    if not isinstance(mq, MultiQueries):
+        raise TypeError(f"expected MultiQueries answers, got {type(mq).__name__}")
+    rows = scheme.reconstruct(answers)
+    counts = np.diff(mq.offsets)
+    return [
+        rows[r * mq.k_max : r * mq.k_max + int(counts[r])]
+        for r in range(mq.requests)
+    ]
+
+
+def multi_privacy(
+    scheme: "SchemeProtocol", n: int, k: int
+) -> Tuple[float, float]:
+    """Composition Lemma pricing for a k-index lookup: k sequential
+    single-index lookups spend exactly (k·ε, k·δ). Padding columns are
+    free — their responses are discarded, so the adversary's view of the
+    real indices is that of k sequential queries."""
+    if k < 0:
+        raise ValueError(f"need k >= 0 lookups, got {k}")
+    eps, delta = scheme.privacy(n)
+    return k * eps, k * delta
+
+
+def staged_retrieve_many(
+    scheme: "SchemeProtocol",
+    key: jax.Array,
+    store: RecordStore,
+    index_lists: Sequence[Sequence[int]],
+) -> list:
+    """Reference multi-index end-to-end path: one precompute at the flat
+    bucket, one wire round-trip, per-request [k_r, W] rows out.
+
+    Bit-identical to looping :func:`staged_retrieve` per index (asserted
+    for every registered scheme in tests/test_scheme_protocol.py) — the
+    XOR reconstruction is exact, so the jagged flatten/pad changes which
+    randomness each column consumes but never the reconstructed bits.
+    """
+    if not len(index_lists):
+        return []
+    plan = scheme.precompute(key, store.n, multi_bucket(index_lists))
+    mq = multi_query(scheme, plan, index_lists)
+    answers = scheme.answer(store, mq)
+    return multi_reconstruct(scheme, answers)
 
 
 # --------------------------------------------------------------------------

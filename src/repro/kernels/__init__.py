@@ -20,16 +20,22 @@ from repro.kernels.backend import (
     registered_backends,
 )
 from repro.kernels.flash_attention import flash_attention_fwd
-from repro.kernels.fused import fused_block_w, fused_gather_fold
+from repro.kernels.fused import (
+    fused_block_w,
+    fused_gather_fold,
+    fused_multi_gather_fold,
+    jagged_row_mask,
+)
 from repro.kernels.gather_xor import gather_xor, indices_from_mask
 from repro.kernels.parity_matmul import parity_matmul
 from repro.kernels.xor_fold import xor_fold
 
-# gather_xor / xor_fold / parity_matmul / fused_gather_fold are importable
-# here for the test suites (which pin the kernels directly and are exempt
-# from the fence) but deliberately NOT in __all__: outside the package the
-# advertised surface is the planner (backend), ops, the oracles, and the
-# sizing helpers — exactly what tools/check_api.py's kernel fence enforces.
+# gather_xor / xor_fold / parity_matmul / fused_gather_fold /
+# fused_multi_gather_fold are importable here for the test suites (which
+# pin the kernels directly and are exempt from the fence) but
+# deliberately NOT in __all__: outside the package the advertised surface
+# is the planner (backend), ops, the oracles, and the sizing helpers —
+# exactly what tools/check_api.py's kernel fence enforces.
 __all__ = [
     "AutotuneTable",
     "ExecutionPlan",
@@ -41,6 +47,7 @@ __all__ = [
     "fused_block_w",
     "get_backend",
     "indices_from_mask",
+    "jagged_row_mask",
     "load_autotune",
     "ops",
     "ref",

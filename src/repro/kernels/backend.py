@@ -75,7 +75,11 @@ import jax.numpy as jnp
 from repro.db import packing
 from repro.db.store import RecordStore
 from repro.kernels import ops, ref
-from repro.kernels.fused import fused_block_w, fused_gather_fold
+from repro.kernels.fused import (
+    fused_block_w,
+    fused_gather_fold,
+    fused_multi_gather_fold,
+)
 from repro.kernels.gather_xor import gather_xor, indices_from_mask
 from repro.kernels.parity_matmul import parity_matmul
 from repro.kernels.xor_fold import xor_fold
@@ -248,15 +252,17 @@ class AutoBackend(ExecutionBackend):
 # (scheme, bucket, backend-impl, n, words, family): the conceptual key
 # is (scheme, bucket, backend); n/words qualify it so two stores of
 # different shape never share a measurement, and family ("mask" or
-# "sparse@<theta>") keeps the dense fold/parity decision and the sparse
-# fused/pair decision — which have disjoint candidate sets — from ever
-# colliding under one key (a sparse scheme can take either route
-# depending on whether gathering pays)
+# "sparse@<theta>", with a "+multi@<k_max>" suffix for jagged
+# multi-index buckets whose candidate set adds the fused multi kernel)
+# keeps decisions with disjoint candidate sets from ever colliding
+# under one key (a sparse scheme can take either route depending on
+# whether gathering pays)
 Key = Tuple[str, int, str, int, int, str]
 
 
-def _family(theta: Optional[float]) -> str:
-    return "mask" if theta is None else f"sparse@{float(theta):g}"
+def _family(theta: Optional[float], k_max: Optional[int] = None) -> str:
+    base = "mask" if theta is None else f"sparse@{float(theta):g}"
+    return base if not k_max else f"{base}+multi@{int(k_max)}"
 
 
 def device_fingerprint() -> Dict[str, str]:
@@ -454,10 +460,14 @@ class TuneCell:
     theta: Optional[float]
     n_eff: int
     m_budget: Optional[int]
+    # jagged multi-index buckets: padded per-request column count (None
+    # for plain single-index batches) — widens the sparse candidate set
+    # with the fused multi kernel
+    k_max: Optional[int] = None
 
     @property
     def family(self) -> str:
-        return _family(self.theta)
+        return _family(self.theta, self.k_max)
 
 
 # --------------------------------------------------------------------------
@@ -548,11 +558,11 @@ class KernelPlanner:
 
     def _table_key(
         self, scheme_name: str, bucket: int, impl: str,
-        theta: Optional[float] = None,
+        theta: Optional[float] = None, k_max: Optional[int] = None,
     ) -> Key:
         return (
             scheme_name, int(bucket), impl, self.store.n, self.store.words,
-            _family(theta),
+            _family(theta, k_max),
         )
 
     def _table_hit(self, key: Key) -> Optional[Dict[str, Any]]:
@@ -626,6 +636,18 @@ class KernelPlanner:
                         "sparse_fused", impl,
                         (("block_w", bw), ("grid_order", go)),
                     ))
+                # jagged multi-index buckets race the fused multi kernel
+                # too: one grid step per (request, word-block), every
+                # index of the request folded against the resident block.
+                # The streaming pair and the ref oracle above stay in the
+                # set as its bit-identical fallbacks.
+                if cell.k_max:
+                    for go in ("rw", "wr"):
+                        out.append(PlanCandidate(
+                            "sparse_multi_fused", impl,
+                            (("block_w", bw), ("grid_order", go),
+                             ("k_max", cell.k_max)),
+                        ))
             for bw in sorted({min(128, w), min(32, w)}, reverse=True):
                 for go in ("qwm", "wqm"):
                     out.append(PlanCandidate(
@@ -649,7 +671,13 @@ class KernelPlanner:
         bw = self._fused_bw(cell.n_eff)
         if bw:
             # C_p says the work is m·BW either way; residency is the
-            # model's tiebreak — fit VMEM, walk queries outer
+            # model's tiebreak — fit VMEM, walk queries outer. A jagged
+            # bucket amortizes the db fetch across the request's whole
+            # index list, so the multi form is its prior.
+            if cell.k_max:
+                return "sparse_multi_fused", cell.impl, {
+                    "block_w": bw, "grid_order": "rw", "k_max": cell.k_max,
+                }
             return "sparse_fused", cell.impl, {
                 "block_w": bw, "grid_order": "qw",
             }
@@ -744,6 +772,7 @@ class KernelPlanner:
         mesh_state: Optional[dict] = None,
         *,
         scheme: Any = None,
+        k_max: Optional[int] = None,
     ) -> ExecutionPlan:
         """One batch's wire plan -> its execution decision.
 
@@ -754,7 +783,11 @@ class KernelPlanner:
         residency dict (None off-mesh). ``scheme`` (a staged
         SchemeProtocol) keys the autotune table and supplies ``costs(n)``
         as the analytic prior; without it the plan keys on the wire kind
-        alone.
+        alone. ``k_max`` marks a jagged multi-index bucket (the padded
+        per-request column count, ``bucket % k_max == 0``): the sparse
+        candidate set gains the fused multi kernel and the cell keys
+        under the ``+multi@<k_max>`` family so single-index decisions are
+        never clobbered.
 
         Never measures: a table hit returns the recorded search winner,
         a miss returns the analytic prior and queues the cell for the
@@ -772,8 +805,14 @@ class KernelPlanner:
         )
         impl = self.backend.resolve()
         interpret = ops.on_cpu()
+        if k_max is not None and (k_max < 1 or bucket % k_max):
+            raise ValueError(
+                f"multi bucket {bucket} not a multiple of k_max={k_max}"
+            )
 
-        cache_key = (scheme_name, kind, theta, int(bucket), impl, mesh_key)
+        cache_key = (
+            scheme_name, kind, theta, int(bucket), impl, mesh_key, k_max
+        )
         cached = self._plans.get(cache_key)
         if cached is not None:
             return cached
@@ -793,11 +832,16 @@ class KernelPlanner:
                 and self._gather_pays(theta, costs, scheme)
             )
             cell_theta = theta if sparse else None
+            # the mask family's dense forms (fold/parity) already answer
+            # the whole flat bucket in one launch — only the sparse
+            # gather forms have a multi variant to race
+            cell_k = k_max if sparse else None
             if sparse:
                 m_budget = ops.sparse_index_budget(n_eff, theta)
             cell = TuneCell(
                 scheme=scheme_name, bucket=int(bucket), impl=impl,
                 theta=cell_theta, n_eff=n_eff, m_budget=m_budget,
+                k_max=cell_k,
             )
             if not sparse and self._parity_min_batch is not None:
                 path = (
@@ -805,7 +849,9 @@ class KernelPlanner:
                 )
                 source = "forced"
             else:
-                key = self._table_key(scheme_name, bucket, impl, cell_theta)
+                key = self._table_key(
+                    scheme_name, bucket, impl, cell_theta, cell_k
+                )
                 hit = self._table_hit(key)
                 if hit is not None:
                     path = hit["path"]
@@ -919,6 +965,26 @@ def _path_answer_fn(
             db, indices_from_mask(m, m_budget),
             block_w=bw, grid_order=go, interpret=interp,
         )
+    if path == "sparse_multi_fused":
+        bw = blocks["block_w"]
+        go = blocks.get("grid_order", "rw")
+        k_max = int(blocks["k_max"])
+
+        def _multi(db, m):
+            idx = indices_from_mask(m, m_budget)
+            # the serving layout keeps every flat column live (padding
+            # columns are real dummy queries whose responses the client
+            # discards), so the canonical all-live offsets make this
+            # bit-identical to the flat forms on the same payload
+            off = jnp.arange(
+                idx.shape[0] // k_max + 1, dtype=jnp.int32
+            ) * k_max
+            return fused_multi_gather_fold(
+                db, idx, off, k_max=k_max,
+                block_w=bw, grid_order=go, interpret=interp,
+            )
+
+        return _multi
     raise ValueError(f"no kernel form for path {path!r}")
 
 

@@ -55,6 +55,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 __all__ = [
     "fused_gather_fold",
+    "fused_multi_gather_fold",
+    "jagged_row_mask",
     "fused_block_w",
     "fused_vmem_budget",
     "FUSED_VMEM_BUDGET_BYTES",
@@ -191,4 +193,116 @@ def fused_gather_fold(
         out_shape=jax.ShapeDtypeStruct((q, w + wp), jnp.uint32),
         interpret=interpret,
     )(idx, db_p)
+    return out[:, :w]
+
+
+# --------------------------------------------------------------------------
+# Jagged multi-index fusion (DESIGN.md §Multi-index wire format)
+# --------------------------------------------------------------------------
+def jagged_row_mask(offsets: jnp.ndarray, k_max: int, rows: int) -> jnp.ndarray:
+    """[rows] bool: which flat rows of the padded multi-index layout are
+    live. Row ``r·k_max + i`` is live iff ``i < offsets[r+1] − offsets[r]``
+    — the mask the streaming-pair and oracle fallbacks apply to their
+    index matrices so all three multi paths stay bit-identical, padding
+    rows included (they all answer zero there)."""
+    off = jnp.asarray(offsets, jnp.int32)
+    r = jnp.arange(rows, dtype=jnp.int32) // k_max
+    i = jnp.arange(rows, dtype=jnp.int32) % k_max
+    return i < off[r + 1] - off[r]
+
+
+def _multi_kernel(off_ref, idx_ref, db_ref, out_ref, *, b_axis: int,
+                  k_max: int):
+    r = pl.program_id(b_axis)
+    m = idx_ref.shape[1]
+    bw = out_ref.shape[1]
+    # the jagged descriptor rides in scalar memory: this request's live
+    # column count bounds which of its k_max rows carry real queries
+    count = off_ref[r + 1] - off_ref[r]
+
+    def fold(i, carry):
+        def body(l, acc):
+            j = idx_ref[r * k_max + i, l]
+            row = db_ref[pl.ds(jnp.maximum(j, 0), 1), :]
+            return acc ^ jnp.where(j >= 0, row, jnp.uint32(0))
+
+        acc = jax.lax.fori_loop(0, m, body, jnp.zeros((1, bw), jnp.uint32))
+        out_ref[pl.ds(i, 1), :] = jnp.where(i < count, acc, jnp.uint32(0))
+        return carry
+
+    # one grid step answers ALL of this request's indices: the db
+    # word-block is fetched once per request (once per *batch* in "wr"
+    # order), not once per index as the flat kernel's grid does
+    jax.lax.fori_loop(0, k_max, fold, 0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k_max", "block_w", "grid_order", "interpret")
+)
+def fused_multi_gather_fold(
+    db: jnp.ndarray,
+    idx: jnp.ndarray,
+    offsets: jnp.ndarray,
+    *,
+    k_max: int,
+    block_w: int = DEFAULT_BLOCK_W,
+    grid_order: str = "rw",
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """db: [n, W] uint32; idx: [R·k_max, m] int32 (−1 = padding);
+    offsets: [R+1] int32 jagged descriptor -> [R·k_max, W].
+
+    The multi-index answer stage fused across a request's whole index
+    list: the grid walks (request, word-block) — ``"rw"`` requests outer,
+    ``"wr"`` word-blocks outer so one VMEM-resident db block serves every
+    request before the next block is DMA'd — and an in-kernel loop folds
+    all k_max index rows of the request against the resident block.
+    Row ``r·k_max + i`` of the output is ``gather_xor(db, idx[r·k_max+i])``
+    when live (``i < offsets[r+1] − offsets[r]``) and zero otherwise;
+    equivalently ``gather_xor(db, idx_masked)`` with
+    :func:`jagged_row_mask` applied — the bit-identity the parity sweep
+    pins against the streaming pair and the jnp oracle.
+    """
+    if grid_order not in ("rw", "wr"):
+        raise ValueError(f"grid_order must be 'rw' or 'wr', got {grid_order!r}")
+    n, w = db.shape
+    b, m = idx.shape
+    if k_max < 1 or b % k_max:
+        raise ValueError(f"idx rows {b} not a multiple of k_max={k_max}")
+    r_count = b // k_max
+    if offsets.shape[0] != r_count + 1:
+        raise ValueError(
+            f"offsets must be [R+1]={r_count + 1}, got {offsets.shape[0]}"
+        )
+
+    bw = min(block_w, w)
+    wp = -w % bw
+    db_p = jnp.pad(db, ((0, 0), (0, wp)))
+    wblocks = (w + wp) // bw
+
+    if grid_order == "rw":
+        grid = (r_count, wblocks)
+        db_map = lambda r, j, off_ref, idx_ref: (0, j)
+        out_map = lambda r, j, off_ref, idx_ref: (r, j)
+        b_axis = 0
+    else:
+        grid = (wblocks, r_count)
+        db_map = lambda j, r, off_ref, idx_ref: (0, j)
+        out_map = lambda j, r, off_ref, idx_ref: (r, j)
+        b_axis = 1
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, bw), db_map),
+        ],
+        out_specs=pl.BlockSpec((k_max, bw), out_map),
+    )
+    out = pl.pallas_call(
+        functools.partial(_multi_kernel, b_axis=b_axis, k_max=k_max),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, w + wp), jnp.uint32),
+        interpret=interpret,
+    )(jnp.asarray(offsets, jnp.int32), idx, db_p)
     return out[:, :w]

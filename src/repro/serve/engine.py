@@ -44,7 +44,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.accounting import PrivacyBudget
-from repro.core.protocol import Queries, SchemeProtocol, as_protocol
+from repro.core.protocol import (
+    Queries,
+    SchemeProtocol,
+    as_protocol,
+    multi_bucket,
+)
 from repro.db import packing
 from repro.db.store import RecordStore
 from repro.dist.fault import (
@@ -74,9 +79,14 @@ class PlannedBatch:
     misses: List[Request]
     miss_pos: List[int]
     padded: int
-    routed: Optional[Queries]
+    routed: Optional[Queries]  # or a MultiQueries for a jagged batch
     exec_plan: Optional[ExecutionPlan]
     plan_s: float  # wall time the plan phase itself took
+    # multi-index plumbing (None on the classic single-index path):
+    # per-miss-request jagged index lists that actually went to wire, and
+    # per-miss-request [k_r] slots holding cached answers (None = fresh)
+    miss_lists: Optional[List[List[int]]] = None
+    partial: Optional[List[List[Optional[np.ndarray]]]] = None
 
 
 class ServingPipeline:
@@ -219,6 +229,36 @@ class ServingPipeline:
         """Queue one query; False if the client's privacy budget refuses."""
         return self.submit_request(client, index) is not None
 
+    def submit_request_many(
+        self, client: str, indices
+    ) -> Optional[Request]:
+        """Queue one jagged multi-index request; None if refused.
+
+        Admission charges the Composition-Lemma price up front: a
+        k-index request is k sequential lookups to the accountant
+        (DESIGN.md §Multi-index wire format), so it spends k·(ε, δ) —
+        before the cache is consulted, exactly like :meth:`submit_request`,
+        and hits on any of its indices never refund it. The cache's
+        refusal memo is keyed on the *fixed* per-query price, so a
+        variable-k request consults the accountant directly instead.
+        """
+        k = len(indices)
+        if k == 0:
+            raise ValueError("submit_request_many needs at least one index")
+        if not self._serviceable:
+            self.metrics["refused"] += 1
+            return None
+        eps, delta = self._eps_per_query, self._delta_per_query
+        if not self.budget(client).can_spend(k * eps, k * delta):
+            self.metrics["refused"] += 1
+            return None
+        self.budget(client).spend(k * eps, k * delta)
+        return self.scheduler.submit_many(client, indices)
+
+    def submit_many(self, client: str, indices) -> bool:
+        """Queue one multi-index request; False if the budget refuses."""
+        return self.submit_request_many(client, indices) is not None
+
     # ------------------------------------------------------------ serving
     def fastest_servers(self, t: int) -> List[int]:
         return self.backend.fastest(t)
@@ -316,6 +356,8 @@ class ServingPipeline:
         """
         if not batch:
             return None
+        if any(r.indices for r in batch):
+            return self._plan_requests_multi(batch)
         results: List[Optional[Tuple[Request, np.ndarray]]] = [None] * len(batch)
         with self._phase_lock:
             if self.cache is not None:
@@ -363,6 +405,162 @@ class ServingPipeline:
             exec_plan=exec_plan, plan_s=plan_s,
         )
 
+    @staticmethod
+    def _assemble(r: Request, rows: List[np.ndarray]) -> np.ndarray:
+        """A request's final answer from its per-index record bytes:
+        [k, nbytes] for a multi-index request, flat [nbytes] for a
+        classic single-index one (back-compat shape)."""
+        if r.indices:
+            return np.stack([np.asarray(a) for a in rows])
+        return np.asarray(rows[0])
+
+    def _plan_requests_multi(
+        self, batch: List[Request]
+    ) -> Optional[PlannedBatch]:
+        """The multi-index half of :meth:`plan_requests` (DESIGN.md
+        §Multi-index wire format): cache hits resolve *per (client,
+        index)* — a request whose indices all hit never touches a wire,
+        and partially-hit requests send only their missing indices — the
+        remaining jagged lists flatten into one padded
+        :class:`~repro.core.protocol.MultiQueries` wire batch via
+        :meth:`~repro.serve.router.SchemeRouter.plan_many`. ``queries``
+        and ``cache_hits`` metrics count *flattened indices* here: each
+        index is a priced lookup under the Composition Lemma."""
+        results: List[Optional[Tuple[Request, np.ndarray]]] = [None] * len(batch)
+        misses: List[Request] = []
+        miss_pos: List[int] = []
+        miss_lists: List[List[int]] = []
+        partial: List[List[Optional[np.ndarray]]] = []
+        with self._phase_lock:
+            for i, r in enumerate(batch):
+                idxs = r.index_list
+                rows: List[Optional[np.ndarray]] = [None] * len(idxs)
+                if self.cache is not None:
+                    for j, ix in enumerate(idxs):
+                        entry = self.cache.lookup(r.client, ix)
+                        if entry is not None:
+                            rows[j] = entry.answer
+                if all(a is not None for a in rows):
+                    results[i] = (r, self._assemble(r, rows))
+                else:
+                    misses.append(r)
+                    miss_pos.append(i)
+                    miss_lists.append(
+                        [ix for j, ix in enumerate(idxs) if rows[j] is None]
+                    )
+                    partial.append(rows)
+            flat_total = sum(r.k for r in batch)
+            self.metrics["queries"] += flat_total
+            self.metrics["cache_hits"] += flat_total - sum(
+                len(lst) for lst in miss_lists
+            )
+
+        routed = exec_plan = None
+        padded = 0
+        plan_s = 0.0
+        clock = self.scheduler.clock
+        if misses:
+            padded = multi_bucket(miss_lists)
+            with self._phase_lock:
+                t0 = clock()
+                self._key, sub = jax.random.split(self._key)
+                pre = (
+                    self.cache.take_pre(padded)
+                    if self.cache is not None else None
+                )
+            routed = self.router.plan_many(
+                sub, self.store.n, miss_lists, pre=pre
+            )
+            exec_plan = self.backend.prepare(routed, scheme=self.staged)
+            plan_s = clock() - t0
+        return PlannedBatch(
+            batch=list(batch), results=results, misses=misses,
+            miss_pos=miss_pos, padded=padded, routed=routed,
+            exec_plan=exec_plan, plan_s=plan_s,
+            miss_lists=miss_lists, partial=partial,
+        )
+
+    def _execute_planned_multi(
+        self, planned: PlannedBatch
+    ) -> List[Tuple[Request, np.ndarray]]:
+        """Execute a multi-index planned batch: one backend answer for
+        the whole flattened wire batch, ONE flat reconstruction + one
+        device->host transfer (request r's i-th wire index is flat row
+        r·k_max + i — the padded layout, so the per-request split is
+        numpy slicing, not per-request device ops), fresh rows merged
+        back into each request's cached slots in index order, and every
+        fresh (client, index) answer memoized.
+        ``SchemeRouter.finalize_many`` is the same split as a protocol-
+        level API; the serving path inlines it to keep the hot path at
+        one transfer per batch."""
+        results = planned.results
+        if planned.routed is not None:
+            misses = planned.misses
+            routed = planned.routed
+            clock = self.scheduler.clock
+            t1 = clock()
+            responses = self.backend.answer_batch(
+                routed, plan=planned.exec_plan, scheme=self.staged
+            )
+            # reconstruct the whole padded [B, W] batch in one shot —
+            # MultiQueries delegates its wire view, so the scheme's flat
+            # reconstruct applies; padding rows are sliced away below
+            flat_out = self.router.finalize(routed, responses)
+            flat_out.block_until_ready()
+            dt = planned.plan_s + (clock() - t1)
+
+            nbytes = -(-self.store.record_bits // 8)
+            raw_all = packing.unpack_bytes_np(np.asarray(flat_out), nbytes)
+            k_max = routed.k_max
+            raw = np.concatenate([
+                raw_all[j * k_max: j * k_max + len(lst)]
+                for j, lst in enumerate(planned.miss_lists)
+            ]) if planned.miss_lists else raw_all[:0]
+            flat_total = sum(len(lst) for lst in planned.miss_lists)
+            cols = None
+            if self.cache is not None:
+                col_bytes = (
+                    routed.payload.nbytes // routed.payload.shape[1]
+                )
+                if col_bytes <= self.cache.max_query_vector_bytes:
+                    cols = np.asarray(routed.payload)
+
+            with self._phase_lock:
+                self.scheduler.observe_service(planned.padded, dt)
+                self.metrics["batches"] += 1
+                self.metrics["padded"] += planned.padded - flat_total
+                costs = self.staged.costs(self.store.n)
+                self.metrics["records_touched"] += (
+                    costs["C_p"] / 2.0 * flat_total
+                )
+                self.metrics["blocks_sent"] += costs["C_m"] * flat_total
+                start = 0
+                for j, r in enumerate(misses):
+                    fresh = raw[start:start + len(planned.miss_lists[j])]
+                    start += len(planned.miss_lists[j])
+                    rows = list(planned.partial[j])
+                    f = 0
+                    for pos in range(len(rows)):
+                        if rows[pos] is not None:
+                            continue
+                        answer = np.array(fresh[f])
+                        rows[pos] = answer
+                        if self.cache is not None:
+                            # request j's f-th wire index sits at flat
+                            # column j·k_max + f (the padded layout)
+                            flat_col = j * routed.k_max + f
+                            self.cache.insert(
+                                r.client, planned.miss_lists[j][f],
+                                answer=answer,
+                                query_cols=(
+                                    None if cols is None
+                                    else cols[:, flat_col]
+                                ),
+                            )
+                        f += 1
+                    results[planned.miss_pos[j]] = (r, self._assemble(r, rows))
+        return results  # type: ignore[return-value]
+
     def execute_planned(
         self, planned: Optional[PlannedBatch]
     ) -> List[Tuple[Request, np.ndarray]]:
@@ -372,6 +570,8 @@ class ServingPipeline:
         concurrent :meth:`plan_requests` never waits on it."""
         if planned is None:
             return []
+        if planned.miss_lists is not None:  # a jagged multi-index batch
+            return self._execute_planned_multi(planned)
         results = planned.results
         if planned.routed is not None:
             misses, miss_pos = planned.misses, planned.miss_pos

@@ -174,12 +174,27 @@ class AsyncFrontend:
         under the 'reject' shed policy; the future resolves with
         :class:`PermissionError` when the client's budget refuses.
         """
+        return self._enqueue(client, int(index))
+
+    def submit_many(self, client: str, indices) -> "Future[np.ndarray]":
+        """Queue one jagged multi-index query; resolves to [k, nbytes]
+        record-byte rows in index order (DESIGN.md §Multi-index wire
+        format). Admission prices it at k·(ε, δ) — the Composition
+        Lemma's k sequential lookups — in one budget decision; same
+        backpressure and refusal contract as :meth:`submit`."""
+        if not len(indices):
+            raise ValueError("submit_many needs at least one index")
+        return self._enqueue(client, tuple(int(i) for i in indices))
+
+    def _enqueue(self, client: str, index) -> "Future[np.ndarray]":
+        """Shared ingest path: ``index`` is an int (single query) or a
+        tuple of ints (multi-index request)."""
         if self._closed:
             raise RuntimeError("frontend is closed to new submits")
         if not self._threads:
             self.start()
         fut: "Future[np.ndarray]" = Future()
-        item = (client, int(index), fut)
+        item = (client, index, fut)
         with self._cv:
             self._unadmitted += 1
             self._counters["accepted"] += 1
@@ -220,6 +235,12 @@ class AsyncFrontend:
         import asyncio
 
         return await asyncio.wrap_future(self.submit(client, index))
+
+    async def asubmit_many(self, client: str, indices) -> np.ndarray:
+        """Asyncio adapter over :meth:`submit_many`."""
+        import asyncio
+
+        return await asyncio.wrap_future(self.submit_many(client, indices))
 
     # --------------------------------------------------------------- drain
     def drain(self, timeout: Optional[float] = None) -> bool:
@@ -352,7 +373,11 @@ class AsyncFrontend:
                 self._unadmitted -= len(items)
                 for client, index, fut in items:
                     if fut.set_running_or_notify_cancel():
-                        req = self.pipeline.submit_request(client, index)
+                        req = (
+                            self.pipeline.submit_request_many(client, index)
+                            if isinstance(index, tuple)
+                            else self.pipeline.submit_request(client, index)
+                        )
                         if req is None:
                             refusals.append(fut)
                         else:
@@ -367,7 +392,7 @@ class AsyncFrontend:
                 sched = self.pipeline.scheduler
                 if (
                     len(sched) <= len(items)
-                    or len(sched) >= sched.target_batch
+                    or sched.flat_len >= sched.target_batch
                     or (self._draining and self._unadmitted == 0)
                 ):
                     self._cv.notify_all()

@@ -36,10 +36,14 @@ import jax.numpy as jnp
 
 from repro.core.protocol import (
     Answers,
+    MultiQueries,
     Queries,
     SchemeProtocol,
     SubsetPlan,
     as_protocol,
+    multi_bucket,
+    multi_query,
+    multi_reconstruct,
 )
 
 __all__ = ["RoutedBatch", "SubsetPre", "SchemeRouter"]
@@ -112,6 +116,35 @@ class SchemeRouter:
             plan = self.scheme.precompute(key, n, int(q_idx.shape[0]))
         return self.scheme.query(plan, q_idx, pick_servers=self._pick_servers)
 
+    def plan_many(
+        self,
+        key: jax.Array,
+        n: int,
+        index_lists: Sequence[Sequence[int]],
+        *,
+        pre: Optional[Any] = None,
+    ) -> MultiQueries:
+        """Jagged per-request index lists -> one flattened multi-index
+        wire batch (DESIGN.md §Multi-index wire format). ``pre`` must
+        have been precomputed for ``multi_bucket(index_lists)``; like
+        :meth:`plan`, the pre-supplied and inline paths are bit-identical.
+        """
+        if pre is not None:
+            if not self.scheme.has_precompute:
+                raise ValueError(
+                    f"{self.scheme.name} has no precompute half"
+                )
+            if pre.n != n:
+                raise ValueError(f"pre built for n={pre.n}, store has n={n}")
+            plan = pre
+        else:
+            plan = self.scheme.precompute(
+                key, n, multi_bucket(index_lists)
+            )
+        return multi_query(
+            self.scheme, plan, index_lists, pick_servers=self._pick_servers
+        )
+
     # -------------------------------------------------------- reconstruction
     def finalize(self, routed: Queries, responses: jnp.ndarray) -> jnp.ndarray:
         """Per-server responses -> [B, W] packed records.
@@ -122,4 +155,13 @@ class SchemeRouter:
         """
         return self.scheme.reconstruct(
             Answers(queries=routed, responses=responses)
+        )
+
+    def finalize_many(
+        self, routed: MultiQueries, responses: jnp.ndarray
+    ) -> list:
+        """Per-server responses for a multi-index batch -> per-request
+        [k_r, W] packed rows in request order (padding discarded)."""
+        return multi_reconstruct(
+            self.scheme, Answers(queries=routed, responses=responses)
         )

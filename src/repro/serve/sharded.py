@@ -87,7 +87,7 @@ from repro.kernels.backend import (
     resolve_kernel_impl_alias,
     shard_answer_fn,
 )
-from repro.core.protocol import Queries
+from repro.core.protocol import MultiQueries, Queries
 
 __all__ = ["ServerStats", "ShardedBackend"]
 
@@ -313,14 +313,19 @@ class ShardedBackend:
         """Resolve one batch's :class:`ExecutionPlan` (cached in the
         planner). The serving pipeline calls this for batch k+1 while
         batch k executes; calling it is optional — :meth:`answer_batch`
-        plans on demand when no plan is handed in."""
+        plans on demand when no plan is handed in. A
+        :class:`~repro.core.protocol.MultiQueries` batch threads its
+        padded per-request column count into the planner so the fused
+        multi-lookup path joins the candidate race (DESIGN.md
+        §Multi-index wire format)."""
         bucket = int(routed.payload.shape[1])
+        k_max = routed.k_max if isinstance(routed, MultiQueries) else None
         if routed.kind != "mask":
             return self.planner.plan(
-                routed, bucket, None, scheme=scheme
+                routed, bucket, None, scheme=scheme, k_max=k_max
             )
         return self.planner.plan(
-            routed, bucket, self._mesh_state(), scheme=scheme
+            routed, bucket, self._mesh_state(), scheme=scheme, k_max=k_max
         )
 
     def _plan_matches(
@@ -341,6 +346,12 @@ class ShardedBackend:
             return False
         if plan.theta != getattr(routed, "theta", None):
             return False
+        # a multi plan's kernel asserts bucket % k_max == 0 — a handed-in
+        # plan whose padded column count doesn't divide this batch must
+        # be replanned, not executed
+        k_plan = dict(plan.blocks).get("k_max")
+        if k_plan and int(routed.payload.shape[1]) % int(k_plan):
+            return False
         n_eff = state["n_pad"] // state["rshards"] if on_mesh else self.store.n
         return plan.n == n_eff
 
@@ -356,7 +367,8 @@ class ShardedBackend:
         state = self._mesh_state()
         if not self._plan_matches(plan, state, routed):
             plan = self.planner.plan(
-                routed, int(masks_s.shape[0]), state, scheme=scheme
+                routed, int(masks_s.shape[0]), state, scheme=scheme,
+                k_max=getattr(routed, "k_max", None),
             )
         self.path_counts[plan.family] += 1
 

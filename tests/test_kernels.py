@@ -302,3 +302,164 @@ def test_gather_xor_nonpow2_block_sweep(block_w):
         gather_xor(store.packed, idx, block_w=block_w, interpret=True)
     )
     np.testing.assert_array_equal(got, want)
+
+
+# --------------------------------------------------------------------------
+# Jagged multi-index fusion (DESIGN.md §Multi-index wire format): the
+# fused multi kernel must be bit-identical to the streaming pair and the
+# jnp oracle on the jagged_row_mask-masked index matrix — the identity
+# that lets the autotune search race all three forms for a multi bucket
+# without ever picking a non-bit-identical candidate.
+# --------------------------------------------------------------------------
+from repro.kernels import fused_multi_gather_fold, jagged_row_mask  # noqa: E402
+
+JAGGED_CASES = [
+    # (counts per request, k_max) — incl. the degenerate serving corners
+    ((5,), 8),                # 1 request × k indices
+    ((1, 1, 1, 1, 1, 1, 1, 1), 1),  # k requests × 1 index
+    ((3, 0, 8, 1), 8),        # empty row + full row + stragglers
+    ((2, 2), 2),              # exact fit, no padding rows
+]
+
+
+def _jagged_case(n, rb, counts, k_max, seed=0, garbage=False):
+    """Random per-index sparse masks laid out on the padded multi grid.
+    Dead rows (i >= counts[r]) hold -1 padding — or, with ``garbage``,
+    live-looking indices the kernel's jagged mask must suppress."""
+    store = make_synthetic_store(n=n, record_bytes=rb, seed=seed)
+    rng = np.random.default_rng(seed + 7)
+    m = min(n, 24)
+    idx = np.full((len(counts) * k_max, m), -1, np.int32)
+    for r, c in enumerate(counts):
+        upto = k_max if garbage else c
+        for i in range(upto):
+            w = int(rng.integers(1, m + 1))
+            idx[r * k_max + i, :w] = rng.choice(n, size=w, replace=False)
+    offsets = np.cumsum([0] + list(counts)).astype(np.int32)
+    return store, jnp.asarray(idx), jnp.asarray(offsets)
+
+
+def _masked(idx, offsets, k_max):
+    """The oracle's view: dead rows forced to all-padding."""
+    live = np.asarray(jagged_row_mask(offsets, k_max, idx.shape[0]))
+    return jnp.asarray(np.where(live[:, None], np.asarray(idx), -1))
+
+
+@pytest.mark.parametrize("counts,k_max", JAGGED_CASES)
+@pytest.mark.parametrize("grid_order", ["rw", "wr"])
+def test_fused_multi_matches_masked_pair_and_oracle(counts, k_max, grid_order):
+    store, idx, off = _jagged_case(100, 12, counts, k_max, seed=k_max)
+    got = np.asarray(fused_multi_gather_fold(
+        store.packed, idx, off, k_max=k_max, grid_order=grid_order,
+        interpret=True,
+    ))
+    masked = _masked(idx, off, k_max)
+    np.testing.assert_array_equal(
+        got, np.asarray(ref.gather_xor_ref(store.packed, masked))
+    )
+    np.testing.assert_array_equal(
+        got, np.asarray(gather_xor(store.packed, masked, interpret=True))
+    )
+
+
+@pytest.mark.parametrize("block_w", [8, 32, 128])
+def test_fused_multi_block_sweep_nonpow2_w(block_w):
+    """Non-pow2 record width across every block the search may pick."""
+    store, idx, off = _jagged_case(91, 21, (4, 0, 7), 8, seed=3)
+    want = np.asarray(ref.gather_xor_ref(store.packed, _masked(idx, off, 8)))
+    got = np.asarray(fused_multi_gather_fold(
+        store.packed, idx, off, k_max=8, block_w=block_w, interpret=True,
+    ))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_fused_multi_zeroes_dead_rows_regardless_of_contents():
+    """The jagged descriptor, not the -1 convention, is what silences a
+    padding row: even live-looking garbage indices in dead rows must
+    answer zero (the serving path relies on this when it reuses a
+    scratch index buffer across buckets)."""
+    store, idx, off = _jagged_case(64, 8, (3, 0, 1), 4, seed=9, garbage=True)
+    got = np.asarray(fused_multi_gather_fold(
+        store.packed, idx, off, k_max=4, interpret=True,
+    ))
+    live = np.asarray(jagged_row_mask(off, 4, idx.shape[0]))
+    np.testing.assert_array_equal(got[~live], 0)
+    np.testing.assert_array_equal(
+        got, np.asarray(ref.gather_xor_ref(store.packed, _masked(idx, off, 4)))
+    )
+
+
+def test_fused_multi_all_live_matches_flat_forms():
+    """With the serving layer's canonical all-live offsets (every flat
+    column a real query — padding columns are dummies whose responses the
+    client discards) the multi kernel degenerates to the flat contract:
+    bit-identical to fused_gather_fold and gather_xor on the same index
+    matrix, for both grid orders."""
+    store, mask = _case(128, 16, 8, seed=6)
+    idx = indices_from_mask(mask, 64)
+    k_max = 4
+    off = jnp.arange(idx.shape[0] // k_max + 1, dtype=jnp.int32) * k_max
+    want = np.asarray(fused_gather_fold(store.packed, idx, interpret=True))
+    for go in ("rw", "wr"):
+        got = np.asarray(fused_multi_gather_fold(
+            store.packed, idx, off, k_max=k_max, grid_order=go,
+            interpret=True,
+        ))
+        np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(
+        want, np.asarray(gather_xor(store.packed, idx, interpret=True))
+    )
+
+
+def test_fused_multi_validates_layout():
+    store, idx, off = _jagged_case(64, 8, (2, 2), 2, seed=1)
+    with pytest.raises(ValueError, match="grid_order"):
+        fused_multi_gather_fold(store.packed, idx, off, k_max=2,
+                                grid_order="zz", interpret=True)
+    with pytest.raises(ValueError, match="multiple of k_max"):
+        fused_multi_gather_fold(store.packed, idx, off, k_max=3,
+                                interpret=True)
+    with pytest.raises(ValueError, match=r"offsets must be \[R\+1\]"):
+        fused_multi_gather_fold(store.packed, idx, off[:-1], k_max=2,
+                                interpret=True)
+
+
+def test_jagged_row_mask_matches_python():
+    off = jnp.asarray(np.array([0, 3, 3, 4, 12], np.int32))
+    k_max, rows = 8, 32
+    got = np.asarray(jagged_row_mask(off, k_max, rows))
+    counts = np.diff(np.asarray(off))
+    for r in range(4):
+        for i in range(k_max):
+            assert got[r * k_max + i] == (i < counts[r]), (r, i)
+
+
+def test_multi_vmem_gate_falls_back_to_pair():
+    """When the db word-block cannot fit VMEM (fused_block_w == 0) the
+    planner's multi-bucket prior and candidate set must both drop to the
+    streaming pair — the fused multi kernel never runs outside its
+    residency envelope."""
+    from repro.kernels import AutotuneTable, KernelPlanner
+    from repro.core import make_scheme
+
+    store = make_synthetic_store(n=256, record_bytes=16, seed=2)
+    sch = make_scheme("sparse", d=4, d_a=2, theta=0.25).staged
+    plan = KernelPlanner(
+        store, backend="pallas", table=AutotuneTable(),
+        vmem_budget_bytes=1,  # nothing fits: the gate closes
+    ).plan(
+        sch.query(sch.precompute(jax.random.key(0), store.n, 8),
+                  jnp.zeros((8,), jnp.int32)),
+        8, None, scheme=sch, k_max=4,
+    )
+    assert plan.path == "sparse_pair", plan.path
+    # with a real budget the same multi cell priors to the fused form
+    plan2 = KernelPlanner(
+        store, backend="pallas", table=AutotuneTable(),
+    ).plan(
+        sch.query(sch.precompute(jax.random.key(0), store.n, 8),
+                  jnp.zeros((8,), jnp.int32)),
+        8, None, scheme=sch, k_max=4,
+    )
+    assert plan2.path == "sparse_multi_fused", plan2.path
+    assert dict(plan2.blocks)["k_max"] == 4

@@ -19,15 +19,20 @@ from repro.core import accounting as acc
 from repro.core import chor, direct, make_scheme, sparse, subset
 from repro.core.protocol import (
     Anonymized,
+    MultiQueries,
     Queries,
     SchemeProtocol,
     as_protocol,
     build_scheme,
     get_scheme,
+    multi_bucket,
+    multi_privacy,
+    multi_query,
     register_scheme,
     registered_schemes,
     scheme_param_names,
     staged_retrieve,
+    staged_retrieve_many,
 )
 from repro.db import make_synthetic_store
 from repro.serve import SchemeRouter, ServingPipeline, scheme_signature
@@ -187,6 +192,88 @@ def test_anonymized_is_composable_and_validated():
         Anonymized(base, u=0)
     with pytest.raises(TypeError, match="staged scheme"):
         Anonymized("sparse", u=4)
+
+
+# --------------------------------------------------------------------------
+# Multi-index conformance (DESIGN.md §Multi-index wire format): for every
+# registered scheme the jagged staged_retrieve_many path must be
+# bit-identical to the per-index staged_retrieve loop, and the Composition
+# Lemma must price a k-index lookup at EXACTLY k× the single-lookup (ε, δ).
+# --------------------------------------------------------------------------
+# empty row, duplicate indices within a row, single-index row, non-pow2
+# row length — every raggedness the serving path can produce
+JAGGED = [[17, 3, 3], [], [95], [0, 1, 2, 40, 7]]
+
+
+def _per_index_loop(sch, key, store, index_lists):
+    """The path the jagged format replaces: one staged_retrieve per index
+    (each with its own randomness — bit-identity is a statement about the
+    reconstructed records, not the wire bits)."""
+    out = []
+    for r, lst in enumerate(index_lists):
+        rows = [
+            np.asarray(
+                staged_retrieve(
+                    sch, jax.random.fold_in(key, 1000 * r + i), store,
+                    jnp.array([q]),
+                )
+            )[0]
+            for i, q in enumerate(lst)
+        ]
+        out.append(np.stack(rows) if rows else None)
+    return out
+
+
+@pytest.mark.parametrize("name", sorted(PARAMS))
+@pytest.mark.parametrize("anon", [False, True])
+def test_multi_index_bit_identical_to_per_index_loop(store, name, anon):
+    sch = build_scheme(name, d=D, d_a=D_A, **PARAMS[name])
+    if anon:
+        sch = Anonymized(sch, u=64)
+    key = jax.random.key(21)
+    many = staged_retrieve_many(sch, key, store, JAGGED)
+    loop = _per_index_loop(sch, key, store, JAGGED)
+    assert len(many) == len(JAGGED)
+    packed = np.asarray(store.packed)
+    for lst, got, want in zip(JAGGED, many, loop):
+        got = np.asarray(got)
+        assert got.shape[0] == len(lst)
+        if want is None:
+            continue  # empty request: nothing to compare, shape checked
+        np.testing.assert_array_equal(got, want)
+        # and both equal the records themselves
+        np.testing.assert_array_equal(got, packed[np.asarray(lst)])
+
+
+@pytest.mark.parametrize("name", sorted(PARAMS))
+def test_multi_privacy_is_exactly_k_times_single(store, name):
+    sch = build_scheme(name, d=D, d_a=D_A, **PARAMS[name])
+    eps, delta = sch.privacy(store.n)
+    for s in (sch, Anonymized(sch, u=32)):
+        e1, d1 = s.privacy(store.n)
+        for k in (0, 1, 3, 8):
+            assert multi_privacy(s, store.n, k) == (k * e1, k * d1)
+    assert multi_privacy(sch, store.n, 1) == (eps, delta)
+    with pytest.raises(ValueError, match="k >= 0"):
+        multi_privacy(sch, store.n, -1)
+
+
+def test_multi_query_stage_validates_and_delegates(store):
+    """MultiQueries quacks like its flat wire view (so answer/reconstruct
+    accept it unchanged), and the query stage refuses a plan built for the
+    wrong flat bucket."""
+    sch = build_scheme("sparse", d=D, d_a=D_A, theta=0.3)
+    key = jax.random.key(4)
+    bucket = multi_bucket(JAGGED)
+    assert bucket == 4 * 8  # 4 requests (pow2) × k_max=8 (pow2 of 5)
+    mq = multi_query(sch, sch.precompute(key, store.n, bucket), JAGGED)
+    assert isinstance(mq, MultiQueries)
+    assert mq.requests == len(JAGGED) and mq.k_max == 8
+    assert mq.total == sum(len(r) for r in JAGGED)
+    assert mq.kind == mq.queries.kind and mq.servers == mq.queries.servers
+    assert int(mq.payload.shape[1]) == bucket
+    with pytest.raises(ValueError, match="flat multi bucket"):
+        multi_query(sch, sch.precompute(key, store.n, 4), JAGGED)
 
 
 # --------------------------------------------------------------------------

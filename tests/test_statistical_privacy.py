@@ -273,3 +273,122 @@ def test_degraded_sparse_empirical_eps_meets_degraded_bound():
     emp = _empirical_epsilon(fn)
     assert emp <= bound + 0.25, (emp, bound)
     assert emp >= 0.5 * bound, (emp, bound)
+
+
+# --------------------------------------------------------------------------
+# Multi-index batches (DESIGN.md §Multi-index wire format): the adversary
+# sees the FLATTENED query matrix — k wire columns per request — and the
+# Composition Lemma prices the whole request at (k·ε, k·δ). Measure the
+# joint empirical leakage of all k columns against the composed bound.
+# --------------------------------------------------------------------------
+def _observe_routed_multi(n, d, d_a, theta, lists_i, lists_j, cols, use_pre):
+    """Joint sufficient statistic of a routed multi-index Sparse-PIR batch
+    at the corrupted servers: the (parity of col q_i, parity of col q_j)
+    code of EVERY flat wire column, combined positionally — the adversary
+    who watches the whole flattened matrix, not one column of it."""
+    from repro.core.protocol import multi_bucket
+
+    router = SchemeRouter(make_scheme("sparse", d=d, d_a=d_a, theta=theta))
+    q_i, q_j = cols
+    bucket = multi_bucket(lists_i)
+    assert bucket == multi_bucket(lists_j)
+
+    def fn(keys: jax.Array, hyp: int) -> jnp.ndarray:
+        lists = lists_i if hyp == 0 else lists_j
+
+        def one(k):
+            pre = router.precompute(k, n, bucket) if use_pre else None
+            routed = router.plan_many(k, n, lists, pre=pre)
+            obs = routed.payload[:d_a, :, :]  # [d_a, B, n] corrupted rows
+            code = jnp.int32(0)
+            for c in range(bucket):
+                pi = jnp.sum(obs[:, c, q_i]) % 2
+                pj = jnp.sum(obs[:, c, q_j]) % 2
+                code = 4 * code + (2 * pi + pj).astype(jnp.int32)
+            return code
+
+        return jax.vmap(one)(keys)
+
+    return fn
+
+
+@pytest.mark.parametrize("use_pre", [False, True],
+                         ids=["inline", "cached-prefill"])
+def test_multi_index_empirical_eps_within_composed_bound(use_pre):
+    """One 2-index request, hypotheses differing in BOTH indices — the
+    worst case the Composition Lemma prices at 2ε. The joint empirical ε
+    of the flattened matrix must stay under the composed bound (and land
+    near it: each column's Thm 3 bound is tight, and the columns draw
+    independent randomness). ``cached-prefill`` routes the same batch
+    through banked precomputed randomness — the QueryCache prefill path
+    must present the identical wire distribution."""
+    from repro.core.protocol import multi_privacy
+
+    n, d, d_a, theta = 16, 4, 2, 0.3
+    q_i, q_j = 2, 9
+    sch = make_scheme("sparse", d=d, d_a=d_a, theta=theta)
+    bound = multi_privacy(sch.staged, n, 2)[0]
+    assert bound == pytest.approx(2 * sch.epsilon(n))
+    emp = _empirical_epsilon(
+        _observe_routed_multi(
+            n, d, d_a, theta,
+            [[q_i, q_i]], [[q_j, q_j]], (q_i, q_j), use_pre,
+        ),
+        trials=TRIALS,
+    )
+    assert emp <= bound + 0.35, (emp, bound)
+    assert emp >= 0.5 * bound, (emp, bound)
+
+
+def test_multi_index_padding_columns_spend_nothing():
+    """A 1-index request padded to k_max=2: the padding column is a real
+    index-0 dummy whose response is discarded — the flattened matrix may
+    leak at most the SINGLE-lookup ε, not the padded width's 2ε. This is
+    the Composition-Lemma accounting the serve layer relies on when it
+    prices admission by true index count, padding free."""
+    n, d, d_a, theta = 16, 4, 2, 0.3
+    sch = make_scheme("sparse", d=d, d_a=d_a, theta=theta)
+    bound = sch.epsilon(n)
+    # both hypotheses pad col 1 with the same dummy; only col 0 differs
+    emp = _empirical_epsilon(
+        _observe_routed_multi(
+            n, d, d_a, theta, [[2]], [[9]], (2, 9), False,
+        ),
+        trials=TRIALS,
+    )
+    assert emp <= bound + 0.30, (emp, bound)
+    assert emp >= 0.5 * bound, (emp, bound)
+
+
+def test_multi_cache_replay_leaks_nothing_beyond_first_request():
+    """k replays of one (client, [i1..ik]) multi request through a cached
+    pipeline: every per-index memo hits, the wire carries ZERO new bits,
+    yet the accountant charges the full k·ε per replay — the QueryCache
+    hit path can only overpay the composed bound, never stretch it."""
+    from repro.core.protocol import multi_privacy
+    from repro.db import make_synthetic_store
+    from repro.serve import BatchScheduler, QueryCache, ServingPipeline
+
+    n, replays, ids = 64, 3, [11, 5, 40]
+    store = make_synthetic_store(n, 16, seed=6)
+    sch = make_scheme("sparse", d=4, d_a=2, theta=0.3)
+    pipe = ServingPipeline(
+        store, sch, cache=QueryCache(sch, store.n),
+        scheduler=BatchScheduler(max_batch=32),
+    )
+    wire = []
+    orig = pipe.backend.answer_batch
+    pipe.backend.answer_batch = lambda routed, **kw: (
+        wire.append(routed.payload), orig(routed, **kw)
+    )[1]
+
+    for _ in range(1 + replays):
+        assert pipe.submit_many("monitor", ids)
+        pipe.flush()
+
+    assert len(wire) == 1, "multi replays must add nothing to the wire"
+    assert pipe.metrics["cache_hits"] == replays * len(ids)
+    eps_req = multi_privacy(sch.staged, n, len(ids))[0]
+    assert pipe.budget("monitor").spent_epsilon == pytest.approx(
+        (1 + replays) * eps_req
+    )

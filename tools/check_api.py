@@ -19,7 +19,8 @@ Three passes:
    outside ``repro.kernels`` may import the raw kernel modules
    (``repro.kernels.gather_xor`` / ``xor_fold`` / ``parity_matmul`` /
    ``fused``) or pull ``gather_xor``/``xor_fold``/``parity_matmul``/
-   ``fused_gather_fold`` from the package. Kernel choice flows through
+   ``fused_gather_fold``/``fused_multi_gather_fold`` from the package.
+   Kernel choice flows through
    ``repro.kernels.backend`` (ExecutionPlan/KernelPlanner) or the
    ``repro.kernels.ops`` wrappers; the ``ref`` oracles and
    ``indices_from_mask`` stay public (they are the correctness ground
@@ -61,7 +62,9 @@ KERNEL_INTERNAL_MODULES = {f"repro.kernels.{m}" for m in KERNEL_INTERNAL}
 # names that must not be pulled from the repro.kernels package either:
 # the kernel functions AND the submodules themselves (`from repro.kernels
 # import fused` is the same breach as `import repro.kernels.fused`)
-KERNEL_INTERNAL_NAMES = KERNEL_INTERNAL | {"fused_gather_fold"}
+KERNEL_INTERNAL_NAMES = KERNEL_INTERNAL | {
+    "fused_gather_fold", "fused_multi_gather_fold"
+}
 
 SKIP_DIRS = {".git", "__pycache__", ".pytest_cache"}
 
