@@ -44,10 +44,10 @@ OUT_DIR = os.path.abspath(
 # speedup}), written at the repo root by every harness run; seeded from
 # the previous PR's artifact so the trajectory never loses rows
 BENCH_JSON = os.path.abspath(
-    os.path.join(os.path.dirname(__file__), "..", "BENCH_PR8.json")
+    os.path.join(os.path.dirname(__file__), "..", "BENCH_PR9.json")
 )
 PREV_BENCH_JSON = os.path.abspath(
-    os.path.join(os.path.dirname(__file__), "..", "BENCH_PR7.json")
+    os.path.join(os.path.dirname(__file__), "..", "BENCH_PR8.json")
 )
 
 # perf-floor gate (EXPERIMENTS.md §Autotune): in every measured exec_*
@@ -60,7 +60,7 @@ SMOKE = False  # set by main(); system rows shrink to tiny shapes, 1 rep
 
 Row = Tuple[str, float, str]
 
-# rows the run registers for BENCH_PR8.json (machine-readable trajectory)
+# rows the run registers for BENCH_PR9.json (machine-readable trajectory)
 BENCH: Dict[str, Dict[str, float]] = {}
 
 
@@ -758,16 +758,22 @@ def dlrm_serving() -> List[Row]:
 
 
 # ------------------------------------------------- fleet scenario matrix
-def _fleet_pipe(n: int, rb: int, max_batch: int) -> ServingPipeline:
+def _fleet_pipe(
+    n: int, rb: int, max_batch: int, *, live: bool = False
+) -> ServingPipeline:
     """A cache-equipped serving pipeline with every pow2 bucket shape the
     scheduler can cut pre-compiled — the timed runs then measure queueing
     and serving, not XLA compiles. Post-degrade shapes (d' < d) are left
     cold on purpose: that compile storm is part of the honest disruption
-    cost a replica loss inflicts, and it lands in the loss scenario's p99."""
+    cost a replica loss inflicts, and it lands in the loss scenario's p99.
+    ``live=True`` serves through a :class:`~repro.db.live.VersionedStore`
+    (DESIGN.md §13) for the write-heavy rows."""
+    from repro.db import VersionedStore
+
     store = make_synthetic_store(n, rb, seed=7)
     sch = make_scheme("sparse", d=4, d_a=2, theta=0.25)
     pipe = ServingPipeline(
-        store, sch,
+        VersionedStore(store, shards=16) if live else store, sch,
         scheduler=BatchScheduler(
             max_batch=max_batch, max_wait_s=0.005, target_latency_s=10.0
         ),
@@ -887,11 +893,131 @@ def fleet_scenarios() -> List[Row]:
     ]
 
 
+# ------------------------------------------------- streaming-ingest row
+def pir_ingest_p99() -> List[Row]:
+    """The PR-9 tentpole row: serve p99 under a write-heavy fleet
+    scenario — Poisson reads with an update delta touching > 1% of the
+    records landing every eighth of the run through the flush worker's
+    idle slot (DESIGN.md §13) — versus the identical read-only scenario
+    on a frozen store. Asserted, not just reported: zero dropped
+    futures in both runs; every delta actually applied; same-shape
+    ingest kept every cached ExecutionPlan (``plans_dropped == 0`` —
+    incremental invalidation, not re-planning); and the headline gate,
+    **write-heavy p99 ≤ 1.5× frozen p99**. A separate explicit-futures
+    pass asserts zero *torn* answers: each answer is bit-identical to
+    its index's bytes in SOME store version — a batch that mixed two
+    snapshots would produce bytes no version ever held."""
+    from repro.data.pipeline import pir_delta_batch
+    from repro.fleet import (
+        ClientPopulation,
+        FleetScenario,
+        PoissonArrivals,
+        run_scenario,
+    )
+
+    n, rb = (512, 64) if SMOKE else (2048, 64)
+    rate = 150.0 if SMOKE else 400.0
+    dur = 0.6 if SMOKE else 2.0
+    max_batch = 64 if SMOKE else 256
+    upd = max(8, n // 64)  # > 1% of records per delta
+    bursts = 8
+
+    def scenario(name: str, write_heavy: bool) -> FleetScenario:
+        return FleetScenario(
+            name=name, arrivals=PoissonArrivals(rate), duration_s=dur,
+            seed=11,
+            ingest_every_s=dur / bursts if write_heavy else 0.0,
+            ingest_updates=upd if write_heavy else 0,
+        )
+
+    pop = ClientPopulation(
+        n_clients=64 if SMOKE else 1024, n_records=n, seed=0
+    )
+
+    pipe_f = _fleet_pipe(n, rb, max_batch)
+    rep_f = run_scenario(scenario("ingest_frozen", False), pipe_f, pop)
+
+    pipe_w = _fleet_pipe(n, rb, max_batch, live=True)
+    # pay the scatter kernel's jit before the timed run, same shapes as
+    # the scheduled deltas — the steady-state write path is what's timed
+    for d0 in pir_delta_batch(n, rb, updates=upd, seed=99, step=0):
+        pipe_w.ingest(d0)
+    planner0 = dict(pipe_w.backend.planner.metrics)
+    rep_w = run_scenario(scenario("ingest_write_heavy", True), pipe_w, pop)
+
+    for name, rep in (("frozen", rep_f), ("write_heavy", rep_w)):
+        assert rep.slo["failed"] == 0, (
+            f"{name}: {rep.slo['failed']:.0f} in-flight futures dropped"
+        )
+    ingests = int(rep_w.frontend_metrics["ingested"])
+    assert ingests >= bursts // 2, (
+        f"write-heavy run only applied {ingests} of ~{bursts} deltas"
+    )
+    pm = pipe_w.backend.planner.metrics
+    # same-shape updates must never re-plan: incremental invalidation
+    # keeps every cached ExecutionPlan and refreshes only touched rows
+    assert pm["plans_dropped"] == planner0["plans_dropped"], (
+        f"update-only ingest dropped plans: {pm}"
+    )
+    assert pm["plans_kept"] > planner0["plans_kept"]
+
+    # zero-torn-answers pass: explicit futures, checked by snapshot
+    # membership against the live store's whole version history
+    tn = 256 if SMOKE else 512
+    pipe_t = _fleet_pipe(tn, rb, 32, live=True)
+    live = pipe_t.live
+    with AsyncFrontend(pipe_t, queue_limit=1024, shed_policy="block") as fe:
+        futs = []
+        for step in range(6):
+            for d in pir_delta_batch(
+                tn, rb, updates=max(8, tn // 32), seed=13, step=step
+            ):
+                fe.ingest(d)
+            for j in range(16):
+                idx = (step * 31 + j * 7) % tn
+                futs.append((idx, fe.submit(f"t{step}_{j}", idx)))
+        assert fe.drain(30.0)
+        history = [live.snapshot(v) for v in range(live.version + 1)]
+        for idx, fut in futs:
+            a = bytes(fut.result(5.0))
+            assert any(
+                a == bytes(s.record_bytes(idx)) for s in history
+            ), f"torn answer for index {idx}: matches no store version"
+
+    p99_f, p99_w = rep_f.slo["p99_ms"], rep_w.slo["p99_ms"]
+    ratio = p99_w / max(p99_f, 1e-9)
+    # the headline gate: writes ride the idle slot, reads keep their
+    # plans — serving a churning store must cost ≤ 1.5x the frozen p99
+    assert ratio <= 1.5, (
+        f"write-heavy p99 {p99_w:.1f}ms is {ratio:.2f}x the frozen "
+        f"{p99_f:.1f}ms (gate 1.5x)"
+    )
+    _write_csv(
+        "pir_ingest_p99",
+        ["mode", "arrivals", "p50_ms", "p99_ms", "goodput_qps", "ingests",
+         "records_ingested"],
+        [
+            ("frozen", rep_f.arrivals, rep_f.slo["p50_ms"],
+             p99_f, rep_f.slo["goodput_qps"], 0, 0),
+            ("write_heavy", rep_w.arrivals, rep_w.slo["p50_ms"],
+             p99_w, rep_w.slo["goodput_qps"], ingests,
+             int(rep_w.frontend_metrics["records_ingested"])),
+        ],
+    )
+    _bench("pir_ingest_p99", rep_w.arrivals, p99_w / 1e3, p99_f / p99_w)
+    return [(
+        "pir_ingest_p99", p99_w * 1e3,
+        f"write_p99={p99_w:.1f}ms;frozen_p99={p99_f:.1f}ms;"
+        f"ratio={ratio:.2f}x;ingests={ingests};"
+        f"plans_kept={pm['plans_kept']};torn=0",
+    )]
+
+
 ALL = [
     fig1_direct, fig2_as_direct, fig3_sparse, fig4_as_sparse, fig5_subset,
     fig6_frontier, table1, server_paths, exec_backend_matrix,
     engine_throughput, serve_batched_vs_loop, serve_async_vs_sync,
-    dlrm_serving, fleet_scenarios,
+    dlrm_serving, fleet_scenarios, pir_ingest_p99,
 ]
 
 

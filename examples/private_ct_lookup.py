@@ -3,6 +3,10 @@ scenario (§1), end to end through the serving engine:
 
   * a (scaled-down) certificate log served by d replicated databases,
   * clients resolving domains privately via Sparse-PIR,
+  * the log GROWING UNDER TRAFFIC: new certs append, renewals update,
+    revocations tombstone — all through ``VersionedStore`` deltas
+    (DESIGN.md §13), never a whole-store rebuild, with in-flight
+    lookups pinned to the snapshot they were planned against,
   * straggler-aware Subset-PIR with its (0, δ) privacy price,
   * per-client ε budgets refusing over-querying clients (§2.2).
 
@@ -13,15 +17,17 @@ import numpy as np
 
 from repro.core import SparseScheme, SubsetScheme
 from repro.core.accounting import PrivacyBudget, theta_for_epsilon
+from repro.db import Delta, VersionedStore, rebuild
 from repro.db.store import RecordStore
-from repro.serve import PIRServingEngine
+from repro.serve import AsyncFrontend, PIRServingEngine
 
 # ---- the "certificate log" (scaled CT: real config is n=1e6 × 1.5kB) ----
 N, CERT_BYTES, D, D_A = 4096, 256, 10, 5
 rng = np.random.default_rng(0)
 domains = [f"site-{i:05d}.example" for i in range(N)]
 certs = rng.integers(0, 256, size=(N, CERT_BYTES), dtype=np.uint8)
-store = RecordStore.from_bytes(certs)
+# a live, versioned log: CT logs are append-heavy by construction
+log = VersionedStore(RecordStore.from_bytes(certs), shards=16)
 
 # ---- pick θ for a target ε (inverse solver) ------------------------------
 eps_target = 0.5
@@ -32,7 +38,7 @@ print(f"operating point: theta={scheme.theta}, eps={scheme.privacy(N)[0]:.3f}, "
       f"records touched/query/server ≈ {scheme.theta * N:.0f} of {N}")
 
 engine = PIRServingEngine(
-    store, scheme,
+    log, scheme,
     default_budget=lambda: PrivacyBudget(epsilon_limit=10 * eps_target),
 )
 
@@ -46,6 +52,65 @@ for client, idx in lookups.items():
     print(f"{client:>6} privately fetched cert for {domains[idx]} "
           f"(eps spent: {engine.budget(client).spent_epsilon:.3f})")
 
+# ---- the log grows under traffic (no rebuilds) ---------------------------
+# pin the pre-append snapshot: an auditor holding it must keep seeing the
+# log exactly as it was, whatever lands after
+snap_pre = log.snapshot()
+ver_pre = log.version
+
+new_certs = rng.integers(0, 256, size=(64, CERT_BYTES), dtype=np.uint8)
+renewed = rng.integers(0, 256, size=(2, CERT_BYTES), dtype=np.uint8)
+engine.ingest(Delta.append(new_certs))            # 64 fresh issuances
+engine.ingest(Delta.update([17, 2048], renewed))  # two renewals
+engine.ingest(Delta.delete([4095]))               # one revocation
+domains += [f"site-{N + i:05d}.example" for i in range(64)]
+snap_post = log.snapshot()
+
+# lookups against the LIVE log see the writes...
+for client, idx, want in [
+    ("alice", 17, renewed[0]),          # renewed in place
+    ("erin", N + 63, new_certs[63]),    # freshly appended
+    ("frank", 4095, np.zeros(CERT_BYTES, np.uint8)),  # revoked -> tombstone
+]:
+    assert engine.submit(client, idx)
+    assert (engine.flush()[client] == want).all()
+print(f"\nlog v{ver_pre} -> v{log.version}: +64 certs, 2 renewals, "
+      f"1 revocation; only shards {log.shards_touched_since(ver_pre)} "
+      f"of {log.shards} re-planned")
+
+# ...while BOTH pinned snapshots stay bit-exact: the pre-append view is
+# the original log, the post-append view matches an independent rebuild
+assert (np.asarray(snap_pre.packed)
+        == np.asarray(RecordStore.from_bytes(certs).packed)).all()
+for idx in (17, 2048, 4095):
+    assert bytes(snap_pre.record_bytes(idx)) == bytes(certs[idx])
+oracle = rebuild(log.base, [Delta.append(new_certs),
+                            Delta.update([17, 2048], renewed),
+                            Delta.delete([4095])])
+assert (np.asarray(snap_post.packed) == np.asarray(oracle.packed)).all()
+print("pre- and post-append snapshots both bit-exact (oracle-checked)")
+
+# ---- append-heavy serving at traffic (the async front) -------------------
+# writes ride the flush worker's idle slot: submits and ingests interleave
+# freely, no lookup ever tears across a delta
+with AsyncFrontend(engine) as fe:
+    futures = {}
+    for step in range(4):
+        batch = rng.integers(0, 256, size=(16, CERT_BYTES), dtype=np.uint8)
+        fe.ingest(Delta.append(batch))
+        for c in range(3):
+            idx = int(rng.integers(0, N))
+            futures[f"client-{step}-{c}"] = (idx, fe.submit(f"c{step}{c}", idx))
+    fe.drain(30.0)
+    live_now = log.snapshot()
+    for name, (idx, fut) in futures.items():
+        got = fut.result(5.0)
+        assert (bytes(got) == bytes(live_now.record_bytes(idx))
+                or bytes(got) == bytes(snap_post.record_bytes(idx)))
+    print(f"async front: {fe.metrics['served']} lookups interleaved with "
+          f"{fe.metrics['ingested']} idle-slot ingests "
+          f"(log now v{log.version}, n={log.n})")
+
 # ---- budget enforcement ---------------------------------------------------
 greedy = 0
 while engine.submit("mallory", int(rng.integers(0, N))):
@@ -56,7 +121,7 @@ print(f"\nmallory admitted for {greedy} queries, then refused "
 # ---- straggler mitigation = Subset-PIR (paper §5.1) -----------------------
 sub = SubsetScheme(d=D, d_a=D_A, t=4)
 lat = {i: (0.050 if i in (2, 7) else 0.002) for i in range(D)}  # two stragglers
-eng2 = PIRServingEngine(store, sub, simulate_latency=lambda s: lat[s])
+eng2 = PIRServingEngine(log.snapshot(), sub, simulate_latency=lambda s: lat[s])
 for r in range(3):
     eng2.submit("dave", 99)
     out = eng2.flush()

@@ -102,6 +102,12 @@ class Queries:
     ``theta`` is set for the sparse family so the execution backend can
     pick the gather path. ``q_idx`` never crosses the wire — it stays on
     the client for :meth:`SchemeProtocol.reconstruct`.
+
+    ``store_version`` stamps which snapshot of a live
+    :class:`~repro.db.live.VersionedStore` the batch was planned against
+    (DESIGN.md §13) — None when serving a frozen store. Bookkeeping, not
+    a wire secret: versions say *when* the database changed, never what
+    was asked.
     """
 
     kind: str
@@ -109,6 +115,7 @@ class Queries:
     servers: Tuple[int, ...]
     q_idx: jnp.ndarray
     theta: Optional[float] = None
+    store_version: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -161,6 +168,10 @@ class MultiQueries:
         return self.queries.theta
 
     @property
+    def store_version(self) -> Optional[int]:
+        return self.queries.store_version
+
+    @property
     def total(self) -> int:
         """True (unpadded) number of flattened indices."""
         return int(self.offsets[-1])
@@ -186,7 +197,11 @@ class Plan(Protocol):
     ``batch`` (batch size) — everything else is scheme-private. Plans are
     **single-use** by contract: feeding one plan to two ``query()`` calls
     would correlate the adversary's views across those batches
-    (DESIGN.md §Cross-batch cache)."""
+    (DESIGN.md §Cross-batch cache). Plans depend on the store only
+    through ``n``: under a live :class:`~repro.db.live.VersionedStore`
+    a banked plan stays valid across same-shape ingests (content never
+    enters the client half) and dies with the pre pool when an append
+    changes ``n`` (DESIGN.md §13)."""
 
     n: int
     batch: int

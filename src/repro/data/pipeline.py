@@ -26,12 +26,53 @@ __all__ = [
     "bert4rec_batch",
     "gnn_full_graph",
     "molecule_batch",
+    "pir_delta_batch",
     "NeighborSampler",
 ]
 
 
 def _rng(seed: int, step: int) -> np.random.Generator:
     return np.random.default_rng(np.random.SeedSequence([seed, step]))
+
+
+# ------------------------------------------------------------ PIR deltas
+def pir_delta_batch(
+    current_n: int,
+    record_bytes: int,
+    *,
+    appends: int = 0,
+    updates: int = 0,
+    deletes: int = 0,
+    seed: int = 0,
+    step: int = 0,
+):
+    """One step of synthetic write traffic against a versioned PIR store:
+    a list of :class:`~repro.db.live.Delta`\\ s (append, then update, then
+    delete — only the non-empty kinds). Stateless in (seed, step) like
+    every pipeline here, so a replayed ingest stream is bit-identical —
+    which is what lets the streaming-ingest benchmark and the fleet
+    harness's write-heavy scenario assert snapshot conformance against
+    an independently rebuilt store. Update/delete targets are drawn from
+    [0, current_n) — pass the store's n *at this step* (appends grow it)."""
+    from repro.db.live import Delta  # db imports nothing from data; one-way
+
+    if current_n < 1:
+        raise ValueError("pir_delta_batch needs current_n >= 1")
+    rng = _rng(seed, step ^ 0x5EED)
+    out = []
+    if appends:
+        out.append(Delta.append(
+            rng.integers(0, 256, size=(appends, record_bytes), dtype=np.uint8)
+        ))
+    if updates:
+        idx = rng.integers(0, current_n, size=updates)
+        out.append(Delta.update(
+            idx,
+            rng.integers(0, 256, size=(updates, record_bytes), dtype=np.uint8),
+        ))
+    if deletes:
+        out.append(Delta.delete(rng.integers(0, current_n, size=deletes)))
+    return out
 
 
 # ----------------------------------------------------------------- LM

@@ -1,3 +1,4 @@
+from repro.db.live import Delta, VersionedStore, rebuild
 from repro.db.packing import (
     WORD_BITS,
     bitcast_f32_to_u32,
@@ -10,11 +11,14 @@ from repro.db.store import RecordStore, make_synthetic_store
 
 __all__ = [
     "WORD_BITS",
+    "Delta",
     "RecordStore",
+    "VersionedStore",
     "bitcast_f32_to_u32",
     "bitcast_u32_to_f32",
     "make_synthetic_store",
     "pack_bits",
+    "rebuild",
     "unpack_bits",
     "words_per_record",
 ]

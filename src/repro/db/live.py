@@ -1,0 +1,323 @@
+"""Versioned record stores: MVCC deltas over the packed PIR substrate.
+
+Every scheme in the repo answers against a frozen :class:`RecordStore`;
+production databases churn (the Unified Framework paper frames PIR as
+retrieving *up-to-date* information). This module is the seam between
+those two facts: a :class:`VersionedStore` layers append/update/delete
+:class:`Delta`\\ s over a base store, hands out **frozen snapshots** —
+``snapshot(v)`` is bit-identical to a store rebuilt from scratch at
+version ``v``, by construction and by test — and tells the serving stack
+exactly which records each delta touched so invalidation can stay
+incremental (DESIGN.md §13).
+
+Consistency model (MVCC, single writer):
+
+* Every :meth:`VersionedStore.ingest` produces a new immutable head
+  ``RecordStore``; version numbers are the delta-log length. Snapshots
+  are values: a reader holding one can never observe a later write
+  (jnp buffers are immutable and ``RecordStore`` is frozen), so batch
+  pinning in the serve layer is just "hold the snapshot object".
+* ``update`` rewrites records in place (same ``n``); ``delete`` is a
+  tombstone (the record zeroes, ``n`` stays) — record *indices are the
+  address space clients query by*, so compaction would break every
+  outstanding query; ``append`` grows ``n`` at the tail.
+* Records partition into ``shards`` logical interleaved groups
+  (``shard_of(i) = i % shards``, stable under append); ``shard_versions``
+  records the last version that touched each shard, which is what the
+  planner's incremental invalidation keys on.
+
+The write path runs on device: update/delete deltas apply through
+:func:`repro.kernels.backend.scatter_update` (the Pallas
+scatter-into-packed-words kernel raced against the jnp oracle through
+the backend registry), appends through a device concat. The host-numpy
+replay in :func:`rebuild` is the independent oracle the device path is
+asserted bit-identical against (tests/test_db_live.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.db import packing
+from repro.db.store import RecordStore
+
+__all__ = ["Delta", "VersionedStore", "apply_delta_np", "rebuild"]
+
+# update/delete deltas larger than this apply in chunks so the scatter
+# kernel's VMEM-resident payload stays bounded
+_SCATTER_CHUNK = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class Delta:
+    """One batch of writes against a specific store version.
+
+    ``kind`` ∈ {"append", "update", "delete"}; ``indices`` are the target
+    records for update/delete (**deduplicated, last write wins** — the
+    constructors enforce it so every backend impl agrees on the result);
+    ``raw`` is the [m, nbytes] uint8 payload for append/update.
+    Construct via :meth:`append` / :meth:`update` / :meth:`delete`.
+    """
+
+    kind: str
+    indices: Optional[np.ndarray] = None
+    raw: Optional[np.ndarray] = None
+
+    def __post_init__(self):
+        if self.kind not in ("append", "update", "delete"):
+            raise ValueError(f"unknown delta kind {self.kind!r}")
+        if self.kind != "delete" and (
+            self.raw is None or self.raw.ndim != 2
+        ):
+            raise ValueError(f"{self.kind} delta needs a [m, nbytes] payload")
+        if self.kind != "append" and self.indices is None:
+            raise ValueError(f"{self.kind} delta needs target indices")
+
+    @property
+    def count(self) -> int:
+        """How many records this delta writes."""
+        if self.kind == "delete":
+            return int(self.indices.shape[0])
+        return int(self.raw.shape[0])
+
+    # ------------------------------------------------------- constructors
+    @classmethod
+    def append(cls, raw: np.ndarray) -> "Delta":
+        """New records at the tail: raw [m, nbytes] uint8."""
+        return cls(kind="append", raw=np.ascontiguousarray(raw, np.uint8))
+
+    @classmethod
+    def update(cls, indices, raw) -> "Delta":
+        """Rewrite existing records; duplicate targets keep the last
+        payload (numpy assignment semantics — what both scatter impls
+        and the replay oracle implement)."""
+        idx = np.asarray(indices, np.int64).ravel()
+        raw = np.ascontiguousarray(raw, np.uint8)
+        if raw.shape[0] != idx.shape[0]:
+            raise ValueError("update payload rows != index count")
+        if idx.shape[0]:
+            # last occurrence wins: unique over the reversed view finds
+            # each target's final write
+            _, first_rev = np.unique(idx[::-1], return_index=True)
+            keep = np.sort(idx.shape[0] - 1 - first_rev)
+            idx, raw = idx[keep], raw[keep]
+        return cls(kind="update", indices=idx, raw=raw)
+
+    @classmethod
+    def delete(cls, indices) -> "Delta":
+        """Tombstone records (zeroed, ``n`` unchanged — indices are the
+        client-visible address space)."""
+        idx = np.unique(np.asarray(indices, np.int64).ravel())
+        return cls(kind="delete", indices=idx)
+
+
+def _packed_rows(delta: Delta, store: RecordStore) -> np.ndarray:
+    """The delta's payload, packed to the store's [m, W] word layout
+    (zeros for a tombstone)."""
+    nbytes = -(-store.record_bits // 8)
+    if delta.kind == "delete":
+        return np.zeros((delta.count, store.words), dtype=np.uint32)
+    if delta.raw.shape[1] != nbytes:
+        raise ValueError(
+            f"delta payload is {delta.raw.shape[1]} bytes/record; "
+            f"store records are {nbytes}"
+        )
+    return packing.pack_bytes_np(delta.raw)
+
+
+def _check_targets(delta: Delta, n: int) -> None:
+    if delta.kind == "append" or delta.count == 0:
+        return
+    lo, hi = int(delta.indices.min()), int(delta.indices.max())
+    if lo < 0 or hi >= n:
+        raise IndexError(
+            f"{delta.kind} targets [{lo}, {hi}] out of range for n={n}"
+        )
+
+
+def apply_delta_np(
+    packed: np.ndarray, record_bits: int, delta: Delta
+) -> np.ndarray:
+    """Host-numpy replay of one delta — the independent oracle the
+    on-device ingest path is asserted bit-identical against."""
+    store = RecordStore(packed=packed, record_bits=record_bits)  # view
+    _check_targets(delta, packed.shape[0])
+    rows = _packed_rows(delta, store)
+    if delta.kind == "append":
+        return np.concatenate([packed, rows], axis=0)
+    out = np.array(packed, copy=True)
+    out[delta.indices] = rows
+    return out
+
+
+def rebuild(base: RecordStore, deltas: Sequence[Delta]) -> RecordStore:
+    """A store built from scratch: base + the delta log, replayed on the
+    host. ``VersionedStore.snapshot(v)`` must be bit-identical to
+    ``rebuild(base, log[:v])`` — the MVCC contract."""
+    packed = np.asarray(base.packed)
+    bits = base.record_bits
+    for d in deltas:
+        packed = apply_delta_np(packed, bits, d)
+    return RecordStore(packed=jnp.asarray(packed), record_bits=bits)
+
+
+class VersionedStore:
+    """Append/update/delete deltas over a frozen base store, with
+    versioned snapshots and shard-level touch tracking.
+
+    ``shards`` controls the granularity the serving stack invalidates
+    at; ``retain`` how many recent heads stay materialized (any version
+    is still reachable — older snapshots rebuild from the delta log via
+    the host oracle; in-flight serve batches pin their snapshot by
+    holding the object, so retention only affects by-number access).
+    ``backend`` picks the write-kernel registry entry
+    (pallas / ref / auto) for delta application.
+    """
+
+    def __init__(
+        self,
+        base: RecordStore,
+        *,
+        shards: int = 8,
+        retain: int = 4,
+        backend: str = "auto",
+    ):
+        if shards < 1:
+            raise ValueError("shards must be >= 1")
+        self.base = base
+        self.shards = int(shards)
+        self.backend = backend
+        self._retain = max(1, int(retain))
+        self._log: List[Delta] = []
+        self._version = 0
+        self._heads: Dict[int, RecordStore] = {0: base}
+        self._head = base
+        #: per-shard last-touched version (the invalidation key)
+        self.shard_versions: List[int] = [0] * self.shards
+        self._lock = threading.Lock()
+        self.metrics: Dict[str, int] = {
+            "ingests": 0,
+            "rows_appended": 0,
+            "rows_updated": 0,
+            "rows_deleted": 0,
+            "snapshot_rebuilds": 0,
+        }
+
+    # ---------------------------------------------------------- accessors
+    @property
+    def version(self) -> int:
+        return self._version
+
+    @property
+    def n(self) -> int:
+        return self._head.n
+
+    @property
+    def words(self) -> int:
+        return self._head.words
+
+    @property
+    def record_bits(self) -> int:
+        return self._head.record_bits
+
+    def shard_of(self, index: int) -> int:
+        """Stable shard mapping (interleaved groups: survives append)."""
+        return int(index) % self.shards
+
+    def shards_touched_since(self, version: int) -> Tuple[int, ...]:
+        """Shards some delta after ``version`` touched — what must
+        re-run precompute/re-plan; everything else keeps its state."""
+        return tuple(
+            s for s in range(self.shards) if self.shard_versions[s] > version
+        )
+
+    def touched_rows(self, delta: Delta, *, n_before: int) -> np.ndarray:
+        """The record indices a delta writes (appends: the new tail)."""
+        if delta.kind == "append":
+            return np.arange(n_before, n_before + delta.count, dtype=np.int64)
+        return np.asarray(delta.indices, np.int64)
+
+    # ------------------------------------------------------------- writes
+    def ingest(self, delta: Delta) -> int:
+        """Apply one delta on device; returns the new version number.
+
+        Single writer: concurrent ingests serialize on the store lock.
+        The new head is a fresh frozen ``RecordStore``; earlier
+        snapshots are untouched values.
+        """
+        with self._lock:
+            head = self._head
+            _check_targets(delta, head.n)
+            rows_np = _packed_rows(delta, head)
+            if delta.kind == "append":
+                packed = jnp.concatenate(
+                    [head.packed, jnp.asarray(rows_np)], axis=0
+                )
+                self.metrics["rows_appended"] += delta.count
+            else:
+                # lazy: db -> kernels is a layering inversion at import
+                # time (kernels.backend imports repro.db); at call time
+                # the registry is just the write-kernel chooser
+                from repro.kernels.backend import scatter_update
+
+                packed = head.packed
+                idx = np.asarray(delta.indices, np.int64)
+                for lo in range(0, idx.shape[0], _SCATTER_CHUNK):
+                    sl = slice(lo, lo + _SCATTER_CHUNK)
+                    packed = scatter_update(
+                        packed, idx[sl], rows_np[sl], backend=self.backend
+                    )
+                key = (
+                    "rows_updated" if delta.kind == "update"
+                    else "rows_deleted"
+                )
+                self.metrics[key] += delta.count
+            touched = self.touched_rows(delta, n_before=head.n)
+            self._head = RecordStore(
+                packed=packed, record_bits=head.record_bits
+            )
+            self._version += 1
+            self._log.append(delta)
+            self._heads[self._version] = self._head
+            for s in np.unique(touched % self.shards):
+                self.shard_versions[int(s)] = self._version
+            self.metrics["ingests"] += 1
+            # retention: keep the base and the last `retain` heads
+            for v in [
+                v for v in self._heads
+                if v and v <= self._version - self._retain
+            ]:
+                del self._heads[v]
+            return self._version
+
+    # ------------------------------------------------------------ readers
+    def snapshot(self, version: Optional[int] = None) -> RecordStore:
+        """The immutable store at ``version`` (default: head).
+
+        Bit-identical to :func:`rebuild`\\ (base, log[:version]) — from a
+        retained head for recent versions, by host replay for evicted
+        ones (counted in ``metrics["snapshot_rebuilds"]``)."""
+        with self._lock:
+            if version is None or version == self._version:
+                return self._head
+            if version < 0 or version > self._version:
+                raise ValueError(
+                    f"version {version} out of range [0, {self._version}]"
+                )
+            hit = self._heads.get(version)
+            if hit is not None:
+                return hit
+            log = list(self._log[:version])
+        self.metrics["snapshot_rebuilds"] += 1
+        return rebuild(self.base, log)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (
+            f"VersionedStore(v={self._version}, n={self.n}, "
+            f"shards={self.shards})"
+        )

@@ -25,9 +25,16 @@ from repro.db import packing
 __all__ = ["RecordStore", "make_synthetic_store"]
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True, eq=False)
 class RecordStore:
-    """``packed``: [n, W] uint32; ``record_bits``: true record width in bits."""
+    """``packed``: [n, W] uint32; ``record_bits``: true record width in bits.
+
+    Frozen: a store is an immutable value. Mutation happens one layer up —
+    :class:`repro.db.live.VersionedStore` layers append/update/delete deltas
+    over a base store and hands out frozen snapshots, which may safely share
+    the packed buffer because nothing can write through this class (jnp
+    arrays are immutable and the dataclass rejects attribute assignment).
+    """
 
     packed: jnp.ndarray
     record_bits: int

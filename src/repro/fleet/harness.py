@@ -41,7 +41,14 @@ __all__ = ["FleetScenario", "FleetReport", "FleetHarness", "run_scenario"]
 
 @dataclasses.dataclass(frozen=True)
 class FleetScenario:
-    """One named run: an arrival process, a duration, a fault script."""
+    """One named run: an arrival process, a duration, a fault script —
+    and, for write-heavy scenarios (DESIGN.md §13), a deterministic
+    delta schedule: every ``ingest_every_s`` the harness enqueues one
+    :func:`~repro.data.pipeline.pir_delta_batch` step (``ingest_appends``
+    appends / ``ingest_updates`` updates / ``ingest_deletes``
+    tombstones) through the frontend's idle-slot ingest path. Requires
+    the pipeline to serve a live
+    :class:`~repro.db.live.VersionedStore`."""
 
     name: str
     arrivals: Any  # PoissonArrivals | BurstyArrivals | DiurnalArrivals
@@ -50,6 +57,10 @@ class FleetScenario:
     heartbeat_timeout_s: float = 0.1
     sample_every: int = 32  # gauge-sampling cadence, in arrivals
     seed: int = 0
+    ingest_every_s: float = 0.0  # 0 = read-only scenario
+    ingest_appends: int = 0
+    ingest_updates: int = 0
+    ingest_deletes: int = 0
 
     def __post_init__(self):
         if self.duration_s <= 0:
@@ -60,6 +71,17 @@ class FleetScenario:
             )
         if self.sample_every < 1:
             raise ValueError(f"need sample_every >= 1, got {self.sample_every}")
+        if self.ingest_every_s < 0:
+            raise ValueError(
+                f"need ingest_every_s >= 0, got {self.ingest_every_s}"
+            )
+        if self.ingest_every_s > 0 and not (
+            self.ingest_appends or self.ingest_updates or self.ingest_deletes
+        ):
+            raise ValueError(
+                "write-heavy scenario needs at least one of ingest_appends/"
+                "ingest_updates/ingest_deletes > 0"
+            )
 
 
 @dataclasses.dataclass
@@ -99,6 +121,14 @@ class FleetHarness:
         self.scenario = scenario
         self.collector = collector or SLOCollector()
         pipe = frontend.pipeline
+        if scenario.ingest_every_s > 0 and pipe.live is None:
+            raise ValueError(
+                f"scenario {scenario.name!r} schedules write traffic but "
+                "the pipeline serves a frozen store; construct it over a "
+                "VersionedStore"
+            )
+        self._next_ingest_s = scenario.ingest_every_s
+        self._ingest_steps = 0
         self.injector: Optional[FaultInjector] = None
         if scenario.faults:
             monitor = HeartbeatMonitor(
@@ -113,6 +143,30 @@ class FleetHarness:
     def _tick(self, now_s: float) -> None:
         if self.injector is not None:
             self.injector.tick(now_s)
+        self._maybe_ingest(now_s)
+
+    def _maybe_ingest(self, now_s: float) -> None:
+        """Enqueue the next scheduled delta batch once its time arrives.
+        Deterministic in (seed, step) like the arrival schedule, so a
+        replayed scenario applies the identical write stream."""
+        sc = self.scenario
+        if not sc.ingest_every_s or now_s < self._next_ingest_s:
+            return
+        from repro.data.pipeline import pir_delta_batch
+
+        live = self.frontend.pipeline.live
+        for delta in pir_delta_batch(
+            live.n,
+            -(-live.record_bits // 8),
+            appends=sc.ingest_appends,
+            updates=sc.ingest_updates,
+            deletes=sc.ingest_deletes,
+            seed=sc.seed + 7,
+            step=self._ingest_steps,
+        ):
+            self.frontend.ingest(delta)
+        self._ingest_steps += 1
+        self._next_ingest_s += sc.ingest_every_s
 
     def _done_callback(self, scheduled_abs: float, clock):
         col = self.collector

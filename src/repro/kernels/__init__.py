@@ -18,6 +18,7 @@ from repro.kernels.backend import (
     load_autotune,
     register_backend,
     registered_backends,
+    scatter_update,
 )
 from repro.kernels.flash_attention import flash_attention_fwd
 from repro.kernels.fused import (
@@ -53,4 +54,5 @@ __all__ = [
     "ref",
     "register_backend",
     "registered_backends",
+    "scatter_update",
 ]

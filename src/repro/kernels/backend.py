@@ -100,6 +100,7 @@ __all__ = [
     "TuneCell",
     "KernelPlanner",
     "shard_answer_fn",
+    "scatter_update",
 ]
 
 
@@ -141,6 +142,15 @@ class ExecutionPlan:
     run: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = dataclasses.field(
         default=None, compare=False, repr=False
     )
+    # the jitted raw executor ``(operand, payload) -> [B, W]`` behind
+    # ``run`` (same nullability). ``run`` resolves the operand from the
+    # planner's *current* store at call time — which is what lets a plan
+    # survive a same-shape store swap (DESIGN.md §13) — while the serve
+    # layer passes an explicit operand here to answer against a batch's
+    # *pinned* snapshot even after later deltas landed.
+    kernel: Optional[
+        Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+    ] = dataclasses.field(default=None, compare=False, repr=False)
 
     @property
     def family(self) -> str:
@@ -149,13 +159,20 @@ class ExecutionPlan:
             return "sparse"
         return self.path
 
-    def __call__(self, payload: jnp.ndarray) -> jnp.ndarray:
+    def __call__(
+        self, payload: jnp.ndarray, operand: Optional[jnp.ndarray] = None
+    ) -> jnp.ndarray:
         if self.run is None:
             raise RuntimeError(
                 "this ExecutionPlan carries the decision only (mesh plans "
                 "and the direct family); the sharded serve layer owns the "
                 "executor"
             )
+        if operand is not None:
+            # snapshot-pinned execution: answer against the caller's
+            # operand (a pinned store version's packed words / planes),
+            # not whatever the planner's store points at right now
+            return self.kernel(operand, payload)
         return self.run(payload)
 
     def describe(self) -> str:
@@ -545,6 +562,18 @@ class KernelPlanner:
         self._plans: Dict[Tuple, ExecutionPlan] = {}
         self._pending: Dict[Key, TuneCell] = {}
         self._lock = threading.Lock()
+        #: observability for the incremental-invalidation contract
+        #: (DESIGN.md §13): how many cached plans a store swap kept vs
+        #: dropped, and how much precompute (bitplane) work re-ran —
+        #: tests assert a small delta touches only its own rows here.
+        self.metrics: Dict[str, int] = {
+            "rebinds": 0,
+            "plans_built": 0,
+            "plans_kept": 0,
+            "plans_dropped": 0,
+            "precompute_full_builds": 0,
+            "precompute_rows_refreshed": 0,
+        }
 
     # ------------------------------------------------------------- helpers
     @property
@@ -554,6 +583,7 @@ class KernelPlanner:
     def planes(self) -> jnp.ndarray:
         if self._planes is None:
             self._planes = self.store.bitplanes()
+            self.metrics["precompute_full_builds"] += 1
         return self._planes
 
     def _table_key(
@@ -590,15 +620,35 @@ class KernelPlanner:
         )
 
     # ------------------------------------------------------------ executors
+    def _operand(self, path: str) -> jnp.ndarray:
+        """The kernel operand for a path, from the *current* store — read
+        per call, never baked into a jit trace, so a same-shape store
+        swap (:meth:`rebind`) flows into every cached plan for free."""
+        return self.planes() if path == "parity" else self.store.packed
+
+    def _build_kernel(
+        self, path: str, impl: str, m_budget: Optional[int],
+        interpret: bool, blocks: Dict[str, Any],
+    ) -> Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]:
+        """Jitted raw executor ``(operand, payload)`` for a resolved
+        (path, impl). The operand stays an *argument* (jit retraces on
+        shape change only), which is what makes plans swap- and
+        snapshot-safe."""
+        return jax.jit(_path_answer_fn(path, impl, m_budget, interpret,
+                                       blocks))
+
     def _build_run(
         self, path: str, impl: str, m_budget: Optional[int],
         interpret: bool, blocks: Dict[str, Any],
+        kernel: Optional[Callable] = None,
     ) -> Callable[[jnp.ndarray], jnp.ndarray]:
         """Single-host executor for a resolved (path, impl): the shared
-        path→kernel dispatch with this store's operand bound in."""
-        fn = _path_answer_fn(path, impl, m_budget, interpret, blocks)
-        operand = self.planes() if path == "parity" else self.store.packed
-        return lambda payload: fn(operand, payload)
+        path→kernel dispatch, resolving this planner's operand at call
+        time."""
+        fn = kernel if kernel is not None else self._build_kernel(
+            path, impl, m_budget, interpret, blocks
+        )
+        return lambda payload: fn(self._operand(path), payload)
 
     # ------------------------------------------------------- the search space
     def _impl_candidates(self, impl: str) -> List[str]:
@@ -750,9 +800,9 @@ class KernelPlanner:
             us: Dict[str, float] = {}
             by_label: Dict[str, PlanCandidate] = {}
             for c in cands:
-                fn = jax.jit(self._build_run(
+                fn = self._build_run(
                     c.path, c.impl, cell.m_budget, interp, dict(c.blocks)
-                ))
+                )
                 us[c.label] = float(self._measure(fn, payload, candidate=c))
                 by_label[c.label] = c
             winner = by_label[min(us, key=us.get)]
@@ -870,12 +920,16 @@ class KernelPlanner:
         # residency (a gather, owned by the serve layer's index path) —
         # its plan is decision-only, like every mesh plan
         run = None
+        kernel = None
         if not on_mesh and path != "direct":
-            run = jax.jit(
-                self._build_run(
-                    path, chosen_impl, m_budget, interpret, blocks
-                )
+            kernel = self._build_kernel(
+                path, chosen_impl, m_budget, interpret, blocks
             )
+            run = self._build_run(
+                path, chosen_impl, m_budget, interpret, blocks,
+                kernel=kernel,
+            )
+        self.metrics["plans_built"] += 1
         plan = ExecutionPlan(
             path=path,
             impl=chosen_impl,
@@ -887,6 +941,7 @@ class KernelPlanner:
             interpret=interpret,
             source=source,
             run=run,
+            kernel=kernel,
         )
         self._plans[cache_key] = plan
         return plan
@@ -919,7 +974,64 @@ class KernelPlanner:
         autotune table survives — measurements key on shapes, not
         residency."""
         with self._lock:
+            self.metrics["plans_dropped"] += len(self._plans)
             self._plans.clear()
+
+    def rebind(
+        self,
+        store: RecordStore,
+        *,
+        touched_rows: Optional[Any] = None,
+    ) -> Dict[str, int]:
+        """Swap the planner onto a new store version (DESIGN.md §13).
+
+        A same-shape content swap with a known touched-row set is the
+        incremental-invalidation fast path: every cached
+        :class:`ExecutionPlan` is **kept** (executors resolve their
+        operand from ``self.store`` per call, so the new packed buffer
+        flows in with zero replans and zero retraces), and the
+        precompute (bitplanes) refreshes only the touched rows. A shape
+        change (append/delete changed ``n``) or an unknown touch set
+        drops plans and planes wholesale — those plans' shapes went
+        stale, not just their bytes. Autotune entries survive either
+        way: measurements key on (n, words), so a content swap keeps
+        them and a shape change misses to a *different* key instead of
+        hitting a stale one. Returns the per-call counter deltas (also
+        accumulated in :attr:`metrics`)."""
+        with self._lock:
+            self.metrics["rebinds"] += 1
+            same_shape = (
+                store.n == self.store.n
+                and store.words == self.store.words
+                and store.record_bits == self.store.record_bits
+            )
+            if same_shape and touched_rows is not None:
+                self.store = store
+                rows = jnp.asarray(touched_rows, jnp.int32)
+                refreshed = 0
+                if self._planes is not None and int(rows.shape[0]):
+                    fresh = packing.bitplanes_from_packed(
+                        jnp.take(store.packed, rows, axis=0),
+                        dtype=self._planes.dtype,
+                    )
+                    self._planes = self._planes.at[rows].set(fresh)
+                    refreshed = int(rows.shape[0])
+                kept = len(self._plans)
+                self.metrics["plans_kept"] += kept
+                self.metrics["precompute_rows_refreshed"] += refreshed
+                return {
+                    "plans_kept": kept, "plans_dropped": 0,
+                    "precompute_rows_refreshed": refreshed,
+                }
+            self.store = store
+            self._planes = None
+            dropped = len(self._plans)
+            self._plans.clear()
+            self.metrics["plans_dropped"] += dropped
+            return {
+                "plans_kept": 0, "plans_dropped": dropped,
+                "precompute_rows_refreshed": 0,
+            }
 
 
 def _path_answer_fn(
@@ -986,6 +1098,98 @@ def _path_answer_fn(
 
         return _multi
     raise ValueError(f"no kernel form for path {path!r}")
+
+
+# --------------------------------------------------------------------------
+# The write path: batched delta application (repro.db.live's ingest)
+# --------------------------------------------------------------------------
+# the pseudo-scheme the write path's autotune cells key under — ingest is
+# scheme-agnostic, but it shares the table so dumped files carry the
+# write-side decisions too
+_INGEST_SCHEME = "_ingest"
+
+
+def scatter_update(
+    db: jnp.ndarray,
+    rows: Any,
+    vals: Any,
+    *,
+    backend: str = "auto",
+    table: Optional[AutotuneTable] = None,
+    measure: Optional[Callable[..., float]] = None,
+) -> jnp.ndarray:
+    """Apply a batch of packed-row updates on device: the delta-ingest
+    write primitive behind :meth:`repro.db.live.VersionedStore.ingest`.
+
+    db: [n, W] uint32; rows: [m] int (unique — ``Delta`` dedups); vals:
+    [m, W] uint32 -> a new [n, W] buffer with ``out[rows[i]] = vals[i]``.
+
+    Kernel choice is raced through the execution-backend registry like
+    the read paths: under ``auto`` resolving to a kernel impl, the Pallas
+    scatter kernel races the jnp ``.at[].set`` oracle once per
+    (update-bucket, n, W) cell and the winner lands in the autotune table
+    (pseudo-scheme ``"_ingest"``, family ``"scatter"`` — same JSON dump,
+    same device-fingerprint trust rule). Unlike ``plan()`` this *does*
+    measure inline on a cold cell: ingest is the write path, not the
+    request path, so a one-off microbenchmark stalls no reader. The
+    update count is padded to its power-of-two bucket by duplicating the
+    last update (identical writes commute, so the dedup contract holds)
+    to keep jit retraces bounded."""
+    m = int(rows.shape[0])
+    if m == 0:
+        return db
+    impl = get_backend(backend).resolve()
+    interp = ops.on_cpu()
+    n, w = int(db.shape[0]), int(db.shape[1])
+    bucket = 1 << max(0, int(m - 1).bit_length())
+    rows_j = jnp.asarray(rows, jnp.int32)
+    vals_j = jnp.asarray(vals, jnp.uint32)
+    pad = bucket - m
+    if pad:
+        rows_j = jnp.concatenate(
+            [rows_j, jnp.broadcast_to(rows_j[-1:], (pad,))]
+        )
+        vals_j = jnp.concatenate(
+            [vals_j, jnp.broadcast_to(vals_j[-1:], (pad, w))]
+        )
+
+    from repro.kernels.scatter import scatter_rows
+
+    candidates: Dict[str, Callable] = {
+        "scatter/ref": jax.jit(ref.scatter_rows_ref),
+    }
+    if impl != "ref":
+        candidates["scatter/pallas"] = (
+            lambda d, r, v: scatter_rows(d, r, v, interpret=interp)
+        )
+        if backend != "auto":
+            # a hard backend pin skips the race entirely, like plan()
+            candidates.pop("scatter/ref")
+
+    if len(candidates) == 1:
+        return next(iter(candidates.values()))(db, rows_j, vals_j)
+
+    table = table if table is not None else autotune_table()
+    measure = measure if measure is not None else _measure_us
+    key: Key = (_INGEST_SCHEME, bucket, impl, n, w, "scatter")
+    hit = table.get(key)
+    if hit is not None and (
+        hit.get("device") not in (None, device_fingerprint())
+        or f"scatter/{hit.get('impl')}" not in candidates
+    ):
+        hit = None
+    if hit is None:
+        us = {
+            label: float(measure(fn, db, rows_j, vals_j))
+            for label, fn in candidates.items()
+        }
+        winner = min(us, key=us.get)
+        table.put(
+            key, "scatter", impl=winner.split("/", 1)[1],
+            source="measured", us=us,
+        )
+        hit = table.get(key)
+    return candidates[f"scatter/{hit['impl']}"](db, rows_j, vals_j)
 
 
 def shard_answer_fn(

@@ -12,7 +12,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["xor_fold_ref", "parity_matmul_ref", "gather_xor_ref"]
+__all__ = [
+    "xor_fold_ref",
+    "parity_matmul_ref",
+    "gather_xor_ref",
+    "scatter_rows_ref",
+]
 
 
 def xor_fold_ref(db: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
@@ -43,6 +48,19 @@ def gather_xor_ref(db: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
     rows = jnp.take(db, jnp.maximum(idx, 0), axis=0)  # [q, m, W]
     rows = jnp.where(idx[..., None] >= 0, rows, jnp.uint32(0))
     return jax.lax.reduce(rows, jnp.uint32(0), jax.lax.bitwise_xor, (1,))
+
+
+def scatter_rows_ref(db: jnp.ndarray, rows: jnp.ndarray,
+                     vals: jnp.ndarray) -> jnp.ndarray:
+    """Row scatter (the delta-ingest write path): out[rows[i]] = vals[i].
+
+    db: [n, W] uint32; rows: [m] int; vals: [m, W] uint32 -> [n, W].
+    Duplicate-row ordering is whatever XLA's scatter does — callers
+    (``repro.db.live.Delta``) dedup rows before reaching any impl, so the
+    Pallas kernel's last-write-wins and this oracle agree everywhere the
+    contract admits.
+    """
+    return db.at[jnp.asarray(rows, jnp.int32)].set(vals.astype(jnp.uint32))
 
 
 def flash_attention_ref(q, k, v, causal=True, window=None):

@@ -7,6 +7,10 @@
     PYTHONPATH=src python -m repro.launch.serve --frontend async \
         --ingest-workers 4 --cache-entries 4096 --submitters 8
 
+    # serve a LIVE store under concurrent appends (DESIGN.md §13):
+    PYTHONPATH=src python -m repro.launch.serve --frontend async \
+        --ingest-every 32 --ingest-rows 64
+
 Prints per-batch latency, throughput, the (ε, δ) price per query, and the
 engine's cumulative cost metrics (records touched vs the Table-1 model).
 The async path submits from ``--submitters`` concurrent threads through
@@ -24,7 +28,8 @@ import numpy as np
 
 from repro.core import SCHEMES, make_scheme
 from repro.core.accounting import PrivacyBudget
-from repro.db import make_synthetic_store
+from repro.data.pipeline import pir_delta_batch
+from repro.db import VersionedStore, make_synthetic_store
 from repro.kernels import registered_backends
 from repro.serve import (
     AsyncFrontend,
@@ -59,6 +64,13 @@ def build_args() -> argparse.ArgumentParser:
                     help="concurrent submitter threads (async frontend)")
     ap.add_argument("--cache-entries", type=int, default=0,
                     help="cross-batch cache slots; 0 disables the cache")
+    ap.add_argument("--ingest-every", type=int, default=0,
+                    help="serve a live VersionedStore and append one "
+                         "delta every N queries (sync: per N served; "
+                         "async: per N submitted, through the flush "
+                         "worker's idle slot); 0 = frozen store")
+    ap.add_argument("--ingest-rows", type=int, default=64,
+                    help="records appended per ingest delta")
     ap.add_argument("--backend", default="auto",
                     choices=sorted(registered_backends()),
                     help="execution backend (repro.kernels.backend "
@@ -89,8 +101,14 @@ def make_engine(args) -> ServingPipeline:
         QueryCache(scheme, store.n, max_entries=args.cache_entries)
         if args.cache_entries > 0 else None
     )
+    # a live store serves through its frozen head; the sharded backend
+    # below is handed the base snapshot (serve never sees the writer)
+    served = (
+        VersionedStore(store, backend=args.backend)
+        if args.ingest_every > 0 else store
+    )
     return ServingPipeline(
-        store, scheme,
+        served, scheme,
         scheduler=BatchScheduler(
             max_batch=args.batch, max_wait_s=args.max_wait_ms / 1e3
         ),
@@ -106,11 +124,29 @@ def make_engine(args) -> ServingPipeline:
     )
 
 
+def _feed_delta(args, engine: ServingPipeline, step: int, *,
+                direct: bool, frontend=None) -> None:
+    """One append delta of write traffic against the live store
+    (deterministic in step, like the query stream)."""
+    for delta in pir_delta_batch(
+        engine.store.n, args.record_bytes,
+        appends=args.ingest_rows, seed=2, step=step,
+    ):
+        if direct:
+            engine.ingest(delta)
+        else:
+            frontend.ingest(delta)
+
+
 def run_sync(args, engine: ServingPipeline) -> None:
     rng = np.random.default_rng(1)
     served = 0
+    ingest_step = 0
     t_start = time.perf_counter()
     while served < args.queries:
+        if args.ingest_every and served >= ingest_step * args.ingest_every:
+            _feed_delta(args, engine, ingest_step, direct=True)
+            ingest_step += 1
         nq = min(args.batch, args.queries - served)
         idx = rng.integers(0, args.n, size=nq)
         for i, q in enumerate(idx):
@@ -128,6 +164,10 @@ def run_sync(args, engine: ServingPipeline) -> None:
         print(f"batch of {nq:4d} served in {dt*1e3:7.1f} ms "
               f"({nq/dt:8.0f} qps)")
     wall = time.perf_counter() - t_start
+    if args.ingest_every:
+        print(f"live store: v{engine.store_version}, n={engine.store.n} "
+              f"({engine.metrics['records_ingested']} records ingested "
+              f"mid-traffic)")
     print(f"\n{served} queries in {wall:.2f}s; engine metrics: {engine.metrics}")
 
 
@@ -145,6 +185,12 @@ def run_async(args, engine: ServingPipeline) -> None:
 
         def feed(s: int) -> None:
             for j, q in enumerate(indices[s]):
+                # submitter 0 doubles as the writer: one append delta per
+                # --ingest-every submits, applied in the flush worker's
+                # idle slot (appends only, so every queried index keeps
+                # its bytes and the futures below verify exact)
+                if args.ingest_every and s == 0 and j % args.ingest_every == 0:
+                    _feed_delta(args, engine, j, direct=False, frontend=fe)
                 futures[s].append(
                     fe.submit(f"client-{s}-{j % 32}", int(q))
                 )
@@ -173,6 +219,9 @@ def run_async(args, engine: ServingPipeline) -> None:
         print(f"{served} served (+{refused} budget-refused) from "
               f"{args.submitters} concurrent submitters in {wall:.2f}s "
               f"({served/wall:8.0f} qps end-to-end, futures verified exact)")
+        if args.ingest_every:
+            print(f"live store: v{engine.store_version}, n={engine.store.n} "
+                  f"({fe.metrics['ingested']} idle-slot ingests)")
         print(f"frontend metrics: {fe.metrics}")
 
 

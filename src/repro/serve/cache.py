@@ -67,9 +67,23 @@ enough" counts are wrong counts; tests/test_serve_cache.py hammers for
 exactness). Reading ``metrics`` without the lock stays safe: ints are
 replaced, never mutated in place.
 
-The cache assumes the record store is immutable for its lifetime (the
-synthetic and CT stores are); call :meth:`QueryCache.invalidate` if the
-backing records ever change.
+**Store versions.** The backing store may be a
+:class:`~repro.db.live.VersionedStore` absorbing deltas under traffic
+(DESIGN.md §13). Every L1 entry is stamped with the store version its
+answer was reconstructed against, the cache tracks the serving version
+plus a per-index last-written map, and a hit whose entry predates the
+last write to that index is *structurally* impossible: the pipeline's
+``advance_version`` evicts touched entries at ingest time, and ``lookup``
+independently refuses any entry older than the index's last write — so
+even an entry inserted by an in-flight batch that pinned the pre-ingest
+snapshot (double-buffering makes that ordering real) can never serve
+stale bytes. Untouched indices keep their entries across ingests: a
+delta that never wrote index ``i`` cannot change ``i``'s answer, so
+those hits stay bit-exact and still spend (ε, δ) at admission like
+every hit (tests/test_statistical_privacy.py checks across an ingest
+boundary). A *shape* change (append grew ``n``) re-signs the cache and
+drops the L2 pre pool and refusal memo — pre randomness is built for
+[B, n] and the per-query price moves with ``n``.
 """
 
 from __future__ import annotations
@@ -124,6 +138,9 @@ class CacheEntry:
     query_cols: Optional[np.ndarray]
     answer: np.ndarray
     hits: int = 0
+    #: store version the answer was reconstructed against; ``lookup``
+    #: refuses the entry once the index has a later write
+    version: int = 0
 
 
 class QueryCache:
@@ -153,6 +170,10 @@ class QueryCache:
         self.max_query_vector_bytes = max_query_vector_bytes
         self.max_refusal_entries = max_refusal_entries
         self._entries: "OrderedDict[Tuple[str, int], CacheEntry]" = OrderedDict()
+        #: serving store version (0 for frozen stores) and the
+        #: per-index last-written version — the structural staleness guard
+        self.version = 0
+        self._written: Dict[int, int] = {}
         self._pre: Dict[int, Deque[Any]] = {}
         # client -> the budget-state token its refusal was computed from
         self._refused: "OrderedDict[str, Tuple]" = OrderedDict()
@@ -163,6 +184,7 @@ class QueryCache:
             "hits": 0, "misses": 0, "insertions": 0, "evictions": 0,
             "pre_filled": 0, "pre_used": 0, "pre_dropped": 0,
             "invalidations": 0, "refusals_noted": 0, "refusal_hits": 0,
+            "version_advances": 0, "stale_evictions": 0,
         }
 
     def __len__(self) -> int:
@@ -179,6 +201,16 @@ class QueryCache:
             if entry is None:
                 self.metrics["misses"] += 1
                 return None
+            if self._written.get(int(index), -1) > entry.version:
+                # the index was written after this answer was computed:
+                # structurally refuse the stale entry (advance_version
+                # normally evicted it already; this guard also catches
+                # entries inserted by in-flight batches that pinned the
+                # pre-ingest snapshot)
+                del self._entries[key]
+                self.metrics["stale_evictions"] += 1
+                self.metrics["misses"] += 1
+                return None
             self._entries.move_to_end(key)  # LRU touch
             entry.hits += 1
             self.metrics["hits"] += 1
@@ -191,7 +223,12 @@ class QueryCache:
         *,
         answer: np.ndarray,
         query_cols: Optional[np.ndarray] = None,
+        version: Optional[int] = None,
     ) -> None:
+        """``version`` stamps the store version the answer was computed
+        against (the executing batch's *pinned* snapshot version — which
+        may lag the serving version mid-ingest); default: the cache's
+        current version."""
         if self.max_entries == 0:
             return
         if (
@@ -202,7 +239,8 @@ class QueryCache:
         key = (client, int(index))
         with self._mu:
             self._entries[key] = CacheEntry(
-                query_cols=query_cols, answer=np.asarray(answer)
+                query_cols=query_cols, answer=np.asarray(answer),
+                version=self.version if version is None else int(version),
             )
             self._entries.move_to_end(key)
             self.metrics["insertions"] += 1
@@ -273,6 +311,38 @@ class QueryCache:
             return len(self._pre.get(int(bucket), ()))
 
     # ------------------------------------------------------------- control
+    def advance_version(
+        self,
+        version: int,
+        touched_indices=(),
+        *,
+        signature: Optional[Tuple] = None,
+    ) -> int:
+        """Move the cache to store ``version`` after an ingest
+        (DESIGN.md §13): record the touched indices as written at this
+        version and evict their L1 entries — everything else survives,
+        because a delta that never wrote an index cannot change its
+        answer. ``signature`` (the new ``scheme_signature``) re-signs the
+        cache when the store *shape* changed (append grew ``n``): the L2
+        pre pool and refusal memo drop too, since pre randomness is
+        shaped [B, n] and the per-query price moves with ``n``. Returns
+        how many entries were evicted."""
+        with self._mu:
+            self.version = int(version)
+            touched = {int(i) for i in np.asarray(touched_indices).ravel()}
+            for i in touched:
+                self._written[i] = int(version)
+            stale = [k for k in self._entries if k[1] in touched]
+            for k in stale:
+                del self._entries[k]
+            self.metrics["stale_evictions"] += len(stale)
+            self.metrics["version_advances"] += 1
+            if signature is not None and signature != self.signature:
+                self.signature = signature
+                self._pre.clear()
+                self._refused.clear()
+            return len(stale)
+
     def invalidate(self) -> None:
         """Drop everything (backing store changed, budgets were reset, the
         scheme degraded under replica loss, or privacy review asked)."""
@@ -280,4 +350,5 @@ class QueryCache:
             self._entries.clear()
             self._pre.clear()
             self._refused.clear()
+            self._written.clear()
             self.metrics["invalidations"] += 1

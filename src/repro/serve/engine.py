@@ -51,6 +51,7 @@ from repro.core.protocol import (
     multi_bucket,
 )
 from repro.db import packing
+from repro.db.live import Delta, VersionedStore
 from repro.db.store import RecordStore
 from repro.dist.fault import (
     RemeshPlan,
@@ -87,6 +88,13 @@ class PlannedBatch:
     # per-miss-request [k_r] slots holding cached answers (None = fresh)
     miss_lists: Optional[List[List[int]]] = None
     partial: Optional[List[List[Optional[np.ndarray]]]] = None
+    # snapshot pinning (DESIGN.md §13): the frozen store this batch
+    # answers against and its version. Writes landing mid-batch produce
+    # a *new* head; this batch keeps answering — and memoizing, under
+    # this version — against the store it was planned on, so an answer
+    # can never tear across an ingest.
+    store: Optional[RecordStore] = None
+    store_version: int = 0
 
 
 class ServingPipeline:
@@ -104,7 +112,18 @@ class ServingPipeline:
         simulate_latency: Optional[Callable[[int], float]] = None,
         seed: int = 0,
     ):
+        # `store` may be a frozen RecordStore or a live VersionedStore
+        # (duck-typed: anything with snapshot()/ingest()). Live stores
+        # serve through their current frozen head; `self.store` is
+        # ALWAYS a frozen snapshot — the rest of the pipeline never
+        # learns whether writes exist.
+        self.live: Optional[VersionedStore] = None
+        if hasattr(store, "snapshot") and hasattr(store, "ingest"):
+            self.live = store
+            store = store.snapshot()
         self.store = store
+        self.store_version = self.live.version if self.live is not None else 0
+        self._pending_deltas: List[Delta] = []
         # `scheme` may be a staged SchemeProtocol instance (incl. Anonymized
         # wrappers) or the back-compat Scheme facade; `self.scheme` keeps
         # whatever the caller handed over, `self.staged` is the normalized
@@ -163,6 +182,7 @@ class ServingPipeline:
             "epsilon_per_query": self._eps_per_query,
             "delta_per_query": self._delta_per_query,
             "unserviceable": 0,
+            "ingests": 0, "records_ingested": 0,
         }
 
     # ------------------------------------------------------------ clients
@@ -360,6 +380,11 @@ class ServingPipeline:
             return self._plan_requests_multi(batch)
         results: List[Optional[Tuple[Request, np.ndarray]]] = [None] * len(batch)
         with self._phase_lock:
+            # pin the batch's snapshot under the lock: everything below —
+            # routing shape (n), execution, reconstruction, cache stamps —
+            # reads the pinned frozen store, never the (possibly newer)
+            # live head
+            store, ver = self.store, self.store_version
             if self.cache is not None:
                 misses, miss_pos = [], []
                 for i, r in enumerate(batch):
@@ -396,13 +421,16 @@ class ServingPipeline:
                     self.cache.take_pre(padded)
                     if self.cache is not None else None
                 )
-            routed = self.router.plan(sub, self.store.n, q_idx, pre=pre)
+            routed = self.router.plan(sub, store.n, q_idx, pre=pre)
+            if self.live is not None:
+                routed.store_version = ver
             exec_plan = self.backend.prepare(routed, scheme=self.staged)
             plan_s = clock() - t0
         return PlannedBatch(
             batch=list(batch), results=results, misses=misses,
             miss_pos=miss_pos, padded=padded, routed=routed,
             exec_plan=exec_plan, plan_s=plan_s,
+            store=store, store_version=ver,
         )
 
     @staticmethod
@@ -432,6 +460,7 @@ class ServingPipeline:
         miss_lists: List[List[int]] = []
         partial: List[List[Optional[np.ndarray]]] = []
         with self._phase_lock:
+            store, ver = self.store, self.store_version  # pin (see above)
             for i, r in enumerate(batch):
                 idxs = r.index_list
                 rows: List[Optional[np.ndarray]] = [None] * len(idxs)
@@ -469,8 +498,10 @@ class ServingPipeline:
                     if self.cache is not None else None
                 )
             routed = self.router.plan_many(
-                sub, self.store.n, miss_lists, pre=pre
+                sub, store.n, miss_lists, pre=pre
             )
+            if self.live is not None:
+                routed.queries.store_version = ver  # flat wire carries it
             exec_plan = self.backend.prepare(routed, scheme=self.staged)
             plan_s = clock() - t0
         return PlannedBatch(
@@ -478,6 +509,7 @@ class ServingPipeline:
             miss_pos=miss_pos, padded=padded, routed=routed,
             exec_plan=exec_plan, plan_s=plan_s,
             miss_lists=miss_lists, partial=partial,
+            store=store, store_version=ver,
         )
 
     def _execute_planned_multi(
@@ -497,10 +529,12 @@ class ServingPipeline:
         if planned.routed is not None:
             misses = planned.misses
             routed = planned.routed
+            pinned = planned.store if planned.store is not None else self.store
             clock = self.scheduler.clock
             t1 = clock()
             responses = self.backend.answer_batch(
-                routed, plan=planned.exec_plan, scheme=self.staged
+                routed, plan=planned.exec_plan, scheme=self.staged,
+                store=planned.store,
             )
             # reconstruct the whole padded [B, W] batch in one shot —
             # MultiQueries delegates its wire view, so the scheme's flat
@@ -509,7 +543,7 @@ class ServingPipeline:
             flat_out.block_until_ready()
             dt = planned.plan_s + (clock() - t1)
 
-            nbytes = -(-self.store.record_bits // 8)
+            nbytes = -(-pinned.record_bits // 8)
             raw_all = packing.unpack_bytes_np(np.asarray(flat_out), nbytes)
             k_max = routed.k_max
             raw = np.concatenate([
@@ -529,7 +563,7 @@ class ServingPipeline:
                 self.scheduler.observe_service(planned.padded, dt)
                 self.metrics["batches"] += 1
                 self.metrics["padded"] += planned.padded - flat_total
-                costs = self.staged.costs(self.store.n)
+                costs = self.staged.costs(pinned.n)
                 self.metrics["records_touched"] += (
                     costs["C_p"] / 2.0 * flat_total
                 )
@@ -556,6 +590,7 @@ class ServingPipeline:
                                     None if cols is None
                                     else cols[:, flat_col]
                                 ),
+                                version=planned.store_version,
                             )
                         f += 1
                     results[planned.miss_pos[j]] = (r, self._assemble(r, rows))
@@ -577,6 +612,7 @@ class ServingPipeline:
             misses, miss_pos = planned.misses, planned.miss_pos
             b = len(misses)
             routed = planned.routed
+            pinned = planned.store if planned.store is not None else self.store
             # service time = this batch's own plan + execute wall time;
             # timing from execute's start (not the plan's t0) keeps the
             # scheduler's EMA honest when the double buffer queues this
@@ -587,13 +623,14 @@ class ServingPipeline:
             clock = self.scheduler.clock
             t1 = clock()
             responses = self.backend.answer_batch(
-                routed, plan=planned.exec_plan, scheme=self.staged
+                routed, plan=planned.exec_plan, scheme=self.staged,
+                store=planned.store,
             )
             out = self.router.finalize(routed, responses)
             out.block_until_ready()
             dt = planned.plan_s + (clock() - t1)
 
-            nbytes = -(-self.store.record_bits // 8)
+            nbytes = -(-pinned.record_bits // 8)
             raw = packing.unpack_bytes_np(np.asarray(out[:b]), nbytes)
             cols = None
             if self.cache is not None:
@@ -609,7 +646,7 @@ class ServingPipeline:
                 self.scheduler.observe_service(planned.padded, dt)
                 self.metrics["batches"] += 1
                 self.metrics["padded"] += planned.padded - b
-                costs = self.staged.costs(self.store.n)
+                costs = self.staged.costs(pinned.n)
                 self.metrics["records_touched"] += costs["C_p"] / 2.0 * b
                 self.metrics["blocks_sent"] += costs["C_m"] * b
                 for j, r in enumerate(misses):
@@ -619,6 +656,7 @@ class ServingPipeline:
                         self.cache.insert(
                             r.client, r.index, answer=answer,
                             query_cols=None if cols is None else cols[:, j],
+                            version=planned.store_version,
                         )
         return results  # type: ignore[return-value]
 
@@ -679,6 +717,92 @@ class ServingPipeline:
         cells planned from the analytic prior get their measured winner
         during lulls, never on a request thread. Returns cells tuned."""
         return self.backend.autotune_step(max_cells)
+
+    # ------------------------------------------------------------- ingest
+    def ingest(self, delta: Delta) -> int:
+        """Apply one delta to the live store and roll the serve path
+        forward; returns the new store version (DESIGN.md §13).
+
+        Under the phase lock, in order: (1) the
+        :class:`~repro.db.live.VersionedStore` applies the delta on
+        device and becomes a new frozen head; (2) the execution backend
+        rebinds — same-shape deltas keep every cached
+        :class:`~repro.kernels.backend.ExecutionPlan` and refresh only
+        the touched bitplane rows, appends re-plan (the shape changed, so
+        every plan is for the wrong store); (3) the cache advances its
+        version — entries for touched indices evict, untouched indices
+        keep their lines, and the per-index last-written map makes a
+        stale hit structurally impossible even for entries inserted
+        later by in-flight batches pinned to older snapshots; (4)
+        admission re-prices (ε, δ) when ``n`` changed. Batches planned
+        before this call still answer bit-identically — they hold their
+        pinned snapshot.
+        """
+        if self.live is None:
+            raise RuntimeError(
+                "pipeline serves a frozen RecordStore; construct it over "
+                "a VersionedStore to ingest deltas"
+            )
+        with self._phase_lock:
+            n_before = self.live.n
+            touched = self.live.touched_rows(delta, n_before=n_before)
+            ver = self.live.ingest(delta)
+            snap = self.live.snapshot()
+            same_shape = (
+                snap.n == self.store.n and snap.words == self.store.words
+            )
+            self.backend.swap_store(
+                snap, touched_rows=touched if same_shape else None
+            )
+            self.store = snap
+            self.store_version = ver
+            if self.cache is not None:
+                self.cache.advance_version(
+                    ver, [int(i) for i in touched],
+                    signature=scheme_signature(self.scheme, snap.n),
+                )
+            if not same_shape and self._serviceable:
+                # append grew n: the admission price is a function of n
+                self._eps_per_query, self._delta_per_query = (
+                    self.staged.privacy(snap.n)
+                )
+                self.metrics["epsilon_per_query"] = self._eps_per_query
+                self.metrics["delta_per_query"] = self._delta_per_query
+            self.metrics["ingests"] += 1
+            self.metrics["records_ingested"] += delta.count
+            return ver
+
+    def queue_delta(self, delta: Delta) -> None:
+        """Enqueue a delta for the flush worker's idle slot: the async
+        frontend applies pending deltas via :meth:`ingest_step` next to
+        cache prefill and autotune, so writes ride the same idle
+        machinery as the other background jobs and never preempt a
+        cut batch."""
+        if self.live is None:
+            raise RuntimeError(
+                "pipeline serves a frozen RecordStore; construct it over "
+                "a VersionedStore to ingest deltas"
+            )
+        with self._phase_lock:
+            self._pending_deltas.append(delta)
+
+    @property
+    def pending_deltas(self) -> int:
+        """Deltas queued but not yet applied."""
+        return len(self._pending_deltas)
+
+    def ingest_step(self, max_deltas: int = 1) -> int:
+        """Apply up to ``max_deltas`` queued deltas (the idle-slot job).
+        Returns how many were applied."""
+        done = 0
+        while done < max_deltas:
+            with self._phase_lock:
+                if not self._pending_deltas:
+                    break
+                delta = self._pending_deltas.pop(0)
+            self.ingest(delta)
+            done += 1
+        return done
 
     def step(self) -> Dict[str, np.ndarray]:
         """Serve at most one scheduled batch (≤ max_batch; the rest of the

@@ -46,14 +46,21 @@ front of it (DESIGN.md §Async front):
   following batch can miss the memo and go out as a fresh (fully
   priced, fresh-randomness) query — answers and (ε, δ) accounting are
   unaffected, the hit just materializes one batch later.
-* **Idle prefill + idle autotune**: between flushes the worker banks
-  precomputed batch randomness into the cross-batch cache
+* **Idle ingest + idle prefill + idle autotune**: between flushes the
+  worker first applies one queued store delta
+  (:meth:`~repro.serve.engine.ServingPipeline.ingest_step` — writes
+  submitted through :meth:`ingest` ride the same idle machinery as the
+  other background jobs, and because idle jobs only run with no batch
+  in flight, a delta can never land under a batch mid-execution), then
+  banks precomputed batch randomness into the cross-batch cache
   (:meth:`~repro.serve.engine.ServingPipeline.prefill_cache`), moving
   query generation off the serve critical path — and runs one step of
   the execution backend's autotune search
   (:meth:`~repro.serve.engine.ServingPipeline.autotune_step`) per lull,
   so plan cells served cold from the analytic prior acquire their
   measured winner without a request thread ever microbenchmarking.
+  Ingest comes first in the idle sequence: freshness is client-visible,
+  banked randomness is not.
 * **Graceful drain**: :meth:`drain` forces the backlog through (partial
   batches included) and blocks until every accepted future is resolved;
   ``close(drain=True)`` (also the context-manager exit) drains before
@@ -133,7 +140,8 @@ class AsyncFrontend:
         self._stop = False
         self._threads: List[threading.Thread] = []
         self._counters = {"accepted": 0, "shed": 0, "served": 0,
-                          "failed": 0, "prefilled": 0, "autotuned": 0}
+                          "failed": 0, "prefilled": 0, "autotuned": 0,
+                          "ingested": 0}
 
     # ----------------------------------------------------------- lifecycle
     def start(self) -> "AsyncFrontend":
@@ -242,6 +250,23 @@ class AsyncFrontend:
 
         return await asyncio.wrap_future(self.submit_many(client, indices))
 
+    def ingest(self, delta) -> None:
+        """Queue one store :class:`~repro.db.live.Delta` for the flush
+        worker's idle slot (DESIGN.md §13). Thread-safe, like submit.
+
+        The delta applies between batches — never under one — because the
+        idle jobs only run with no batch in flight; queries already
+        pinned to the pre-ingest snapshot keep answering against it.
+        Requires the pipeline to serve a live
+        :class:`~repro.db.live.VersionedStore`."""
+        if self._closed:
+            raise RuntimeError("frontend is closed to new ingests")
+        if not self._threads:
+            self.start()
+        self.pipeline.queue_delta(delta)
+        with self._cv:
+            self._cv.notify_all()
+
     # --------------------------------------------------------------- drain
     def drain(self, timeout: Optional[float] = None) -> bool:
         """Force the backlog through (partial batches included) and block
@@ -338,6 +363,7 @@ class AsyncFrontend:
             and not len(self.pipeline.scheduler)
             and not self._pending
             and self._resolving == 0
+            and self.pipeline.pending_deltas == 0
         )
 
     # items admitted per lock acquisition: big enough to keep lock/notify
@@ -476,11 +502,22 @@ class AsyncFrontend:
                 self._finish(*inflight)
                 inflight = None
                 continue
-            # truly idle (nothing queued, nothing being admitted): bank
-            # precomputed randomness, then sleep until the deadline or the
-            # next submit notification. With traffic in flight, a cut is
-            # imminent — starting a prefill then would stall it behind a
-            # burst of GIL-bound dispatches.
+            # truly idle (nothing queued, nothing being admitted): apply
+            # one queued store delta, then bank precomputed randomness,
+            # then sleep until the deadline or the next submit
+            # notification. With traffic in flight, a cut is imminent —
+            # starting an idle job then would stall it behind a burst of
+            # GIL-bound dispatches. Ingest runs first: freshness is
+            # client-visible, banked randomness is not — and with no
+            # batch in flight here, a delta can never land mid-batch.
+            if idle and self.pipeline.pending_deltas:
+                if self.pipeline.ingest_step():
+                    with self._cv:
+                        self._counters["ingested"] += 1
+                        if self.pipeline.pending_deltas == 0:
+                            # drain() also waits on the delta backlog
+                            self._cv.notify_all()
+                    continue
             if self.prefill and self.pipeline.cache is not None and idle:
                 if self.pipeline.prefill_cache():
                     with self._cv:

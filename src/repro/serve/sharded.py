@@ -151,6 +151,10 @@ class ShardedBackend:
         # per-mesh sharded copies of the db/planes + jitted shard_map fns
         self._mesh_db: Dict[int, dict] = {}
         self._mesh_fns: Dict[tuple, Callable] = {}
+        # (id(store), planes) memo for snapshot-pinned parity answers:
+        # a batch that pinned a pre-ingest snapshot may still need that
+        # version's bitplanes after the planner moved on
+        self._pinned_planes: Optional[Tuple[int, jnp.ndarray]] = None
         self.path_counts = {"fold": 0, "parity": 0, "sparse": 0, "direct": 0}
 
     @property
@@ -172,6 +176,27 @@ class ShardedBackend:
             raise ValueError("no autotune_file configured and no path given")
         dump_autotune(path, self.planner.table)
         return path
+
+    # ---------------------------------------------------------- store swaps
+    def swap_store(
+        self, store: RecordStore, *, touched_rows=None
+    ) -> Dict[str, int]:
+        """Move the backend onto a new store version (DESIGN.md §13).
+
+        The incremental contract rides on :meth:`KernelPlanner.rebind`:
+        a same-shape content swap with a known touched-row set keeps
+        every cached :class:`ExecutionPlan` and refreshes only the
+        touched bitplane rows; a shape change drops plans and planes.
+        Mesh residency (the per-mesh sharded db copies) is evicted
+        either way and rebuilds lazily on the next on-mesh batch —
+        sharded arrays are values, so a batch already holding the old
+        residency keeps answering against it. Returns the planner's
+        counter deltas plus ``mesh_states_dropped``."""
+        counters = self.planner.rebind(store, touched_rows=touched_rows)
+        self.store = store
+        counters["mesh_states_dropped"] = len(self._mesh_db)
+        self._mesh_db.clear()
+        return counters
 
     # -------------------------------------------------------------- autotune
     def autotune_step(self, max_cells: int = 1) -> int:
@@ -333,6 +358,7 @@ class ShardedBackend:
         plan: Optional[ExecutionPlan],
         state: Optional[dict],
         routed: Queries,
+        n_host: Optional[int] = None,
     ) -> bool:
         """A handed-in plan is only reusable if the mesh residency it was
         built for still holds (plans carry no executor on-mesh) AND it
@@ -352,20 +378,42 @@ class ShardedBackend:
         k_plan = dict(plan.blocks).get("k_max")
         if k_plan and int(routed.payload.shape[1]) % int(k_plan):
             return False
-        n_eff = state["n_pad"] // state["rshards"] if on_mesh else self.store.n
+        n_eff = (
+            state["n_pad"] // state["rshards"] if on_mesh
+            else (n_host if n_host is not None else self.store.n)
+        )
         return plan.n == n_eff
 
     # ------------------------------------------------------------ execution
+    def _pinned_operand(
+        self, plan: ExecutionPlan, store: RecordStore
+    ) -> jnp.ndarray:
+        """The kernel operand for a *pinned* snapshot (DESIGN.md §13):
+        its packed words, or its bitplanes for the parity path (memoized
+        per snapshot object — the double buffer has at most one stale
+        snapshot in flight)."""
+        if plan.path != "parity":
+            return store.packed
+        hit = self._pinned_planes
+        if hit is None or hit[0] != id(store):
+            self._pinned_planes = (id(store), store.bitplanes())
+        return self._pinned_planes[1]
+
     def _answer_mask_server(
         self,
         masks_s: jnp.ndarray,
         routed: Queries,
         plan: Optional[ExecutionPlan],
         scheme: Optional[object],
+        store: Optional[RecordStore] = None,
     ) -> Tuple[jnp.ndarray, ExecutionPlan]:
-        """One server's [B, n] masks -> [B, W] packed partial answer."""
+        """One server's [B, n] masks -> [B, W] packed partial answer.
+
+        ``store`` pins the snapshot the answer must be computed against
+        (None: the backend's current store)."""
         state = self._mesh_state()
-        if not self._plan_matches(plan, state, routed):
+        n_host = store.n if store is not None else None
+        if not self._plan_matches(plan, state, routed, n_host):
             plan = self.planner.plan(
                 routed, int(masks_s.shape[0]), state, scheme=scheme,
                 k_max=getattr(routed, "k_max", None),
@@ -373,6 +421,13 @@ class ShardedBackend:
         self.path_counts[plan.family] += 1
 
         if state is None:  # single host: the plan carries the executor
+            if store is not None and store is not self.planner.store:
+                # snapshot-pinned: a delta landed after this batch
+                # planned; answer against the pinned version's operand,
+                # not the planner's current one
+                return plan(
+                    masks_s, operand=self._pinned_operand(plan, store)
+                ), plan
             return plan(masks_s), plan
 
         pad = state["n_pad"] - self.store.n
@@ -384,12 +439,15 @@ class ShardedBackend:
         )
         return self._mask_fn(state, qaxes, plan)(operand, masks_s), plan
 
-    def _answer_index_server(self, reqs_s: jnp.ndarray) -> jnp.ndarray:
+    def _answer_index_server(
+        self, reqs_s: jnp.ndarray, store: Optional[RecordStore] = None
+    ) -> jnp.ndarray:
         """One server's [B, k] index requests -> [B, k, W] records."""
         self.path_counts["direct"] += 1
         state = self._mesh_state()
         if state is None:
-            return jnp.take(self.store.packed, reqs_s, axis=0)
+            pinned = store if store is not None else self.store
+            return jnp.take(pinned.packed, reqs_s, axis=0)
         # clamp to the REAL record range: the db is zero-padded to n_pad and
         # the lookup's own clamp is against n_pad, which would make an
         # out-of-range id return the zero pad record on-mesh only
@@ -409,14 +467,20 @@ class ShardedBackend:
         *,
         plan: Optional[ExecutionPlan] = None,
         scheme: Optional[object] = None,
+        store: Optional[RecordStore] = None,
     ) -> jnp.ndarray:
         """Answer every contacted server, tracking per-replica latency.
 
         ``plan`` (from :meth:`prepare`) skips planning on the hot path —
         the double-buffered pipeline prepares batch k+1 while batch k
-        runs here. The latency EMA is fed for **every** scheme's servers
-        (see the module docstring: observation is scheme-agnostic, only
-        Subset-PIR consumes the ranking).
+        runs here. ``store`` pins the snapshot version the batch must be
+        answered against (DESIGN.md §13): when an ingest swapped the
+        backend's store between this batch's plan and its execution, the
+        answer still comes from the pinned snapshot, bit-identically —
+        single-host; on-mesh the residency swap is the consistency
+        boundary instead. The latency EMA is fed for **every** scheme's
+        servers (see the module docstring: observation is
+        scheme-agnostic, only Subset-PIR consumes the ranking).
 
         Returns stacked responses: [d_eff, B, W] (mask) or
         [d_eff, B, k, W] (index), ordered like ``routed.servers``.
@@ -426,10 +490,10 @@ class ShardedBackend:
             t0 = time.perf_counter()
             if routed.kind == "mask":
                 r, plan = self._answer_mask_server(
-                    routed.payload[pos], routed, plan, scheme
+                    routed.payload[pos], routed, plan, scheme, store
                 )
             else:
-                r = self._answer_index_server(routed.payload[pos])
+                r = self._answer_index_server(routed.payload[pos], store)
             r.block_until_ready()
             self.observe_latency(
                 sid,

@@ -3,7 +3,7 @@
 door to the per-scheme wire internals, and the execution-backend layer
 is the only door to the kernel internals.
 
-Three passes:
+Six passes:
 
 1. **Protocol boundary** — no library module outside ``repro.core``
    (i.e. under src/repro but not src/repro/core), and no benchmark or
@@ -18,8 +18,9 @@ Three passes:
    execution-backend layer (DESIGN.md §Execution backends): no module
    outside ``repro.kernels`` may import the raw kernel modules
    (``repro.kernels.gather_xor`` / ``xor_fold`` / ``parity_matmul`` /
-   ``fused``) or pull ``gather_xor``/``xor_fold``/``parity_matmul``/
-   ``fused_gather_fold``/``fused_multi_gather_fold`` from the package.
+   ``fused`` / ``scatter``) or pull ``gather_xor``/``xor_fold``/
+   ``parity_matmul``/``fused_gather_fold``/``fused_multi_gather_fold``/
+   ``scatter_rows`` from the package.
    Kernel choice flows through
    ``repro.kernels.backend`` (ExecutionPlan/KernelPlanner) or the
    ``repro.kernels.ops`` wrappers; the ``ref`` oracles and
@@ -32,7 +33,20 @@ Three passes:
    per-scheme wire internals. Load generation drives the public
    pipeline; if the harness needs a kernel- or wire-level knob, that
    knob belongs on the pipeline's API, not in the harness.
-4. **__all__ consistency** — every ``repro.*`` module that declares
+4. **Live-store boundary** — the serving layer consumes *snapshots*;
+   it never mutates a store directly (DESIGN.md §13). Within
+   ``repro.serve`` only ``engine.py`` — the one module that owns the
+   ingest path — may import ``repro.db.live`` or pull
+   ``Delta``/``VersionedStore``/``rebuild`` from ``repro.db``. Every
+   other serve module (scheduler, cache, frontend, sharded) sees
+   frozen ``RecordStore`` snapshots only, so snapshot consistency is
+   structural: nothing outside the engine can even name a writer.
+5. **Snapshot immutability** — no module outside ``repro.db`` may
+   *assign* to a store's ``.packed`` / ``.record_bits`` attributes
+   (``x.packed = ...``, augmented or chained included). Pinning a
+   snapshot is just holding the object (engine docstring); that only
+   works if nobody pokes its fields. tests/ are exempt as usual.
+6. **__all__ consistency** — every ``repro.*`` module that declares
    ``__all__`` must actually define each listed name, with no
    duplicates.
 
@@ -57,14 +71,24 @@ INTERNAL = {"chor", "sparse", "direct", "subset"}
 INTERNAL_MODULES = {f"repro.core.{m}" for m in INTERNAL}
 
 # the raw kernel modules fenced behind the execution-backend layer
-KERNEL_INTERNAL = {"gather_xor", "xor_fold", "parity_matmul", "fused"}
+KERNEL_INTERNAL = {"gather_xor", "xor_fold", "parity_matmul", "fused",
+                   "scatter"}
 KERNEL_INTERNAL_MODULES = {f"repro.kernels.{m}" for m in KERNEL_INTERNAL}
 # names that must not be pulled from the repro.kernels package either:
 # the kernel functions AND the submodules themselves (`from repro.kernels
 # import fused` is the same breach as `import repro.kernels.fused`)
 KERNEL_INTERNAL_NAMES = KERNEL_INTERNAL | {
-    "fused_gather_fold", "fused_multi_gather_fold"
+    "fused_gather_fold", "fused_multi_gather_fold", "scatter_rows"
 }
+
+# the writer types fenced behind the engine's ingest path: every serve
+# module except engine.py sees frozen snapshots only
+LIVE_INTERNAL_MODULES = {"repro.db.live"}
+LIVE_INTERNAL_NAMES = {"live", "Delta", "VersionedStore", "rebuild"}
+
+# store fields nobody outside repro.db may assign to (snapshot pinning
+# relies on the packed words being frozen)
+STORE_FROZEN_ATTRS = {"packed", "record_bits"}
 
 SKIP_DIRS = {".git", "__pycache__", ".pytest_cache"}
 
@@ -199,6 +223,62 @@ def check_fleet_boundary() -> List[str]:
     return errors
 
 
+def check_live_boundary() -> List[str]:
+    """Serve consumes snapshots; only the engine may name the writer."""
+    errors = []
+    scope = SRC / "repro" / "serve"
+    if not scope.is_dir():
+        return errors
+    for path in iter_py(scope):
+        if path.name == "engine.py":
+            continue  # the one ingest door (DESIGN.md §13)
+        tree = ast.parse(path.read_text(encoding="utf-8"))
+        parts = list(path.relative_to(SRC).with_suffix("").parts)
+        package = ".".join(parts[:-1])
+        for mod in _violations_in(
+            tree, package, LIVE_INTERNAL_MODULES, "repro.db",
+            LIVE_INTERNAL_NAMES,
+        ):
+            errors.append(
+                f"{path.relative_to(ROOT)}: imports {mod!r} — serve "
+                "consumes frozen snapshots; store mutation flows through "
+                "ServingPipeline.ingest (repro.serve.engine) only"
+            )
+    return errors
+
+
+def check_store_immutability() -> List[str]:
+    """No assignment to a store's packed words outside repro.db."""
+    errors = []
+    db_pkg = SRC / "repro" / "db"
+    scopes = [SRC / "repro", ROOT / "benchmarks", ROOT / "examples"]
+    for scope in scopes:
+        if not scope.is_dir():
+            continue
+        for path in iter_py(scope):
+            if db_pkg in path.parents:
+                continue  # the store owns its own fields
+            tree = ast.parse(path.read_text(encoding="utf-8"))
+            for node in ast.walk(tree):
+                targets = []
+                if isinstance(node, ast.Assign):
+                    targets = node.targets
+                elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                    targets = [node.target]
+                for tgt in targets:
+                    if (
+                        isinstance(tgt, ast.Attribute)
+                        and tgt.attr in STORE_FROZEN_ATTRS
+                    ):
+                        errors.append(
+                            f"{path.relative_to(ROOT)}:{node.lineno}: "
+                            f"assigns '.{tgt.attr}' — store words are "
+                            "frozen outside repro.db; go through "
+                            "VersionedStore deltas"
+                        )
+    return errors
+
+
 def check_all_consistency() -> List[str]:
     errors = []
     for path in iter_py(SRC / "repro"):
@@ -236,6 +316,8 @@ def main() -> int:
         check_protocol_boundary()
         + check_kernel_boundary()
         + check_fleet_boundary()
+        + check_live_boundary()
+        + check_store_immutability()
         + check_all_consistency()
     )
     for err in errors:
