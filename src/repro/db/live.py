@@ -177,6 +177,16 @@ class VersionedStore:
     holding the object, so retention only affects by-number access).
     ``backend`` picks the write-kernel registry entry
     (pallas / ref / auto) for delta application.
+
+    **Compaction** (:meth:`compact`) rebases the store onto the current
+    head: the head becomes the new frozen base, the delta log empties,
+    and replay cost on :meth:`snapshot` resets to zero. Versions older
+    than the new base become unreachable *by number* — in-flight readers
+    that pinned a snapshot object are unaffected (the buffers are
+    immutable), which is exactly the serve layer's pinning contract.
+    ``shard_versions`` are absolute version numbers and survive the
+    rebase untouched, so distributed invalidation keyed on
+    :meth:`shards_touched_since` keeps working across a compaction.
     """
 
     def __init__(
@@ -195,6 +205,9 @@ class VersionedStore:
         self._retain = max(1, int(retain))
         self._log: List[Delta] = []
         self._version = 0
+        # compaction rebases `base` onto a later head; log entry i then
+        # corresponds to version `_base_version + i + 1`
+        self._base_version = 0
         self._heads: Dict[int, RecordStore] = {0: base}
         self._head = base
         #: per-shard last-touched version (the invalidation key)
@@ -206,12 +219,26 @@ class VersionedStore:
             "rows_updated": 0,
             "rows_deleted": 0,
             "snapshot_rebuilds": 0,
+            "deltas_replayed": 0,
+            "compactions": 0,
+            "compacted_deltas": 0,
         }
 
     # ---------------------------------------------------------- accessors
     @property
     def version(self) -> int:
         return self._version
+
+    @property
+    def base_version(self) -> int:
+        """The version the frozen base sits at (0 until a compaction)."""
+        return self._base_version
+
+    @property
+    def log_depth(self) -> int:
+        """Deltas currently in the log — the replay cost an evicted
+        ``snapshot(v)`` can pay, and what :meth:`compact` resets."""
+        return len(self._log)
 
     @property
     def n(self) -> int:
@@ -290,7 +317,8 @@ class VersionedStore:
             # retention: keep the base and the last `retain` heads
             for v in [
                 v for v in self._heads
-                if v and v <= self._version - self._retain
+                if v != self._base_version
+                and v <= self._version - self._retain
             ]:
                 del self._heads[v]
             return self._version
@@ -301,7 +329,12 @@ class VersionedStore:
 
         Bit-identical to :func:`rebuild`\\ (base, log[:version]) — from a
         retained head for recent versions, by host replay for evicted
-        ones (counted in ``metrics["snapshot_rebuilds"]``)."""
+        ones (counted in ``metrics["snapshot_rebuilds"]``; replay seeds
+        from the *nearest* retained head at or below ``version``, never
+        the full log, and ``metrics["deltas_replayed"]`` counts exactly
+        how many deltas that replay applied). Versions older than the
+        compaction base are unreachable by number (readers that pinned
+        the snapshot object still hold it)."""
         with self._lock:
             if version is None or version == self._version:
                 return self._head
@@ -309,12 +342,68 @@ class VersionedStore:
                 raise ValueError(
                     f"version {version} out of range [0, {self._version}]"
                 )
+            if version < self._base_version:
+                raise ValueError(
+                    f"version {version} predates the compaction base "
+                    f"{self._base_version} (log rebased away)"
+                )
             hit = self._heads.get(version)
             if hit is not None:
                 return hit
-            log = list(self._log[:version])
+            # seed from the nearest retained head below `version` (the
+            # base-version head is always retained, so max() is safe)
+            seed_v = max(v for v in self._heads if v < version)
+            seed = self._heads[seed_v]
+            log = list(
+                self._log[seed_v - self._base_version:
+                          version - self._base_version]
+            )
         self.metrics["snapshot_rebuilds"] += 1
-        return rebuild(self.base, log)
+        self.metrics["deltas_replayed"] += len(log)
+        return rebuild(seed, log)
+
+    # --------------------------------------------------------- compaction
+    def compact(self, *, check: bool = True) -> int:
+        """Rebase onto the current head: head becomes the new frozen
+        base, the delta log empties. Returns how many deltas were
+        compacted away (0 when the log is already empty or a concurrent
+        ingest raced the oracle check — callers retry on the next idle
+        tick).
+
+        ``check=True`` (the default, and what the serve layer's
+        idle-slot compaction uses) replays the log through the host
+        oracle and asserts the result bit-identical to the head before
+        installing it — a compaction can never silently corrupt the
+        base. The oracle replay runs *outside* the store lock so writes
+        never block on it.
+        """
+        with self._lock:
+            if not self._log:
+                return 0
+            base, log = self.base, list(self._log)
+            head, ver = self._head, self._version
+        if check:
+            oracle = rebuild(base, log)
+            if oracle.record_bits != head.record_bits or not np.array_equal(
+                np.asarray(oracle.packed), np.asarray(head.packed)
+            ):
+                raise RuntimeError(
+                    "compaction oracle mismatch: rebuild(base, log) is "
+                    "not bit-identical to the head — refusing to rebase"
+                )
+        with self._lock:
+            if self._version != ver:
+                return 0  # a write landed mid-check; retry next idle slot
+            self.base = head
+            self._base_version = ver
+            self._log = []
+            self._heads = {
+                v: h for v, h in self._heads.items() if v >= ver
+            }
+            self._heads[ver] = head
+            self.metrics["compactions"] += 1
+            self.metrics["compacted_deltas"] += len(log)
+            return len(log)
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return (

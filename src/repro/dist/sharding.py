@@ -42,6 +42,7 @@ __all__ = [
     "axis_size",
     "logical_to_spec",
     "constrain",
+    "touched_record_blocks",
 ]
 
 
@@ -202,3 +203,34 @@ def constrain(x: jax.Array, *logical) -> jax.Array:
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(mesh, P(*new))
     )
+
+
+# --------------------------------------------------------------------------
+# Device-shard geometry helpers (touched-shard invalidation, DESIGN.md §13)
+# --------------------------------------------------------------------------
+def touched_record_blocks(
+    rows, n_pad: int, rshards: int
+) -> Tuple[int, ...]:
+    """Which contiguous device blocks a touched-row set lands in.
+
+    A records-sharded mesh array splits its padded row dim into
+    ``rshards`` equal contiguous blocks of ``n_pad // rshards`` rows
+    (NamedSharding block layout). Given the record indices a delta
+    touched, return the sorted block ids whose device buffers must be
+    rewritten — every other block's buffer can be reused by identity.
+    Pure host math: no mesh, no jax arrays, so the serve layer can make
+    its reuse decision before touching any device state.
+    """
+    if rshards < 1 or n_pad % rshards:
+        raise ValueError(
+            f"n_pad={n_pad} not divisible into rshards={rshards} blocks"
+        )
+    block = n_pad // rshards
+    seen = {int(r) // block for r in rows}
+    bad = [b for b in seen if b < 0 or b >= rshards]
+    if bad:
+        raise IndexError(
+            f"touched rows fall outside the padded store "
+            f"(blocks {sorted(bad)} of {rshards})"
+        )
+    return tuple(sorted(seen))

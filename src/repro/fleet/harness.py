@@ -61,6 +61,9 @@ class FleetScenario:
     ingest_appends: int = 0
     ingest_updates: int = 0
     ingest_deletes: int = 0
+    #: idle-slot delta-log compaction threshold for the frontend
+    #: (DESIGN.md §13); 0 = compaction off
+    compact_log_depth: int = 0
 
     def __post_init__(self):
         if self.duration_s <= 0:
@@ -81,6 +84,10 @@ class FleetScenario:
             raise ValueError(
                 "write-heavy scenario needs at least one of ingest_appends/"
                 "ingest_updates/ingest_deletes > 0"
+            )
+        if self.compact_log_depth < 0:
+            raise ValueError(
+                f"need compact_log_depth >= 0, got {self.compact_log_depth}"
             )
 
 
@@ -281,6 +288,7 @@ def run_scenario(
         ingest_workers=ingest_workers,
         queue_limit=queue_limit,
         shed_policy=shed_policy,
+        compact_log_depth=scenario.compact_log_depth or None,
     )
     with frontend:
         return FleetHarness(frontend, population, scenario).run()

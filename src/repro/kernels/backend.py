@@ -67,7 +67,7 @@ import json
 import threading
 import time
 import zlib
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -312,6 +312,14 @@ class AutotuneTable:
     :meth:`update` (and therefore :func:`load_autotune`) drops entries
     fingerprinted for a different device instead of merging them; the
     running count lands in :attr:`dropped` and is returned per call.
+
+    Entries measured against a concrete store additionally carry a
+    ``store_shape`` stamp (``[n, words]`` at measurement time): a dumped
+    ``--autotune-file`` table survives a same-shape restart of a live
+    store, while entries stamped for a *different* shape are dropped and
+    counted by :meth:`update` exactly like foreign devices — a live
+    store that appended past its dump would otherwise warm-start from
+    cells whose timings describe a database it no longer is.
     """
 
     VERSION = 2
@@ -338,10 +346,14 @@ class AutotuneTable:
         blocks: Optional[Dict[str, Any]] = None,
         us: Optional[Dict[str, float]] = None,
         device: Optional[Dict[str, str]] = None,
+        store_shape: Optional[Sequence[int]] = None,
     ) -> None:
         """Record a decision. ``device=None`` stamps the local
         fingerprint (the normal path for fresh measurements);
-        deserialization passes the dumped fingerprint through."""
+        deserialization passes the dumped fingerprint through.
+        ``store_shape`` is the ``(n, words)`` the measurement ran
+        against (None for shape-agnostic entries, e.g. hand-built
+        tables)."""
         self._entries[key] = {
             "path": path,
             "impl": impl,
@@ -350,6 +362,10 @@ class AutotuneTable:
             "us": dict(us or {}),
             "device": dict(device) if device is not None
             else device_fingerprint(),
+            "store_shape": (
+                [int(x) for x in store_shape]
+                if store_shape is not None else None
+            ),
         }
 
     def items(self):
@@ -394,6 +410,7 @@ class AutotuneTable:
                 device={
                     k: str(v) for k, v in (e.get("device") or {}).items()
                 },
+                store_shape=e.get("store_shape"),
             )
         return table
 
@@ -410,17 +427,32 @@ class AutotuneTable:
         with open(path) as f:
             return cls.from_json(f.read())
 
-    def update(self, other: "AutotuneTable") -> int:
+    def update(
+        self,
+        other: "AutotuneTable",
+        *,
+        store_shape: Optional[Sequence[int]] = None,
+    ) -> int:
         """Merge ``other``'s entries measured on *this* device; drop the
-        rest. Returns the number dropped by this call (also accumulated
-        in :attr:`dropped`)."""
+        rest. With ``store_shape=(n, words)``, entries stamped for a
+        *different* shape are dropped too (unstamped entries pass on the
+        device check alone — old dumps stay loadable). Returns the
+        number dropped by this call (also accumulated in
+        :attr:`dropped`)."""
         local = device_fingerprint()
+        want = (
+            [int(x) for x in store_shape]
+            if store_shape is not None else None
+        )
         dropped = 0
         for key, entry in other._entries.items():
-            if entry.get("device") == local:
-                self._entries[key] = entry
-            else:
+            stamp = entry.get("store_shape")
+            if entry.get("device") != local or (
+                want is not None and stamp is not None and stamp != want
+            ):
                 dropped += 1
+                continue
+            self._entries[key] = entry
         self.dropped += dropped
         return dropped
 
@@ -433,12 +465,19 @@ def autotune_table() -> AutotuneTable:
     return _PROCESS_TABLE
 
 
-def load_autotune(path: str, table: Optional[AutotuneTable] = None) -> AutotuneTable:
+def load_autotune(
+    path: str,
+    table: Optional[AutotuneTable] = None,
+    *,
+    store_shape: Optional[Sequence[int]] = None,
+) -> AutotuneTable:
     """Merge a dumped JSON table into ``table`` (default: the process
     table); returns the merged table. Entries fingerprinted for a
-    different device are dropped and counted (``table.dropped``)."""
+    different device — or, when ``store_shape`` is given, stamped for a
+    different store shape — are dropped and counted
+    (``table.dropped``)."""
     table = table if table is not None else _PROCESS_TABLE
-    table.update(AutotuneTable.load(path))
+    table.update(AutotuneTable.load(path), store_shape=store_shape)
     return table
 
 
@@ -788,11 +827,12 @@ class KernelPlanner:
         cands = self._candidates(cell)
         if not cands:
             return
+        shape = (self.store.n, self.store.words)
         if len(cands) == 1:
             c = cands[0]
             self.table.put(
                 key, c.path, impl=c.impl, blocks=dict(c.blocks),
-                source="only",
+                source="only", store_shape=shape,
             )
         else:
             payload = self._bench_payload(key, cell)
@@ -809,6 +849,7 @@ class KernelPlanner:
             self.table.put(
                 key, winner.path, impl=winner.impl,
                 blocks=dict(winner.blocks), source="measured", us=us,
+                store_shape=shape,
             )
         with self._lock:
             # cached model-prior plans for this cell are stale now
@@ -1117,19 +1158,24 @@ def scatter_update(
     backend: str = "auto",
     table: Optional[AutotuneTable] = None,
     measure: Optional[Callable[..., float]] = None,
+    family: str = "scatter",
 ) -> jnp.ndarray:
     """Apply a batch of packed-row updates on device: the delta-ingest
     write primitive behind :meth:`repro.db.live.VersionedStore.ingest`.
 
-    db: [n, W] uint32; rows: [m] int (unique — ``Delta`` dedups); vals:
-    [m, W] uint32 -> a new [n, W] buffer with ``out[rows[i]] = vals[i]``.
+    db: [n, W]; rows: [m] int (unique — ``Delta`` dedups); vals: [m, W]
+    (cast to ``db.dtype``) -> a new [n, W] buffer with
+    ``out[rows[i]] = vals[i]``.
 
     Kernel choice is raced through the execution-backend registry like
     the read paths: under ``auto`` resolving to a kernel impl, the Pallas
     scatter kernel races the jnp ``.at[].set`` oracle once per
     (update-bucket, n, W) cell and the winner lands in the autotune table
-    (pseudo-scheme ``"_ingest"``, family ``"scatter"`` — same JSON dump,
-    same device-fingerprint trust rule). Unlike ``plan()`` this *does*
+    (pseudo-scheme ``"_ingest"``, family ``family`` — ``"scatter"`` for
+    whole-store ingest, ``"scatter_shard"`` for the sharded serve layer's
+    per-shard device refreshes, which run against shard-sized buffers and
+    must not clobber the whole-store cells; same JSON dump, same
+    device-fingerprint trust rule). Unlike ``plan()`` this *does*
     measure inline on a cold cell: ingest is the write path, not the
     request path, so a one-off microbenchmark stalls no reader. The
     update count is padded to its power-of-two bucket by duplicating the
@@ -1143,7 +1189,7 @@ def scatter_update(
     n, w = int(db.shape[0]), int(db.shape[1])
     bucket = 1 << max(0, int(m - 1).bit_length())
     rows_j = jnp.asarray(rows, jnp.int32)
-    vals_j = jnp.asarray(vals, jnp.uint32)
+    vals_j = jnp.asarray(vals, db.dtype)
     pad = bucket - m
     if pad:
         rows_j = jnp.concatenate(
@@ -1171,7 +1217,7 @@ def scatter_update(
 
     table = table if table is not None else autotune_table()
     measure = measure if measure is not None else _measure_us
-    key: Key = (_INGEST_SCHEME, bucket, impl, n, w, "scatter")
+    key: Key = (_INGEST_SCHEME, bucket, impl, n, w, family)
     hit = table.get(key)
     if hit is not None and (
         hit.get("device") not in (None, device_fingerprint())
@@ -1186,7 +1232,7 @@ def scatter_update(
         winner = min(us, key=us.get)
         table.put(
             key, "scatter", impl=winner.split("/", 1)[1],
-            source="measured", us=us,
+            source="measured", us=us, store_shape=(n, w),
         )
         hit = table.get(key)
     return candidates[f"scatter/{hit['impl']}"](db, rows_j, vals_j)

@@ -54,13 +54,15 @@ def scatter_rows_ref(db: jnp.ndarray, rows: jnp.ndarray,
                      vals: jnp.ndarray) -> jnp.ndarray:
     """Row scatter (the delta-ingest write path): out[rows[i]] = vals[i].
 
-    db: [n, W] uint32; rows: [m] int; vals: [m, W] uint32 -> [n, W].
+    db: [n, W]; rows: [m] int; vals: [m, W] (cast to db.dtype) -> [n, W].
+    Dtype-generic: uint32 packed words on the ingest path, uint8
+    bitplanes when the sharded serve layer refreshes parity shards.
     Duplicate-row ordering is whatever XLA's scatter does — callers
     (``repro.db.live.Delta``) dedup rows before reaching any impl, so the
     Pallas kernel's last-write-wins and this oracle agree everywhere the
     contract admits.
     """
-    return db.at[jnp.asarray(rows, jnp.int32)].set(vals.astype(jnp.uint32))
+    return db.at[jnp.asarray(rows, jnp.int32)].set(vals.astype(db.dtype))
 
 
 def flash_attention_ref(q, k, v, causal=True, window=None):

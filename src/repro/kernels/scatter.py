@@ -70,10 +70,13 @@ def scatter_rows(
     block_n: int = DEFAULT_BLOCK_N,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """db: [n, W] uint32; rows: [m] int; vals: [m, W] uint32 -> [n, W].
+    """db: [n, W]; rows: [m] int; vals: [m, W] (cast to db.dtype) -> [n, W].
 
     Functional row scatter: returns a new buffer equal to ``db`` with
     ``out[rows[i]] = vals[i]`` applied in index order (last write wins).
+    Dtype-generic over the scattered element type (uint32 packed words
+    on the ingest path, uint8 bitplanes on the sharded serve layer's
+    per-shard parity refresh).
     """
     n, w = db.shape
     m = rows.shape[0]
@@ -97,7 +100,7 @@ def scatter_rows(
     out = pl.pallas_call(
         functools.partial(_kernel, bn=bn),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((n + n_pad, w), jnp.uint32),
+        out_shape=jax.ShapeDtypeStruct((n + n_pad, w), db.dtype),
         interpret=interpret,
-    )(rows.astype(jnp.int32), vals.astype(jnp.uint32), db_p)
+    )(rows.astype(jnp.int32), vals.astype(db.dtype), db_p)
     return out[:n]

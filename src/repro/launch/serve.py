@@ -71,6 +71,11 @@ def build_args() -> argparse.ArgumentParser:
                          "worker's idle slot); 0 = frozen store")
     ap.add_argument("--ingest-rows", type=int, default=64,
                     help="records appended per ingest delta")
+    ap.add_argument("--compact-depth", type=int, default=0,
+                    help="rebase the live store's delta log onto a new "
+                         "frozen base in the flush worker's idle slot "
+                         "once it passes this depth (async frontend, "
+                         "DESIGN.md §13); 0 = compaction off")
     ap.add_argument("--backend", default="auto",
                     choices=sorted(registered_backends()),
                     help="execution backend (repro.kernels.backend "
@@ -180,6 +185,7 @@ def run_async(args, engine: ServingPipeline) -> None:
     with AsyncFrontend(
         engine, ingest_workers=args.ingest_workers,
         queue_limit=args.queue_limit, shed_policy="block",
+        compact_log_depth=args.compact_depth or None,
     ) as fe:
         t_start = time.perf_counter()
 
@@ -222,6 +228,14 @@ def run_async(args, engine: ServingPipeline) -> None:
         if args.ingest_every:
             print(f"live store: v{engine.store_version}, n={engine.store.n} "
                   f"({fe.metrics['ingested']} idle-slot ingests)")
+            if args.compact_depth:
+                live = engine.live
+                print(f"compaction: {fe.metrics['compacted']} idle-slot "
+                      f"rebases ({live.metrics['compacted_deltas']} deltas "
+                      f"compacted, log depth now {live.log_depth}, base at "
+                      f"v{live.base_version})")
+            print(f"touched-shard invalidation: "
+                  f"{engine.backend.mesh_metrics}")
         print(f"frontend metrics: {fe.metrics}")
 
 

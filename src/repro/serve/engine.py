@@ -751,8 +751,14 @@ class ServingPipeline:
             same_shape = (
                 snap.n == self.store.n and snap.words == self.store.words
             )
+            # touched_rows always flows through: the planner's rebind
+            # keeps plans only on a same-shape swap (it drops them
+            # itself when n changed), while the backend's mesh residency
+            # can absorb even a pad-fitting append as a touched-shard-
+            # only device refresh (DESIGN.md §13); `live` threads the
+            # shard-version vector into the swap counters
             self.backend.swap_store(
-                snap, touched_rows=touched if same_shape else None
+                snap, touched_rows=touched, live=self.live
             )
             self.store = snap
             self.store_version = ver
@@ -803,6 +809,23 @@ class ServingPipeline:
             self.ingest(delta)
             done += 1
         return done
+
+    def compact_step(self, *, min_log_depth: int = 1) -> int:
+        """Rebase the live store's delta log onto its current head when
+        the log is at least ``min_log_depth`` deep (the idle-slot
+        compaction job, DESIGN.md §13). Returns how many deltas were
+        compacted away (0: frozen store, shallow log, or a write raced
+        the oracle check and the compaction deferred to the next idle
+        tick).
+
+        No phase lock: compaction changes neither the head snapshot nor
+        the version number, so served answers cannot observe it; the
+        single flush worker serializes it against :meth:`ingest_step`,
+        and the store's own lock + oracle-recheck make even an external
+        concurrent writer safe (the rebase simply aborts)."""
+        if self.live is None or self.live.log_depth < max(1, min_log_depth):
+            return 0
+        return self.live.compact()
 
     def step(self) -> Dict[str, np.ndarray]:
         """Serve at most one scheduled batch (≤ max_batch; the rest of the

@@ -46,13 +46,18 @@ front of it (DESIGN.md §Async front):
   following batch can miss the memo and go out as a fresh (fully
   priced, fresh-randomness) query — answers and (ε, δ) accounting are
   unaffected, the hit just materializes one batch later.
-* **Idle ingest + idle prefill + idle autotune**: between flushes the
-  worker first applies one queued store delta
+* **Idle ingest + idle compaction + idle prefill + idle autotune**:
+  between flushes the worker first applies one queued store delta
   (:meth:`~repro.serve.engine.ServingPipeline.ingest_step` — writes
   submitted through :meth:`ingest` ride the same idle machinery as the
   other background jobs, and because idle jobs only run with no batch
   in flight, a delta can never land under a batch mid-execution), then
-  banks precomputed batch randomness into the cross-batch cache
+  — with ``compact_log_depth`` set — rebases the live store's delta
+  log onto a new frozen base once it passes that depth
+  (:meth:`~repro.serve.engine.ServingPipeline.compact_step`,
+  oracle-checked bit-identical to a from-scratch rebuild, never
+  blocking a flush), then banks precomputed batch randomness into the
+  cross-batch cache
   (:meth:`~repro.serve.engine.ServingPipeline.prefill_cache`), moving
   query generation off the serve critical path — and runs one step of
   the execution backend's autotune search
@@ -108,6 +113,7 @@ class AsyncFrontend:
         prefill: bool = True,
         autotune: bool = True,
         double_buffer: bool = True,
+        compact_log_depth: Optional[int] = None,
     ):
         if ingest_workers < 1:
             raise ValueError(f"need ingest_workers >= 1, got {ingest_workers}")
@@ -119,6 +125,11 @@ class AsyncFrontend:
             raise ValueError(
                 f"need drain_timeout_s > 0, got {drain_timeout_s}"
             )
+        if compact_log_depth is not None and compact_log_depth < 1:
+            raise ValueError(
+                f"need compact_log_depth >= 1 (or None to disable), "
+                f"got {compact_log_depth}"
+            )
         self.pipeline = pipeline
         self.ingest_workers = ingest_workers
         self.shed_policy = shed_policy
@@ -127,6 +138,7 @@ class AsyncFrontend:
         self.prefill = prefill
         self.autotune = autotune
         self.double_buffer = double_buffer
+        self.compact_log_depth = compact_log_depth
         self._executor: Optional[ThreadPoolExecutor] = None
 
         self._ingest: "queue.Queue" = queue.Queue(maxsize=queue_limit)
@@ -141,7 +153,7 @@ class AsyncFrontend:
         self._threads: List[threading.Thread] = []
         self._counters = {"accepted": 0, "shed": 0, "served": 0,
                           "failed": 0, "prefilled": 0, "autotuned": 0,
-                          "ingested": 0}
+                          "ingested": 0, "compacted": 0}
 
     # ----------------------------------------------------------- lifecycle
     def start(self) -> "AsyncFrontend":
@@ -517,6 +529,19 @@ class AsyncFrontend:
                         if self.pipeline.pending_deltas == 0:
                             # drain() also waits on the delta backlog
                             self._cv.notify_all()
+                    continue
+            # delta-log compaction rides the same idle machinery, right
+            # after ingest (a just-applied burst is exactly when the log
+            # is deepest) and before prefill: it rebases the live store
+            # onto a new frozen base once the log passes the configured
+            # depth, oracle-checked, never blocking a flush (DESIGN.md
+            # §13). compact_log_depth=None (default) disables it.
+            if idle and self.compact_log_depth is not None:
+                if self.pipeline.compact_step(
+                    min_log_depth=self.compact_log_depth
+                ):
+                    with self._cv:
+                        self._counters["compacted"] += 1
                     continue
             if self.prefill and self.pipeline.cache is not None and idle:
                 if self.pipeline.prefill_cache():

@@ -73,18 +73,25 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.db import packing
 from repro.db.store import RecordStore
 from repro.dist.collectives import sharded_record_lookup, xor_psum
-from repro.dist.sharding import current_mesh, mesh_axis_names
+from repro.dist.sharding import (
+    current_mesh,
+    mesh_axis_names,
+    touched_record_blocks,
+)
 from repro.kernels.backend import (
     AutotuneTable,
     ExecutionPlan,
     KernelPlanner,
     dump_autotune,
     resolve_kernel_impl_alias,
+    scatter_update,
     shard_answer_fn,
 )
 from repro.core.protocol import MultiQueries, Queries
@@ -141,8 +148,12 @@ class ShardedBackend:
         self.autotune_dropped = 0
         if autotune_file is not None:
             try:
+                # entries stamped for a different store shape are dropped
+                # like foreign devices: a live store that changed shape
+                # since the dump must not warm-start from stale timings
                 self.autotune_dropped = self.planner.table.update(
-                    AutotuneTable.load(autotune_file)
+                    AutotuneTable.load(autotune_file),
+                    store_shape=(store.n, store.words),
                 )
             except FileNotFoundError:
                 pass  # cold start; save_autotune() creates it
@@ -151,6 +162,21 @@ class ShardedBackend:
         # per-mesh sharded copies of the db/planes + jitted shard_map fns
         self._mesh_db: Dict[int, dict] = {}
         self._mesh_fns: Dict[tuple, Callable] = {}
+        # the live-store version the mesh residency was last synced to
+        # (swap_store(live=...) advances it) + cumulative counters for
+        # the touched-shard invalidation contract (DESIGN.md §13)
+        self._live_version = 0
+        self.mesh_metrics: Dict[str, int] = {
+            "mesh_states_dropped": 0,
+            "mesh_states_refreshed": 0,
+            "mesh_shards_kept": 0,
+            "mesh_shards_updated": 0,
+        }
+        #: the full counter dict of the most recent swap_store call —
+        #: the public observability surface for per-ingest invalidation
+        #: cost (consumers read this, never the store's shard-version
+        #: vector; tools/check_api.py enforces the fence)
+        self.last_swap: Dict[str, int] = {}
         # (id(store), planes) memo for snapshot-pinned parity answers:
         # a batch that pinned a pre-ingest snapshot may still need that
         # version's bitplanes after the planner moved on
@@ -179,24 +205,155 @@ class ShardedBackend:
 
     # ---------------------------------------------------------- store swaps
     def swap_store(
-        self, store: RecordStore, *, touched_rows=None
+        self,
+        store: RecordStore,
+        *,
+        touched_rows=None,
+        live=None,
+        reshard: str = "auto",
     ) -> Dict[str, int]:
         """Move the backend onto a new store version (DESIGN.md §13).
 
-        The incremental contract rides on :meth:`KernelPlanner.rebind`:
-        a same-shape content swap with a known touched-row set keeps
-        every cached :class:`ExecutionPlan` and refreshes only the
-        touched bitplane rows; a shape change drops plans and planes.
-        Mesh residency (the per-mesh sharded db copies) is evicted
-        either way and rebuilds lazily on the next on-mesh batch —
-        sharded arrays are values, so a batch already holding the old
-        residency keeps answering against it. Returns the planner's
-        counter deltas plus ``mesh_states_dropped``."""
+        The single-host incremental contract rides on
+        :meth:`KernelPlanner.rebind`: a same-shape content swap with a
+        known touched-row set keeps every cached :class:`ExecutionPlan`
+        and refreshes only the touched bitplane rows; a shape change
+        drops plans and planes.
+
+        Mesh residency is where the distributed contract lives. With
+        ``touched_rows`` known and ``reshard="auto"`` (the default),
+        each cached sharded db (and its bitplanes, if materialized) is
+        **refreshed in place, touched device shards only**: untouched
+        shards keep their exact device buffers (asserted by identity in
+        tests/_multidevice_checks.py), their banked plans, their jitted
+        shard_map executors, and the straggler EMAs — the ingest cost
+        becomes O(touched), not O(n). An append that still fits the
+        residency's row padding updates only the tail shards it lands
+        in; a residency it no longer fits (or a words change) is dropped
+        and rebuilds lazily, exactly like ``reshard="full"`` /
+        ``touched_rows=None`` (the old whole-store re-shard, kept as the
+        explicit fallback and the benchmark baseline).
+
+        ``live`` (the :class:`~repro.db.live.VersionedStore` the
+        snapshot came from) is observability only: the counters gain
+        ``store_shards_touched`` / ``store_shards_total`` from its
+        shard-version vector since the last swap — what CI asserts stays
+        below the shard count on a burst.
+
+        Sharded arrays are values, so a batch already holding the old
+        residency keeps answering against it — the refresh builds a new
+        sharded array and in-flight batches stay torn-free. Returns the
+        planner's counter deltas plus the mesh refresh counters (also
+        accumulated in :attr:`mesh_metrics`)."""
+        if reshard not in ("auto", "full"):
+            raise ValueError(f"reshard must be auto|full, got {reshard!r}")
         counters = self.planner.rebind(store, touched_rows=touched_rows)
         self.store = store
-        counters["mesh_states_dropped"] = len(self._mesh_db)
-        self._mesh_db.clear()
+        counters.update(
+            mesh_states_dropped=0, mesh_states_refreshed=0,
+            mesh_shards_kept=0, mesh_shards_updated=0,
+        )
+        if live is not None:
+            counters["store_shards_touched"] = len(
+                live.shards_touched_since(self._live_version)
+            )
+            counters["store_shards_total"] = live.shards
+            self._live_version = live.version
+        incremental = reshard == "auto" and touched_rows is not None
+        if incremental and self._mesh_db:
+            rows_np = np.asarray(touched_rows, np.int64).ravel()
+            vals = (
+                jnp.take(store.packed, jnp.asarray(rows_np), axis=0)
+                if rows_np.size else None
+            )
+            for key in list(self._mesh_db):
+                st = self._refresh_mesh_state(
+                    self._mesh_db[key], store, rows_np, vals
+                )
+                if st is None:
+                    del self._mesh_db[key]
+                    counters["mesh_states_dropped"] += 1
+                else:
+                    counters["mesh_states_refreshed"] += 1
+                    counters["mesh_shards_kept"] += st["kept"]
+                    counters["mesh_shards_updated"] += st["updated"]
+        elif not incremental:
+            counters["mesh_states_dropped"] = len(self._mesh_db)
+            self._mesh_db.clear()
+        for k in self.mesh_metrics:
+            self.mesh_metrics[k] += counters[k]
+        self.last_swap = dict(counters)
         return counters
+
+    def _refresh_mesh_state(
+        self,
+        state: dict,
+        store: RecordStore,
+        rows_np: np.ndarray,
+        vals: Optional[jnp.ndarray],
+    ) -> Optional[Dict[str, int]]:
+        """Rewrite only the touched device shards of one mesh residency.
+
+        Returns ``{"kept", "updated"}`` shard counts, or None when the
+        residency cannot absorb the delta in place (words changed, the
+        store outgrew the row padding, or shards are not all process-
+        addressable) — the caller drops it and the next on-mesh batch
+        re-shards from scratch.
+
+        Mechanics: the sharded db is decomposed into its per-device
+        blocks (``addressable_shards``); a block none of the touched
+        rows fall in contributes its existing device buffer *by
+        identity*, a touched block gets the delta's rows scattered into
+        a fresh buffer on its own device (``scatter_update`` under the
+        ``_ingest``/``scatter_shard`` autotune family), and
+        ``jax.make_array_from_single_device_arrays`` reassembles the
+        sharded value without any cross-device reshuffle. Bitplanes, if
+        this residency materialized them, refresh the same way with the
+        touched rows' fresh planes."""
+        db = state["db"]
+        n_pad, rshards = state["n_pad"], state["rshards"]
+        if int(db.shape[1]) != store.words or store.n > n_pad:
+            return None
+        shards = list(db.addressable_shards)
+        if len(shards) != rshards:
+            return None  # multi-process residency: refresh is per-host
+        block = n_pad // rshards
+        touched = set(touched_record_blocks(rows_np, n_pad, rshards))
+
+        def rebuilt(arr, fresh_rows):
+            datas, kept, updated = [], 0, 0
+            for sh in arr.addressable_shards:
+                start = sh.index[0].start or 0
+                if start // block not in touched:
+                    datas.append(sh.data)  # byte-identical device buffer
+                    kept += 1
+                    continue
+                sel = (rows_np >= start) & (rows_np < start + block)
+                local = jnp.asarray(rows_np[sel] - start, jnp.int32)
+                datas.append(
+                    scatter_update(
+                        jnp.asarray(sh.data), local, fresh_rows[sel],
+                        backend=self.backend_name, family="scatter_shard",
+                    )
+                )
+                updated += 1
+            return (
+                jax.make_array_from_single_device_arrays(
+                    arr.shape, arr.sharding, datas
+                ),
+                kept,
+                updated,
+            )
+
+        if vals is None or not touched:
+            return {"kept": rshards, "updated": 0}
+        state["db"], kept, updated = rebuilt(db, vals)
+        if state["planes"] is not None:
+            fresh = packing.bitplanes_from_packed(
+                vals, dtype=state["planes"].dtype
+            )
+            state["planes"], _, _ = rebuilt(state["planes"], fresh)
+        return {"kept": kept, "updated": updated}
 
     # -------------------------------------------------------------- autotune
     def autotune_step(self, max_cells: int = 1) -> int:

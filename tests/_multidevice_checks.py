@@ -295,6 +295,124 @@ def check_serving_pipeline_sharded():
     print("OK serve_pipeline_sharded")
 
 
+def check_pir_touched_shard_ingest():
+    """Touched-shard-only distributed invalidation (DESIGN.md §13):
+    after an ingest, ``swap_store(snap, touched_rows=..., live=...)``
+    refreshes only the device shards the delta touched — answers stay
+    bit-identical to a from-scratch full re-shard AND to the host replay
+    oracle, for append, a ≥1% update burst, and tombstone deltas, while
+    untouched shards keep their exact device buffers (pointer identity)
+    and, on same-shape deltas, every banked plan."""
+    from repro.core import make_scheme
+    from repro.db import Delta, VersionedStore, make_synthetic_store, rebuild
+    from repro.dist.sharding import touched_record_blocks
+    from repro.serve import SchemeRouter, ShardedBackend
+
+    rules = dict(RULES, records=("data", "model"), queries=None)
+    base = make_synthetic_store(n=250, record_bytes=16, seed=21)  # pads 256
+    rng = np.random.default_rng(33)
+    sch = make_scheme("chor", d=3, d_a=1)
+    router = SchemeRouter(sch)
+
+    live = VersionedStore(base, shards=16)
+    # parity_min_batch forces the MXU path at this batch size so the
+    # mesh bitplanes materialize and their per-shard refresh is proven
+    backend = ShardedBackend(live.snapshot(), parity_min_batch=4)
+    key0 = jax.random.key(40)
+    q0 = jnp.asarray([0, 17, 249, 128], jnp.int32)
+    with mesh_rules(MESH, rules):
+        routed = router.plan(key0, live.n, q0)
+        got = np.asarray(
+            router.finalize(routed, backend.answer_batch(routed))
+        )
+        backend._mesh_planes(backend._mesh_state())  # materialize planes
+    np.testing.assert_array_equal(
+        got, np.asarray(sch.retrieve(key0, live.snapshot(), q0))
+    )
+
+    deltas = [
+        # append fitting the residency's pad: tail block only
+        ("append", Delta.append(
+            rng.integers(0, 256, size=(4, 16), dtype=np.uint8))),
+        # 2% update burst confined to the first two device blocks
+        ("update", Delta.update(
+            [0, 1, 2, 33, 34],
+            rng.integers(0, 256, size=(5, 16), dtype=np.uint8))),
+        # tombstones in blocks 0 and 6
+        ("delete", Delta.delete([3, 200])),
+    ]
+    log = []
+    for kind, delta in deltas:
+        n_before = live.n
+        touched = live.touched_rows(delta, n_before=n_before)
+        live.ingest(delta)
+        log.append(delta)
+        snap = live.snapshot()
+        same_shape = snap.n == n_before
+
+        state = backend._mesh_db[id(MESH)]
+        block = state["n_pad"] // state["rshards"]
+        want_touched = set(touched_record_blocks(
+            np.asarray(touched), state["n_pad"], state["rshards"]
+        ))
+        ptrs = {
+            (sh.index[0].start or 0) // block: sh.data.unsafe_buffer_pointer()
+            for sh in state["db"].addressable_shards
+        }
+        plane_ptrs = {
+            (sh.index[0].start or 0) // block: sh.data.unsafe_buffer_pointer()
+            for sh in state["planes"].addressable_shards
+        }
+
+        counters = backend.swap_store(snap, touched_rows=touched, live=live)
+        assert counters["mesh_states_refreshed"] == 1, (kind, counters)
+        assert counters["mesh_states_dropped"] == 0, (kind, counters)
+        assert counters["mesh_shards_updated"] == len(want_touched), (
+            kind, counters, want_touched
+        )
+        assert counters["mesh_shards_kept"] == 8 - len(want_touched), (
+            kind, counters
+        )
+        assert 0 < counters["store_shards_touched"] < counters[
+            "store_shards_total"
+        ], (kind, counters)
+        if same_shape:  # update/delete: every banked plan survives
+            assert counters["plans_dropped"] == 0, (kind, counters)
+            assert counters["plans_kept"] > 0, (kind, counters)
+
+        # untouched shards keep their device buffers BY IDENTITY
+        state = backend._mesh_db[id(MESH)]
+        for sh in state["db"].addressable_shards:
+            b = (sh.index[0].start or 0) // block
+            if b not in want_touched:
+                assert sh.data.unsafe_buffer_pointer() == ptrs[b], (kind, b)
+        for sh in state["planes"].addressable_shards:
+            b = (sh.index[0].start or 0) // block
+            if b not in want_touched:
+                assert (
+                    sh.data.unsafe_buffer_pointer() == plane_ptrs[b]
+                ), (kind, b)
+
+        # bit-identical: incremental refresh == full re-shard == host oracle
+        key_v = jax.random.key(100 + live.version)
+        q = jnp.asarray([0, 3, 200, snap.n - 1], jnp.int32)
+        with mesh_rules(MESH, rules):
+            routed = router.plan(key_v, snap.n, q)
+            got_inc = np.asarray(
+                router.finalize(routed, backend.answer_batch(routed))
+            )
+            full = ShardedBackend(snap, parity_min_batch=4)
+            got_full = np.asarray(
+                router.finalize(routed, full.answer_batch(routed))
+            )
+        np.testing.assert_array_equal(got_inc, got_full)
+        oracle = rebuild(base, log)
+        np.testing.assert_array_equal(
+            got_inc, np.asarray(sch.retrieve(key_v, oracle, q))
+        )
+    print("OK pir_touched_shard_ingest")
+
+
 def check_xor_psum_and_record_lookup():
     """The GF(2) collectives against their single-device references."""
     from functools import partial
@@ -342,5 +460,6 @@ if __name__ == "__main__":
     check_pir_sharded_serve()
     check_pir_xor_butterfly()
     check_serving_pipeline_sharded()
+    check_pir_touched_shard_ingest()
     check_xor_psum_and_record_lookup()
     print("ALL MULTIDEVICE OK")

@@ -172,6 +172,81 @@ def test_shard_touch_tracking_is_minimal():
     assert live.shard_of(64) == 0 and live.shard_of(66) == 2
 
 
+def test_snapshot_replays_from_nearest_retained_head():
+    """Replay cost pin: an evicted ``snapshot(v)`` seeds from the
+    nearest retained head below ``v`` and replays exactly the gap —
+    after a compaction that head is the rebased base, so the count
+    drops to ``v - base_version``, never the full-from-v0 prefix."""
+    base = make_synthetic_store(32, 8, seed=7)
+    live = VersionedStore(base, shards=4, retain=2, backend="ref")
+    deltas = [Delta.update([i], _raw(1, 8)) for i in range(8)]
+    for d in deltas[:5]:
+        live.ingest(d)
+    # heads {0, 4, 5}: v3 is evicted, nearest head below is the v0 base
+    got = live.snapshot(3)
+    np.testing.assert_array_equal(
+        np.asarray(got.packed), np.asarray(rebuild(base, deltas[:3]).packed)
+    )
+    assert live.metrics["deltas_replayed"] == 3
+    # rebase at v5, ingest to v8 (heads {5, 7, 8}): v6 is evicted and
+    # its nearest retained head is now the v5 base — ONE delta replays,
+    # not six from the original v0 base
+    assert live.compact() == 5
+    assert live.base_version == 5 and live.log_depth == 0
+    for d in deltas[5:]:
+        live.ingest(d)
+    got = live.snapshot(6)
+    np.testing.assert_array_equal(
+        np.asarray(got.packed), np.asarray(rebuild(base, deltas[:6]).packed)
+    )
+    assert live.metrics["deltas_replayed"] == 3 + 1
+    assert live.metrics["snapshot_rebuilds"] == 2
+
+
+def test_compaction_rebases_log_and_preserves_mvcc_contract():
+    """``compact()`` == ``rebuild(base, log)`` (oracle-checked inside),
+    resets the replay log, keeps absolute shard versions, keeps pinned
+    snapshot objects, and makes pre-base versions unreachable by number."""
+    base = make_synthetic_store(48, 8, seed=8)
+    live = VersionedStore(base, shards=8, backend="ref")
+    deltas = [
+        Delta.append(_raw(4, 8)),
+        Delta.update([5, 50], _raw(2, 8)),
+        Delta.delete([0]),
+    ]
+    for d in deltas:
+        live.ingest(d)
+    touched_pre = set(live.shards_touched_since(0))
+    pin = live.snapshot(2)
+    pin_bytes = np.array(np.asarray(pin.packed), copy=True)
+
+    assert live.compact() == 3
+    assert live.metrics["compactions"] == 1
+    assert live.metrics["compacted_deltas"] == 3
+    assert live.version == 3 and live.base_version == 3
+    assert live.log_depth == 0
+    np.testing.assert_array_equal(
+        np.asarray(live.snapshot().packed),
+        np.asarray(rebuild(base, deltas).packed),
+    )
+    # shard versions are absolute: distributed invalidation keyed on
+    # shards_touched_since keeps working across the rebase
+    assert set(live.shards_touched_since(0)) == touched_pre
+    # v2 is unreachable by number, but the pinned object is untouched
+    with pytest.raises(ValueError, match="predates the compaction base"):
+        live.snapshot(2)
+    np.testing.assert_array_equal(np.asarray(pin.packed), pin_bytes)
+    # writes keep flowing with absolute version numbering post-rebase
+    live.ingest(Delta.update([1], _raw(1, 8)))
+    assert live.version == 4 and live.log_depth == 1
+    np.testing.assert_array_equal(
+        np.asarray(live.snapshot(4).packed),
+        np.asarray(rebuild(base, deltas + [live._log[0]]).packed),
+    )
+    assert live.compact() == 1
+    assert live.compact() == 0  # empty log: no-op
+
+
 @pytest.mark.parametrize("backend", sorted(registered_backends()))
 def test_scatter_ingest_matches_host_oracle(backend):
     """Every registered write backend produces bit-identical packed

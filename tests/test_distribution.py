@@ -21,6 +21,7 @@ MARKERS = [
     "OK pir_sharded",
     "OK pir_xor_butterfly",
     "OK serve_pipeline_sharded",
+    "OK pir_touched_shard_ingest",
     "OK xor_collectives",
     "ALL MULTIDEVICE OK",
 ]

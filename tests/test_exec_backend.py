@@ -167,6 +167,60 @@ def test_sharded_backend_autotune_file_foreign_entries_dropped(tmp_path):
     assert len(backend.planner.table) == 0
 
 
+def test_autotune_merge_drops_and_counts_foreign_shapes():
+    """Entries are stamped with the (n, words) they were measured
+    against; update() with a wanted shape keeps same-shape entries,
+    drops-and-counts resized ones exactly like foreign devices, and
+    lets unstamped (pre-stamp) entries pass on the device check alone."""
+    incoming = AutotuneTable()
+    k_same = ("chor", 64, "ref", 128, 2, "mask")
+    k_resized = ("chor", 64, "ref", 256, 2, "mask")
+    k_legacy = ("chor", 32, "ref", 128, 2, "mask")
+    incoming.put(k_same, "fold", impl="ref", source="measured",
+                 store_shape=(128, 2))
+    incoming.put(k_resized, "parity", impl="ref", source="measured",
+                 store_shape=(256, 2))
+    incoming.put(k_legacy, "fold", impl="ref", source="measured")
+    local = AutotuneTable()
+    dropped = local.update(incoming, store_shape=(128, 2))
+    assert dropped == 1 and local.dropped == 1
+    assert local.get(k_same) is not None
+    assert local.get(k_legacy) is not None  # unstamped: back-compat
+    assert local.get(k_resized) is None
+    # the stamp survives the JSON round-trip verbatim
+    back = AutotuneTable.from_json(incoming.to_json())
+    assert back.get(k_same)["store_shape"] == [128, 2]
+    # no wanted shape: device fingerprint alone filters (old behavior)
+    relaxed = AutotuneTable()
+    assert relaxed.update(incoming) == 0
+
+
+def test_sharded_backend_autotune_file_survives_same_shape_restart(tmp_path):
+    """--autotune-file tables survive a same-shape restart verbatim;
+    pointing the same file at a resized store drops the stale entries
+    (their measured winners were shaped by the old store geometry)."""
+    store = make_synthetic_store(128, 8, seed=1)
+    path = str(tmp_path / "stamped.json")
+    backend = ShardedBackend(store, autotune=AutotuneTable(),
+                             autotune_file=path)
+    key = ("chor", 64, "ref", store.n, store.words, "mask")
+    backend.planner.table.put(
+        key, "fold", impl="ref", source="measured",
+        store_shape=(store.n, store.words),
+    )
+    backend.save_autotune()
+    same = ShardedBackend(store, autotune=AutotuneTable(),
+                          autotune_file=path)
+    assert same.autotune_dropped == 0
+    assert same.planner.table.get(key)["path"] == "fold"
+    resized = ShardedBackend(
+        make_synthetic_store(256, 8, seed=1), autotune=AutotuneTable(),
+        autotune_file=path,
+    )
+    assert resized.autotune_dropped == 1
+    assert len(resized.planner.table) == 0
+
+
 # ------------------------------------------------------------ plan decisions
 def _routed(scheme, n, b, key=0):
     router = SchemeRouter(scheme)

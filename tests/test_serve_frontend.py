@@ -399,6 +399,51 @@ def test_cold_cell_serve_never_microbenchmarks_on_request_path():
     assert len(pipe.backend.planner.pending()) == 1  # queued for idle slot
 
 
+def test_idle_slot_compacts_live_store_past_depth():
+    """With ``compact_log_depth`` set, the flush worker's idle slot
+    rebases the live store's delta log onto a new frozen base once it
+    passes the threshold — counted in the "compacted" metric, serving
+    answers unchanged, and never rebased below the threshold."""
+    from repro.db import Delta, VersionedStore
+
+    store = make_synthetic_store(128, 16, seed=9)
+    live = VersionedStore(store, backend="ref")
+    sch = make_scheme("chor", d=2, d_a=1)
+    pipe = ServingPipeline(live, sch)
+    rng = np.random.default_rng(1)
+    with AsyncFrontend(
+        pipe, idle_tick_s=0.001, compact_log_depth=3
+    ) as fe:
+        for _ in range(4):
+            fe.ingest(Delta.append(
+                rng.integers(0, 256, size=(8, 16), dtype=np.uint8)
+            ))
+        deadline = time.monotonic() + 30.0
+        while time.monotonic() < deadline:
+            if fe.metrics["compacted"] >= 1:
+                break
+            time.sleep(0.01)
+        assert fe.metrics["compacted"] >= 1
+        assert live.base_version >= 3 and live.log_depth < 3
+        assert live.metrics["compacted_deltas"] >= 3
+        # serving against the rebased store stays exact
+        fut = fe.submit("a", 140)
+        assert fe.drain(timeout=30.0)
+        np.testing.assert_array_equal(
+            fut.result(timeout=5.0), live.snapshot().record_bytes(140)
+        )
+
+
+def test_compact_log_depth_validates_and_defaults_off():
+    pipe = make_pipe()
+    with pytest.raises(ValueError, match="compact_log_depth"):
+        AsyncFrontend(pipe, compact_log_depth=0)
+    with AsyncFrontend(pipe) as fe:
+        assert fe.compact_log_depth is None
+        time.sleep(0.05)
+        assert fe.metrics["compacted"] == 0  # frozen store: never fires
+
+
 def test_idle_slot_runs_autotune_step_and_counts():
     """Between flushes the worker spends lulls on the autotune search:
     the cold cell left by the first serve gets its measured winner off

@@ -3,7 +3,7 @@
 door to the per-scheme wire internals, and the execution-backend layer
 is the only door to the kernel internals.
 
-Six passes:
+Seven passes:
 
 1. **Protocol boundary** — no library module outside ``repro.core``
    (i.e. under src/repro but not src/repro/core), and no benchmark or
@@ -49,6 +49,14 @@ Six passes:
 6. **__all__ consistency** — every ``repro.*`` module that declares
    ``__all__`` must actually define each listed name, with no
    duplicates.
+7. **Shard-version boundary** — the live store's shard-version
+   internals (``shard_versions`` / ``shards_touched_since``, the
+   distributed-invalidation key, DESIGN.md §13) are read only by
+   ``repro.db`` itself and the sharded serve backend
+   (``repro/serve/sharded.py``). Everything else gets the aggregated
+   swap counters; code that keys on raw shard versions outside those
+   two places would fork the invalidation protocol. tests/ are exempt
+   as usual.
 
 Exit status 0 iff all passes are clean; failures print one per line.
 Run: ``python tools/check_api.py``.
@@ -89,6 +97,10 @@ LIVE_INTERNAL_NAMES = {"live", "Delta", "VersionedStore", "rebuild"}
 # store fields nobody outside repro.db may assign to (snapshot pinning
 # relies on the packed words being frozen)
 STORE_FROZEN_ATTRS = {"packed", "record_bits"}
+
+# the live store's shard-version internals: the distributed-invalidation
+# key, readable only by repro.db and the sharded serve backend
+SHARD_VERSION_INTERNALS = {"shard_versions", "shards_touched_since"}
 
 SKIP_DIRS = {".git", "__pycache__", ".pytest_cache"}
 
@@ -279,6 +291,44 @@ def check_store_immutability() -> List[str]:
     return errors
 
 
+def check_shard_version_boundary() -> List[str]:
+    """Shard-version internals stay inside db/ + serve/sharded.py."""
+    errors = []
+    db_pkg = SRC / "repro" / "db"
+    sharded = SRC / "repro" / "serve" / "sharded.py"
+    scopes = [SRC / "repro", ROOT / "benchmarks", ROOT / "examples"]
+    for scope in scopes:
+        if not scope.is_dir():
+            continue
+        for path in iter_py(scope):
+            if db_pkg in path.parents or path == sharded:
+                continue
+            tree = ast.parse(path.read_text(encoding="utf-8"))
+            rel = path.relative_to(ROOT)
+            for node in ast.walk(tree):
+                names = []
+                if (
+                    isinstance(node, ast.Attribute)
+                    and node.attr in SHARD_VERSION_INTERNALS
+                ):
+                    names = [node.attr]
+                elif isinstance(node, ast.ImportFrom) and (
+                    node.module or ""
+                ).startswith("repro.db"):
+                    names = [
+                        a.name for a in node.names
+                        if a.name in SHARD_VERSION_INTERNALS
+                    ]
+                for name in names:
+                    errors.append(
+                        f"{rel}:{node.lineno}: reads {name!r} — the "
+                        "shard-version vector is the db/serve.sharded "
+                        "invalidation protocol; consume the swap_store "
+                        "counters instead (DESIGN.md §13)"
+                    )
+    return errors
+
+
 def check_all_consistency() -> List[str]:
     errors = []
     for path in iter_py(SRC / "repro"):
@@ -318,6 +368,7 @@ def main() -> int:
         + check_fleet_boundary()
         + check_live_boundary()
         + check_store_immutability()
+        + check_shard_version_boundary()
         + check_all_consistency()
     )
     for err in errors:
